@@ -1,0 +1,84 @@
+"""Render the EXPERIMENTS.md roofline + perf tables from the dry-run JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report [--base benchmarks/dryrun_results.json]
+        [--opt benchmarks/opt_results.json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+PEAK, HBM, ICI = 197e12, 819e9, 50e9
+
+
+def terms(rec):
+    p = rec.get("probe") or {}
+    fl = p.get("flops", rec.get("hlo_flops", 0.0))
+    by = p.get("bytes_adjusted", p.get("bytes", rec.get("hlo_bytes", 0.0)))
+    co = p.get("collective", rec.get("collectives", {}).get("total", 0.0))
+    return fl / PEAK, by / HBM, co / ICI
+
+
+def useful(rec):
+    p = rec.get("probe") or {}
+    fl = p.get("flops", rec.get("hlo_flops", 0.0)) or 1.0
+    return rec.get("model_flops", 0.0) / rec.get("chips", 256) / fl
+
+
+def row(cell, rec):
+    tc, tm, tl = terms(rec)
+    dom = max((tc, "compute"), (tm, "memory"), (tl, "collective"))[1]
+    step = max(tc, tm, tl)
+    frac = tc / step if step else 0.0
+    return (f"| {cell} | {tc*1e3:9.2f} | {tm*1e3:9.2f} | {tl*1e3:9.2f} "
+            f"| {dom} | {useful(rec):6.2f} | {frac:5.1%} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--base", default="benchmarks/dryrun_results.json")
+    ap.add_argument("--opt", default="benchmarks/opt_results.json")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    base = json.load(open(args.base))
+    try:
+        opt = json.load(open(args.opt))
+    except OSError:
+        opt = {}
+
+    print("### Roofline table (baseline, %s-pod, per chip, ms)\n" % args.mesh)
+    print("| cell | t_compute | t_memory | t_collective | bottleneck "
+          "| useful_FLOPs | roofline_frac |")
+    print("|---|---|---|---|---|---|---|")
+    for k in sorted(base):
+        r = base[k]
+        if r.get("mesh") != args.mesh or not r.get("ok"):
+            continue
+        print(row(k.rsplit("|", 1)[0], r))
+
+    if opt:
+        print("\n### Optimized cells (beyond-paper, same accounting)\n")
+        print("| cell | t_compute | t_memory | t_collective | bottleneck "
+              "| useful_FLOPs | roofline_frac |")
+        print("|---|---|---|---|---|---|---|")
+        for k in sorted(opt):
+            r = opt[k]
+            if r.get("mesh") != args.mesh or not r.get("ok"):
+                continue
+            print(row(k.rsplit("|", 1)[0] + " (opt)", r))
+        print("\n### Before/after (dominant-term step time, ms)\n")
+        print("| cell | baseline step | optimized step | speedup |")
+        print("|---|---|---|---|")
+        for k in sorted(opt):
+            if k not in base or opt[k].get("mesh") != args.mesh:
+                continue
+            if not (base[k].get("ok") and opt[k].get("ok")):
+                continue
+            b = max(terms(base[k]))
+            o = max(terms(opt[k]))
+            print(f"| {k.rsplit('|',1)[0]} | {b*1e3:.2f} | {o*1e3:.2f} "
+                  f"| {b/max(o,1e-12):.1f}x |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,459 @@
+"""Benchmark harness — one section per paper table/figure.
+
+CPU-scale proxies of the paper's experiments (real AIME/Qwen3 runs need the
+released checkpoints + GPUs; DESIGN.md §7 records the mapping):
+
+  fig4   oracle-sparsity recall vs block size      (paper Fig. 4)
+  fig5   SeerAttention-R vs Quest vs oracle recall (paper Fig. 5)
+  fig6   block-sparse decode kernel speedup model  (paper Fig. 6)
+  fig7   block-size robustness, gate vs Quest      (paper Fig. 7)
+  fig8   early-layer gate quality (hybrid-dense)   (paper Fig. 8)
+  fig9   threshold vs token-budget selection       (paper Fig. 9)
+  tab1   sparse-decode error accumulation          (paper Tab. 1 proxy)
+  tab2   distillation training cost                (paper Tab. 2)
+  roofline  print the dry-run roofline table       (EXPERIMENTS.md source)
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6] [--fast]
+Output: CSV-ish lines `section,key,value` plus human-readable summaries.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import os
+import time
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.config import GateConfig, TrainConfig, OptimConfig, reduced
+from repro.core import sparsity as sp
+from repro.data.pipeline import DataState, make_batch
+from repro.kernels import ops
+from repro.models import transformer as tf
+from repro.models.common import NEG_INF, decode_attention
+from repro.train import loop as train_loop
+
+FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
+
+
+def emit(section: str, key: str, value) -> None:
+    print(f"{section},{key},{value}")
+
+
+# ---------------------------------------------------------------------------
+# shared fixture: a tiny distilled model (cached per gate block size)
+# ---------------------------------------------------------------------------
+
+_FIXTURES: Dict[Tuple, Tuple] = {}
+
+SEQ = 512
+BATCH = 4
+
+
+def tiny_cfg(block_size: int = 16, num_layers: int = 2, budget: int = 128):
+    cfg = reduced(configs.get("qwen3_0_6b"), num_layers=num_layers)
+    cfg = cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=block_size, d_gate=16, token_budget=budget))
+    return cfg
+
+
+_PRETRAINED: Dict[Tuple, Tuple] = {}
+
+
+def pretrained_base(num_layers: int = 2, steps: Optional[int] = None):
+    """Briefly pretrain the tiny base LM on planted-motif data so its
+    attention develops genuine sparse structure (induction-style copying),
+    making the oracle/gate/Quest comparison paper-meaningful. Returns
+    (params, cfg-independent of gate block size)."""
+    if num_layers in _PRETRAINED:
+        return _PRETRAINED[num_layers]
+    steps = steps or (40 if FAST else 150)
+    cfg = tiny_cfg(16, num_layers)
+    tcfg = TrainConfig(mode="pretrain", seq_len=SEQ, global_batch=BATCH,
+                       steps=steps, checkpoint_every=0, log_every=0,
+                       optim=OptimConfig(lr=3e-3, total_steps=steps,
+                                         warmup_steps=10, weight_decay=0.0))
+    state = train_loop.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    step = jax.jit(train_loop.make_train_step(cfg, tcfg))
+    first = last = None
+    for i in range(steps):
+        batch = make_batch(cfg, BATCH, SEQ, DataState(11, i))
+        state, m = step(state, batch)
+        if i == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+    _PRETRAINED[num_layers] = (state.params, first, last)
+    return _PRETRAINED[num_layers]
+
+
+def distilled_fixture(block_size: int = 16, num_layers: int = 2,
+                      steps: Optional[int] = None):
+    """(cfg, trained TrainState, history, wall_s). Pretrains the tiny base,
+    freezes it, then distills the gate (paper recipe at reduced scale)."""
+    key = (block_size, num_layers)
+    if key in _FIXTURES:
+        return _FIXTURES[key]
+    steps = steps or (30 if FAST else 120)
+    cfg = tiny_cfg(block_size, num_layers)
+    base_params, _, _ = pretrained_base(num_layers)
+    tcfg = TrainConfig(mode="distill", seq_len=SEQ, global_batch=BATCH,
+                       steps=steps, checkpoint_every=0, log_every=0,
+                       optim=OptimConfig(lr=2e-3, total_steps=steps,
+                                         warmup_steps=10))
+    from repro.optim import adamw
+    gate = train_loop.extract_gate(base_params)
+    state = train_loop.TrainState(base_params, gate,
+                                  adamw.init(gate, tcfg.optim),
+                                  jnp.zeros((), jnp.int32))
+    step = jax.jit(train_loop.make_train_step(cfg, tcfg))
+    t0 = time.perf_counter()
+    hist = []
+    for i in range(steps):
+        batch = make_batch(cfg, BATCH, SEQ, DataState(tcfg.seed, i))
+        state, m = step(state, batch)
+        hist.append({k: float(v) for k, v in m.items()})
+    dt = time.perf_counter() - t0
+    _FIXTURES[key] = (cfg, state, hist, dt)
+    return _FIXTURES[key]
+
+
+# ---------------------------------------------------------------------------
+# gate-quality evaluation (recall of true attention block mass)
+# ---------------------------------------------------------------------------
+
+def quest_scores_rows(qr: jnp.ndarray, kr: jnp.ndarray, block_size: int,
+                      share_group: bool) -> jnp.ndarray:
+    """Vectorised Quest upper-bound scores for every query row.
+
+    qr [B,L,H,Dh], kr [B,S,Hkv,Dh] (post-rope) -> [B,Hkv,L,nb] (group-shared)
+    or [B,H,L,nb]. A leading layer-stack dim on both is vmapped over.
+    """
+    if qr.ndim == 5:
+        return jax.vmap(lambda a, b: quest_scores_rows(
+            a, b, block_size, share_group))(qr, kr)
+    b, l, h, dh = qr.shape
+    s, hkv = kr.shape[1], kr.shape[2]
+    g = h // hkv
+    nb = s // block_size
+    kb = kr.reshape(b, nb, block_size, hkv, dh).astype(jnp.float32)
+    kmin, kmax = kb.min(axis=2), kb.max(axis=2)
+    qf = qr.reshape(b, l, hkv, g, dh).astype(jnp.float32)
+    ub = (jnp.einsum("blhgd,bnhd->bhlgn", jnp.maximum(qf, 0), kmax)
+          + jnp.einsum("blhgd,bnhd->bhlgn", jnp.minimum(qf, 0), kmin))
+    if share_group:
+        return jnp.max(ub, axis=3)
+    return ub.transpose(0, 2, 3, 1, 4).reshape(b, h, l, nb)
+
+
+def recall_at(scores: jnp.ndarray, gt: jnp.ndarray, k: int,
+              rows: np.ndarray) -> float:
+    """Mean over (layer,batch,head,row in rows) of GT mass captured by the
+    top-k blocks of ``scores``.  scores/gt: [L?,B,Hkv,Lq,nb]."""
+    sc = scores[..., rows, :]
+    g = gt[..., rows, :]
+    k = min(k, sc.shape[-1])
+    _, idx = jax.lax.top_k(sc, k)
+    got = jnp.take_along_axis(g, idx, axis=-1).sum(-1)
+    return float(jnp.mean(got))
+
+
+def collect_eval(cfg, params, seed: int = 777):
+    batch = make_batch(cfg, BATCH, SEQ, DataState(seed, 0))
+    ex = jax.jit(functools.partial(tf.lm_gate_collect, cfg=cfg))(params, batch)
+    return ex  # glog/gt [L,B,Hkv,Lq,nb], qr/kr [L,B,Lq,H(kv),Dh]
+
+
+def eval_rows(cfg) -> np.ndarray:
+    # rows with >= half the blocks visible: skip the warmup prefix
+    return np.arange(SEQ // 2, SEQ, 8)
+
+
+# ---------------------------------------------------------------------------
+# sections
+# ---------------------------------------------------------------------------
+
+def bench_fig4():
+    """Oracle recall vs block size: top-k of the GT itself = the upper bound
+    any selector can reach (paper Fig. 4: oracle lossless at 2k budget)."""
+    print("\n== fig4: oracle block-sparse recall vs block size ==")
+    params, loss0, loss1 = pretrained_base()
+    emit("fig4", "pretrain_loss", f"{loss0:.3f}->{loss1:.3f}")
+    rnd = tf.init_lm(jax.random.PRNGKey(42), tiny_cfg(16))
+    for bsz in ([16] if FAST else [8, 16, 32]):
+        cfg = tiny_cfg(bsz)
+        ex = collect_eval(cfg, params)
+        ex_rnd = collect_eval(cfg, rnd)
+        rows = eval_rows(cfg)
+        nb = SEQ // bsz
+        for frac in (0.0625, 0.125, 0.25, 0.5):
+            k = max(1, int(nb * frac))
+            emit("fig4", f"block{bsz}_budget{frac:g}",
+                 f"{recall_at(ex['gt'], ex['gt'], k, rows):.4f}")
+            emit("fig4", f"block{bsz}_budget{frac:g}_untrained",
+                 f"{recall_at(ex_rnd['gt'], ex_rnd['gt'], k, rows):.4f}")
+
+
+def bench_fig5():
+    """Distilled gate vs Quest vs oracle recall across budgets."""
+    print("\n== fig5: SeerAttention-R vs Quest recall (distilled gate) ==")
+    cfg, state, hist, _ = distilled_fixture(16)
+    emit("fig5", "distill_kl_first", f"{hist[0]['kl']:.4f}")
+    emit("fig5", "distill_kl_last", f"{hist[-1]['kl']:.4f}")
+    ex = collect_eval(cfg, state.params)
+    rows = eval_rows(cfg)
+    q_sh = quest_scores_rows(ex["qr"], ex["kr"], cfg.gate.block_size, True)
+    gt_h = jnp.repeat(ex["gt"], cfg.gqa_group, axis=2)  # per-head GT for quest
+    q_ph = quest_scores_rows(ex["qr"], ex["kr"], cfg.gate.block_size, False)
+    nb = SEQ // cfg.gate.block_size
+    for frac in (0.0625, 0.125, 0.25, 0.5):
+        k = max(1, int(nb * frac))
+        emit("fig5", f"budget{frac:g}_oracle",
+             f"{recall_at(ex['gt'], ex['gt'], k, rows):.4f}")
+        emit("fig5", f"budget{frac:g}_gate",
+             f"{recall_at(ex['glog'], ex['gt'], k, rows):.4f}")
+        emit("fig5", f"budget{frac:g}_quest_shared",
+             f"{recall_at(q_sh, ex['gt'], k, rows):.4f}")
+        emit("fig5", f"budget{frac:g}_quest_perhead",
+             f"{recall_at(q_ph, gt_h, k, rows):.4f}")
+
+
+def bench_fig6():
+    """Kernel speedup: (a) interpret-mode numerics, (b) the I/O roofline
+    speedup model over (seqlen, bs, sparsity) — decode is memory-bound, so
+    speedup -> 1/(1-rho) (paper Fig. 6), (c) CPU wall-clock sanity."""
+    print("\n== fig6: block-sparse flash decode kernel ==")
+    # (a) numerics: pallas interpret vs jnp oracle
+    key = jax.random.PRNGKey(0)
+    b, hkv, g, dh, bs, s = 2, 2, 4, 64, 64, 1024
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, hkv, g, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, s, hkv, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, s, hkv, dh), jnp.float32)
+    kv_len = jnp.array([s, s - 17])
+    nsel = 6
+    idx = jax.random.permutation(ks[3], s // bs)[None, None, :nsel]
+    idx = jnp.broadcast_to(idx, (b, hkv, nsel)).astype(jnp.int32)
+    o_ref = ops.sparse_decode(q, kc, vc, idx, kv_len, block_size=bs, impl="ref")
+    o_pal = ops.sparse_decode(q, kc, vc, idx, kv_len, block_size=bs,
+                              impl="pallas_interpret")
+    err = float(jnp.max(jnp.abs(o_ref - o_pal)))
+    emit("fig6", "pallas_vs_ref_maxerr", f"{err:.2e}")
+    assert err < 1e-4
+
+    # (b) derived I/O speedup model (TPU v5e: 819 GB/s HBM)
+    dh_f, hkv_f, dg = 128, 8, 128
+    for slen in ([32768] if FAST else [8192, 32768, 131072]):
+        for rho in (0.5, 0.7, 0.9):
+            kv_bytes = 2 * slen * hkv_f * dh_f * 2            # K+V bf16
+            gate_bytes = (slen // 64) * hkv_f * dg * 2        # Kg cache read
+            sp_bytes = (1 - rho) * kv_bytes + gate_bytes
+            emit("fig6", f"seq{slen}_rho{rho}_io_speedup",
+                 f"{kv_bytes / sp_bytes:.2f}")
+    emit("fig6", "theoretical_rho0.9", f"{1 / (1 - 0.9):.1f}")
+
+    # (c) CPU wall-clock: sparse vs dense decode step (jnp paths)
+    s2, nsel2 = 8192, 13                                      # 90% sparse
+    kc2 = jax.random.normal(ks[1], (2, s2, 4, 64), jnp.bfloat16)
+    vc2 = jax.random.normal(ks[2], (2, s2, 4, 64), jnp.bfloat16)
+    q2 = jax.random.normal(ks[0], (2, 4, 4, 64), jnp.bfloat16)
+    kvl = jnp.array([s2, s2])
+    idx2 = jnp.broadcast_to(jnp.arange(nsel2)[None, None] * 9, (2, 4, nsel2)
+                            ).astype(jnp.int32)
+    f_sp = jax.jit(functools.partial(ops.sparse_decode, block_size=64,
+                                     impl="ref"))
+    q4 = q2.reshape(2, 1, 16, 64)
+    f_dn = jax.jit(decode_attention)
+    f_sp(q2, kc2, vc2, idx2, kvl).block_until_ready()
+    f_dn(q4, kc2, vc2, kvl).block_until_ready()
+    n = 20
+    t0 = time.perf_counter()
+    for _ in range(n):
+        o = f_sp(q2, kc2, vc2, idx2, kvl)
+    o.block_until_ready()
+    t_sp = (time.perf_counter() - t0) / n
+    t0 = time.perf_counter()
+    for _ in range(n):
+        o = f_dn(q4, kc2, vc2, kvl)
+    o.block_until_ready()
+    t_dn = (time.perf_counter() - t0) / n
+    emit("fig6", "cpu_dense_us", f"{t_dn * 1e6:.0f}")
+    emit("fig6", "cpu_sparse_us", f"{t_sp * 1e6:.0f}")
+    emit("fig6", "cpu_speedup", f"{t_dn / t_sp:.2f}")
+
+
+def bench_fig7():
+    """Gate vs Quest recall across block sizes at a fixed token budget."""
+    print("\n== fig7: block-size robustness (fixed token budget) ==")
+    budget_tokens = 128
+    for bsz in ([16] if FAST else [8, 16, 32]):
+        cfg, state, _, _ = distilled_fixture(bsz)
+        ex = collect_eval(cfg, state.params)
+        rows = eval_rows(cfg)
+        q_sh = quest_scores_rows(ex["qr"], ex["kr"], bsz, True)
+        k = max(1, budget_tokens // bsz)
+        emit("fig7", f"block{bsz}_gate",
+             f"{recall_at(ex['glog'], ex['gt'], k, rows):.4f}")
+        emit("fig7", f"block{bsz}_quest",
+             f"{recall_at(q_sh, ex['gt'], k, rows):.4f}")
+        emit("fig7", f"block{bsz}_oracle",
+             f"{recall_at(ex['gt'], ex['gt'], k, rows):.4f}")
+
+
+def bench_fig8():
+    """Per-layer gate quality: the paper's finding is that hybrid dense
+    first-2-layers barely helps SeerAttention-R because its early-layer
+    prediction is already accurate (unlike Quest)."""
+    print("\n== fig8: early-layer gate quality (hybrid-dense ablation) ==")
+    nl = 2 if FAST else 4
+    cfg, state, _, _ = distilled_fixture(16, num_layers=nl)
+    ex = collect_eval(cfg, state.params)
+    rows = eval_rows(cfg)
+    nb = SEQ // cfg.gate.block_size
+    k = max(1, nb // 8)
+    q_sh = quest_scores_rows(ex["qr"], ex["kr"], cfg.gate.block_size, True)
+    for layer in range(nl):
+        rg = recall_at(ex["glog"][layer], ex["gt"][layer], k, rows)
+        rq = recall_at(q_sh[layer], ex["gt"][layer], k, rows)
+        emit("fig8", f"layer{layer}_gate", f"{rg:.4f}")
+        emit("fig8", f"layer{layer}_quest", f"{rq:.4f}")
+
+
+def bench_fig9():
+    """Threshold vs token budget: activated-block distribution and the
+    sparsity/recall tradeoff of each method."""
+    print("\n== fig9: threshold vs token budget ==")
+    cfg, state, _, _ = distilled_fixture(16)
+    ex = collect_eval(cfg, state.params)
+    rows = eval_rows(cfg)
+    probs = jax.nn.softmax(ex["glog"][..., rows, :], axis=-1)
+    gt = ex["gt"][..., rows, :]
+    nb = probs.shape[-1]
+    n_vis = (rows[None, :] // cfg.gate.block_size + 1)       # visible blocks
+    for tau in (2e-3, 5e-3, 1e-2, 2e-2):
+        sel = probs > tau
+        nsel = sel.sum(-1).astype(jnp.float32)
+        got = jnp.where(sel, gt, 0).sum(-1)
+        emit("fig9", f"tau{tau:g}_mean_blocks", f"{float(nsel.mean()):.2f}")
+        emit("fig9", f"tau{tau:g}_recall", f"{float(got.mean()):.4f}")
+        emit("fig9", f"tau{tau:g}_sparsity",
+             f"{1 - float(nsel.mean()) / float(np.mean(n_vis)):.3f}")
+    for k in (2, 4, 8, 16):
+        r = recall_at(ex["glog"], ex["gt"], k, rows)
+        emit("fig9", f"budget{k}blk_recall", f"{r:.4f}")
+        emit("fig9", f"budget{k}blk_mean_blocks", f"{k}")
+
+
+def bench_tab1():
+    """Error accumulation proxy: logit divergence + top-1 agreement of
+    sparse vs dense decode over a rollout, per token budget (paper Tab. 1:
+    too-small budgets inflate reasoning length via accumulated error)."""
+    print("\n== tab1: sparse-decode rollout divergence vs budget ==")
+    cfg, state, _, _ = distilled_fixture(16)
+    params = state.params
+    n_steps = 16 if FAST else 48
+    prefill_len = 256
+    batch = make_batch(cfg, 2, prefill_len, DataState(5, 0))
+    batch = {"tokens": batch["tokens"]}
+    max_len = prefill_len + n_steps + 8
+    for budget_blocks in (2, 4, 8, 16):
+        c = cfg.replace(gate=dataclasses.replace(
+            cfg.gate, token_budget=budget_blocks * cfg.gate.block_size))
+        step_sp = jax.jit(functools.partial(
+            tf.lm_decode_step, cfg=c, sparse=True, sparse_impl="ref"))
+        step_dn = jax.jit(functools.partial(
+            tf.lm_decode_step, cfg=c, sparse=False))
+        logits, st0 = jax.jit(functools.partial(
+            tf.lm_prefill, cfg=c, max_len=max_len))(params, batch)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        st_sp = st_dn = st0
+        tok_sp = tok_dn = tok
+        agree, dvg = [], []
+        for _ in range(n_steps):
+            lg_sp, st_sp = step_sp(params, st_sp, tok_sp)
+            lg_dn, st_dn = step_dn(params, st_dn, tok_dn)
+            agree.append(float(jnp.mean(
+                (jnp.argmax(lg_sp, -1) == jnp.argmax(lg_dn, -1)))))
+            p_dn = jax.nn.log_softmax(lg_dn.astype(jnp.float32))
+            p_sp = jax.nn.log_softmax(lg_sp.astype(jnp.float32))
+            dvg.append(float(jnp.mean(jnp.sum(
+                jnp.exp(p_dn) * (p_dn - p_sp), -1))))
+            tok_sp = jnp.argmax(lg_sp, -1).astype(jnp.int32)
+            tok_dn = jnp.argmax(lg_dn, -1).astype(jnp.int32)
+        emit("tab1", f"budget{budget_blocks}blk_top1_agree",
+             f"{np.mean(agree):.4f}")
+        emit("tab1", f"budget{budget_blocks}blk_mean_kl",
+             f"{np.mean(dvg):.5f}")
+
+
+def bench_tab2():
+    """Distillation training cost at reduced scale + paper extrapolation."""
+    print("\n== tab2: distillation training cost ==")
+    cfg, state, hist, wall = distilled_fixture(16)
+    steps = len(hist)
+    toks = steps * BATCH * SEQ
+    emit("tab2", "steps", steps)
+    emit("tab2", "wall_s", f"{wall:.1f}")
+    emit("tab2", "s_per_step", f"{wall / max(steps, 1):.3f}")
+    emit("tab2", "tokens_per_s", f"{toks / max(wall, 1e-9):.0f}")
+    n_gate = sum(x.size for x in jax.tree.leaves(state.gate))
+    n_all = sum(x.size for x in jax.tree.leaves(state.params))
+    emit("tab2", "gate_params", n_gate)
+    emit("tab2", "gate_param_frac", f"{n_gate / n_all:.4f}")
+    emit("tab2", "paper_tokens", "0.4e9")
+    emit("tab2", "paper_gpu_hours_8b", "12.2")
+
+
+def bench_roofline():
+    """Pretty-print the dry-run roofline table (EXPERIMENTS.md source)."""
+    print("\n== roofline: dry-run derived terms (single-pod) ==")
+    path = os.path.join(os.path.dirname(__file__), "dryrun_results.json")
+    try:
+        with open(path) as f:
+            res = json.load(f)
+    except OSError:
+        print("roofline,skipped,run `python -m repro.launch.dryrun --all` first")
+        return
+    hdr = ("cell", "t_comp_ms", "t_mem_ms", "t_coll_ms", "bottleneck",
+           "useful_flops")
+    print(("%-42s" + "%12s" * 5) % hdr)
+    for k, r in sorted(res.items()):
+        if not r.get("ok") or r.get("mesh") != "single":
+            continue
+        tag = "" if r.get("probe_used") else " (raw: scan undercounts!)"
+        print(("%-42s" + "%12.3f%12.3f%12.3f%12s%12.3f") % (
+            k.rsplit("|", 1)[0], r["t_compute"] * 1e3, r["t_memory"] * 1e3,
+            r["t_collective"] * 1e3, r["bottleneck"],
+            r.get("useful_flops_ratio", 0.0)) + tag)
+
+
+SECTIONS = {
+    "fig4": bench_fig4, "fig5": bench_fig5, "fig6": bench_fig6,
+    "fig7": bench_fig7, "fig8": bench_fig8, "fig9": bench_fig9,
+    "tab1": bench_tab1, "tab2": bench_tab2, "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    global FAST
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    if args.fast:
+        FAST = True
+    names = args.only.split(",") if args.only else list(SECTIONS)
+    t0 = time.perf_counter()
+    for n in names:
+        SECTIONS[n]()
+    print(f"\nall sections done in {time.perf_counter() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

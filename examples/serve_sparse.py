@@ -1,0 +1,75 @@
+"""Serve a small model with batched requests through the sparse decode
+engine — the paper's deployment scenario (long decoding of reasoning
+models) end to end.
+
+    PYTHONPATH=src python examples/serve_sparse.py [--arch qwen3_0_6b]
+        [--budget 128] [--method budget|threshold] [--batch 4] [--new 64]
+
+Batched requests of different lengths are left-packed into one batch;
+per-request kv lengths drive the gate's visible-block masks, the trailing
+partial block is force-selected (K-compression-cache semantics), and the
+engine reports achieved sparsity + derived I/O economics.
+"""
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.config import reduced
+from repro.data.pipeline import DataState, make_batch
+from repro.models.registry import get_api
+from repro.serve.engine import DecodeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--budget", type=int, default=128)
+    ap.add_argument("--method", default="budget",
+                    choices=["budget", "threshold"])
+    ap.add_argument("--threshold", type=float, default=4e-3)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prefill", type=int, default=256)
+    ap.add_argument("--new", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = reduced(configs.get(args.arch))
+    if not (cfg.gate.enabled and cfg.has_attention and cfg.is_decoder):
+        raise SystemExit(f"{args.arch}: no decode gate (family {cfg.family}) "
+                         "— pick a gated arch for this example")
+    cfg = cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=16, d_gate=16, method=args.method,
+        token_budget=args.budget, threshold=args.threshold))
+
+    params = get_api(cfg).init_params(jax.random.PRNGKey(0), cfg)
+    max_len = args.prefill + args.new + 16
+
+    # batched requests (shared-length packing; ragged lengths via kv_len)
+    batch = {"tokens": make_batch(cfg, args.batch, args.prefill,
+                                  DataState(3, 0))["tokens"]}
+
+    eng = DecodeEngine(cfg, params, max_len=max_len, sparse=True)
+    t0 = time.perf_counter()
+    res = eng.generate(batch, args.new)
+    wall = time.perf_counter() - t0
+    _, st = eng.prefill(batch)
+    stats = eng.sparsity_stats(st)
+
+    print(f"arch={cfg.arch_id} method={args.method} budget={args.budget} "
+          f"batch={args.batch}")
+    print(f"prefill {args.prefill} tok: {res['prefill_s'] * 1e3:.1f} ms; "
+          f"decode {args.new} steps: {res['decode_s'] * 1e3:.1f} ms "
+          f"({res['tok_per_s']:.1f} tok/s, wall {wall:.2f}s)")
+    print(f"achieved block sparsity: {stats['sparsity']:.3f} "
+          f"(derived KV I/O speedup {stats['io_speedup']:.2f}x, "
+          f"gate overhead {stats['gate_overhead_frac'] * 100:.2f}% of KV read)")
+    toks = np.asarray(res["tokens"])
+    print(f"generated tokens [req0, first 16]: {toks[0, :16].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Checkpointing: sharding-agnostic save/restore with async writer.
+
+Layout:  <dir>/step_<N>/
+           manifest.json        pytree structure + dtypes + shapes + meta
+           <leaf-idx>.npy       one file per leaf (fully-gathered numpy)
+
+Design notes for 1000+ nodes (documented trade-off): at true kimi-k2 scale
+one would write per-shard files via jax.experimental.array_serialization
+(OCDBT) so no host ever materialises a full leaf; the manifest/reshard
+logic below is layout-compatible with swapping that writer in. Restore is
+*elastic*: leaves are re-sharded by device_put against whatever mesh the
+restoring job runs — a different pod count / axis split just works.
+
+Fault-tolerance contract used by repro.train.loop:
+  * atomic publish (write to tmp dir, rename) — a crash mid-save never
+    corrupts the latest checkpoint;
+  * data-iterator state and RNG seed are saved with the step, so restart
+    resumes the exact token stream;
+  * async writer thread overlaps serialization with the next train steps.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+def _to_savable(a: np.ndarray):
+    a = np.asarray(a)
+    name = str(a.dtype)
+    if name in _EXOTIC:
+        return a.view(_EXOTIC[name]), name
+    return a, name
+
+
+def _from_savable(a: np.ndarray, dtype_name: str):
+    if dtype_name in _EXOTIC:
+        return a.view(getattr(ml_dtypes, dtype_name))
+    return a
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[Dict] = None,
+         *, _sync: bool = True) -> str:
+    leaves, treedef = _flatten(tree)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    savable = [_to_savable(l) for l in leaves]
+    manifest = {
+        "step": step,
+        # structure is re-derived from a `like` pytree at restore time
+        # (restore-into-model), so the treedef itself is not serialized.
+        "n_leaves": len(leaves),
+        "meta": meta or {},
+        "dtypes": [name for _, name in savable],
+        "shapes": [list(a.shape) for a, _ in savable],
+    }
+    for i, (arr, _) in enumerate(savable):
+        np.save(os.path.join(tmp, f"{i}.npy"), arr)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                      # atomic publish
+    return final
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint serialization with training."""
+
+    def __init__(self, ckpt_dir: str):
+        self.ckpt_dir = ckpt_dir
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, meta: Optional[Dict] = None):
+        self.wait()
+        # device_get on the main thread (orders wrt the train step stream)
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._thread = threading.Thread(
+            target=save, args=(self.ckpt_dir, step, host_tree, meta))
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any,
+            shardings: Any = None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``like``; optionally device_put with
+    ``shardings`` (same pytree structure) — this is the elastic re-shard."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_like, treedef = _flatten(like)
+    assert len(leaves_like) == manifest["n_leaves"], \
+        f"checkpoint has {manifest['n_leaves']} leaves, model {len(leaves_like)}"
+    leaves = [_from_savable(np.load(os.path.join(path, f"{i}.npy")), dt)
+              for i, dt in enumerate(manifest["dtypes"])]
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+    return tree, manifest["meta"]

@@ -1,0 +1,49 @@
+"""Architecture registry: one module per assigned architecture.
+
+``get(arch_id)`` returns the full-size ModelConfig; ``shapes_for(arch_id)``
+the applicable input-shape cells (skips recorded in DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.config import ModelConfig, SHAPES, ShapeConfig
+
+ARCH_IDS = [
+    "kimi_k2_1t_a32b",
+    "deepseek_moe_16b",
+    "gemma_2b",
+    "granite_20b",
+    "qwen3_0_6b",
+    "deepseek_coder_33b",
+    "zamba2_1_2b",
+    "llama_3_2_vision_11b",
+    "falcon_mamba_7b",
+    "hubert_xlarge",
+]
+
+_ALIASES = {i.replace("_", "-"): i for i in ARCH_IDS}
+
+
+def canon(arch_id: str) -> str:
+    return _ALIASES.get(arch_id, arch_id)
+
+
+def get(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canon(arch_id)}")
+    return mod.CONFIG
+
+
+def shapes_for(arch_id: str) -> List[ShapeConfig]:
+    cfg = get(arch_id)
+    names = ["train_4k", "prefill_32k"]
+    if cfg.is_decoder:
+        names += ["decode_32k", "long_500k"]
+    # long_500k: sub-quadratic decode required. SSM/hybrid are native;
+    # attention archs qualify via the SeerAttention-R sparse decode
+    # (per-token cost O(budget) + O(seq/block)); pure full-attention
+    # decode (gate disabled) would NOT qualify.
+    if cfg.is_decoder and cfg.has_attention and not cfg.gate.enabled:
+        names.remove("long_500k")
+    return [SHAPES[n] for n in names]

@@ -1,0 +1,24 @@
+"""HuBERT X-Large (arXiv:2106.07447; unverified). Encoder-only audio.
+
+48L d_model=1280 16H (MHA kv=16) d_ff=5120 vocab=504 (cluster targets).
+Modality frontend is a stub: input_specs supplies precomputed frame
+embeddings (512-d conv-feature stand-ins). No decode phase ->
+SeerAttention-R inapplicable; decode shapes skipped (DESIGN.md §5).
+"""
+from repro.config import GateConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="hubert_xlarge",
+    family="audio",
+    num_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab_size=504,
+    causal=False,
+    activation="gelu",
+    n_audio_features=512,
+    gate=GateConfig(enabled=False),
+)

@@ -1,0 +1,62 @@
+"""Self-distillation of the AttnGate (paper §2.3).
+
+Ground truth: column-blockwise 1D max-pool of the true attention map,
+max-pooled again across each GQA group, renormalised to sum 1; loss = KL.
+
+Key identity (the paper's "reuse the block-level rowmax" trick, Fig. 2b):
+for a softmax row p = softmax(s), the max over a block of columns J is
+    max_{j in J} p_j = exp(max_{j in J} s_j - m) / l
+so after renormalising over blocks, the ground truth equals
+    softmax over blocks of (per-block row-max logits).
+Hence the attention forward only needs to emit ``blockmax`` logits
+[B, H, Lq, nb]; `repro.models.common.chunked_attention(gt_block_size=...)`
+and the Pallas kernel `repro.kernels.gate_gt_fwd` both do exactly that.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import NEG_INF
+
+
+def ground_truth_from_blockmax(blockmax: jnp.ndarray, group: int,
+                               ) -> jnp.ndarray:
+    """blockmax: [B, H, Lq, nb] masked block row-max logits (NEG_INF where a
+    block is entirely in the future).  Returns GT distribution
+    [B, Hkv, Lq, nb] (fp32, rows sum to 1 over visible blocks).
+    """
+    b, h, lq, nb = blockmax.shape
+    hkv = h // group
+    # max-pool across the GQA group (shared sparsity target, §2.3)
+    gm = jnp.max(blockmax.reshape(b, hkv, group, lq, nb), axis=2)
+    return jax.nn.softmax(gm, axis=-1)
+
+
+def gate_kl_loss(gate_logits: jnp.ndarray, gt: jnp.ndarray,
+                 valid_rows: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """KL(gt || softmax(gate_logits)) averaged over valid (b, hkv, row).
+
+    gate_logits: [B, Hkv, Lq, nb] *masked* logits (NEG_INF on future blocks).
+    gt:          [B, Hkv, Lq, nb] probabilities.
+    valid_rows:  [B, Lq] optional mask (e.g. padded packing slots).
+    """
+    logp = jax.nn.log_softmax(gate_logits.astype(jnp.float32), axis=-1)
+    # avoid 0 * (-inf): where gt == 0 the contribution is 0.
+    safe_loggt = jnp.where(gt > 0, jnp.log(jnp.maximum(gt, 1e-30)), 0.0)
+    kl = jnp.sum(jnp.where(gt > 0, gt * (safe_loggt - logp), 0.0), axis=-1)
+    if valid_rows is not None:
+        w = valid_rows[:, None, :].astype(jnp.float32)
+        return jnp.sum(kl * w) / jnp.maximum(jnp.sum(w) * kl.shape[1], 1.0)
+    return jnp.mean(kl)
+
+
+def mask_blockmax_causal(blockmax: jnp.ndarray, q_positions: jnp.ndarray,
+                         block_size: int) -> jnp.ndarray:
+    """Ensure blocks whose first token is in the future are NEG_INF."""
+    nb = blockmax.shape[-1]
+    starts = jnp.arange(nb) * block_size
+    mask = q_positions[:, None] >= starts[None, :]
+    return jnp.where(mask[None, None], blockmax, NEG_INF)

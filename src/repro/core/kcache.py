@@ -1,0 +1,89 @@
+"""K Compression Cache (paper §3.2).
+
+Stores the gate's compressed key representation Kg (post pool + linear +
+RoPE) so the K branch never recomputes past blocks. Updated once every
+``block_size`` generated tokens; while the trailing block is partial, its
+cache entry is stale and the serving engine force-selects the last block.
+
+Memory: nb_max * d_gate per kv head = KV-cache / (block_size * head_dim /
+d_gate * 2) — <1% at b=64, d_gate=128 (paper's number).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import GateConfig
+from repro.core.attngate import gate_k
+
+
+class KCompressionCache(NamedTuple):
+    kg: jnp.ndarray            # [B, nb_max, Hkv, Dg]
+    n_complete: jnp.ndarray    # [B] int32: number of finalized block entries
+
+
+def init_kcache(batch: int, max_blocks: int, n_kv_heads: int, d_gate: int,
+                dtype=jnp.bfloat16) -> KCompressionCache:
+    return KCompressionCache(
+        kg=jnp.zeros((batch, max_blocks, n_kv_heads, d_gate), dtype),
+        n_complete=jnp.zeros((batch,), jnp.int32))
+
+
+def prefill_kcache(cache: KCompressionCache, gate_params: Dict[str, Any],
+                   k_nope: jnp.ndarray, cfg: GateConfig) -> KCompressionCache:
+    """Bulk-populate from a prefill of S tokens (only complete blocks)."""
+    b, s, hkv, dh = k_nope.shape
+    nb = s // cfg.block_size
+    if nb == 0:
+        return cache
+    kg = gate_k(gate_params, k_nope[:, : nb * cfg.block_size], cfg)
+    new = cache.kg.at[:, :nb].set(kg.astype(cache.kg.dtype))
+    return KCompressionCache(new, jnp.full((b,), nb, jnp.int32))
+
+
+def update_kcache(cache: KCompressionCache, gate_params: Dict[str, Any],
+                  k_cache_raw: jnp.ndarray, cur_len: jnp.ndarray,
+                  cfg: GateConfig, *, cache_is_roped: bool = False,
+                  rope_theta: float = 10000.0) -> KCompressionCache:
+    """Decode-time incremental update.
+
+    k_cache_raw: [B, S_max, Hkv, Dh] key cache. If ``cache_is_roped`` the
+    stored keys are post-RoPE (the standard layout) and are rotated *back*
+    to the pre-rope frame before pooling (RoPE is an orthogonal rotation, so
+    inversion = apply with negated positions) — this avoids keeping a second
+    pre-rope K cache (2x memory) just for the gate.
+    cur_len: [B] sequence length *after* appending the newest token.
+
+    When ``cur_len`` crosses a block boundary, the just-completed block of
+    ``block_size`` raw keys is pooled+projected and written at slot
+    ``cur_len // block_size - 1``. Uniform-length batches share one boundary
+    check; ragged batches are handled per-row via where-masking.
+    """
+    from repro.models.common import apply_rope
+    bs = cfg.block_size
+    completed = (cur_len % bs) == 0                       # [B] bool
+    blk_idx = jnp.maximum(cur_len // bs - 1, 0)           # [B]
+    start = blk_idx * bs
+
+    def one_row(k_raw, st, bi):
+        blk = jax.lax.dynamic_slice_in_dim(k_raw, st, bs, axis=0)  # [bs,Hkv,Dh]
+        if cache_is_roped:
+            pos = -(st + jnp.arange(bs))
+            blk = apply_rope(blk[None], pos[None], rope_theta)[0]
+        kg = gate_k(gate_params, blk[None], cfg, first_block_index=bi)[0, 0]
+        return kg                                          # [Hkv, Dg]
+
+    kg_new = jax.vmap(one_row)(k_cache_raw, start, blk_idx)   # [B,Hkv,Dg]
+    cur = jax.vmap(lambda c, i: c[i])(cache.kg, blk_idx)      # current content
+    kg_write = jnp.where(completed[:, None, None], kg_new.astype(cache.kg.dtype), cur)
+    new_kg = jax.vmap(lambda c, i, v: c.at[i].set(v))(cache.kg, blk_idx, kg_write)
+    new_n = jnp.where(completed, blk_idx + 1, cache.n_complete)
+    return KCompressionCache(new_kg, new_n.astype(jnp.int32))
+
+
+def visible_blocks(cur_len: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """Number of selectable blocks = ceil(cur_len / block_size); the last one
+    may be partial (stale cache entry) and is force-selected upstream."""
+    return -(-cur_len // block_size)

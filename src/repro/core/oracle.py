@@ -1,0 +1,41 @@
+"""Oracle block-sparse selection (paper §4.2).
+
+Uses the distillation ground truth itself (true block row-max scores) to
+select blocks — the accuracy upper bound of any gate. "Compute attention
+twice": full attention produces blockmax, which then drives a sparse pass.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import GateConfig
+from repro.core.distill import ground_truth_from_blockmax
+from repro.core.sparsity import select_blocks
+
+
+def oracle_scores_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         kv_len: jnp.ndarray, block_size: int) -> jnp.ndarray:
+    """True block scores for one decode step, shared per GQA group.
+
+    q: [B, 1, H, Dh] (post-rope); k_cache: [B, S, Hkv, Dh] (post-rope).
+    Returns [B, Hkv, nb] block row-max logits, NEG_INF on invisible blocks.
+    """
+    from repro.models.common import NEG_INF
+    b, _, h, dh = q.shape
+    s_max, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = h // hkv
+    nb = s_max // block_size
+    qg = q[:, 0].reshape(b, hkv, g, dh)
+    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) / jnp.sqrt(jnp.float32(dh))
+    valid = jnp.arange(s_max)[None, :] < kv_len[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    s = jnp.max(s.reshape(b, hkv, g, nb, block_size), axis=-1)  # block max
+    return jnp.max(s, axis=2)                                    # group max
+
+
+def oracle_select(q, k_cache, kv_len, cfg: GateConfig, max_selected=None):
+    scores = oracle_scores_decode(q, k_cache, kv_len, cfg.block_size)
+    n_valid = -(-kv_len // cfg.block_size)
+    return select_blocks(scores, n_valid, cfg, max_selected)

@@ -1,0 +1,69 @@
+"""Quest baseline (Tang et al., 2024) — training-free query-aware selection.
+
+Per KV block, store elementwise min and max of the (post-rope) keys. For a
+query q, the upper bound of q.k over the block is
+    sum_d max(q_d * min_d, q_d * max_d).
+Blocks are ranked by this bound. Quest selects per *query head* (no GQA
+sharing — paper Fig. 7 note); to drive the shared-sparsity kernel we also
+provide a group-pooled variant.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import GateConfig
+from repro.core.sparsity import select_blocks
+from repro.models.common import NEG_INF
+
+
+class QuestMeta(NamedTuple):
+    kmin: jnp.ndarray   # [B, nb_max, Hkv, Dh]
+    kmax: jnp.ndarray   # [B, nb_max, Hkv, Dh]
+    n_blocks: jnp.ndarray  # [B]
+
+
+def build_quest_meta(k_cache: jnp.ndarray, kv_len: jnp.ndarray,
+                     block_size: int) -> QuestMeta:
+    b, s, hkv, dh = k_cache.shape
+    nb = s // block_size
+    kb = k_cache.reshape(b, nb, block_size, hkv, dh).astype(jnp.float32)
+    # mask out-of-range tokens so they don't pollute min/max
+    pos = jnp.arange(s).reshape(nb, block_size)
+    valid = pos[None, :, :, None, None] < kv_len[:, None, None, None, None]
+    kmin = jnp.min(jnp.where(valid, kb, jnp.inf), axis=2)
+    kmax = jnp.max(jnp.where(valid, kb, -jnp.inf), axis=2)
+    kmin = jnp.where(jnp.isfinite(kmin), kmin, 0.0)
+    kmax = jnp.where(jnp.isfinite(kmax), kmax, 0.0)
+    return QuestMeta(kmin, kmax, -(-kv_len // block_size))
+
+
+def quest_scores(q: jnp.ndarray, meta: QuestMeta, *, share_group: bool
+                 ) -> jnp.ndarray:
+    """q: [B, 1, H, Dh] -> upper-bound scores.
+
+    share_group=False: [B, H, nb] per query head (Quest default).
+    share_group=True:  [B, Hkv, nb] max-pooled over each GQA group.
+    """
+    b, _, h, dh = q.shape
+    hkv = meta.kmin.shape[2]
+    g = h // hkv
+    qf = q[:, 0].reshape(b, hkv, g, dh).astype(jnp.float32)   # [B,Hkv,g,Dh]
+    # elementwise bound max(q*kmin, q*kmax) summed over d, decomposed into
+    # two einsums: positive q parts hit kmax, negative parts hit kmin.
+    ub = jnp.einsum("bhgd,bnhd->bhgn", jnp.maximum(qf, 0), meta.kmax) + \
+         jnp.einsum("bhgd,bnhd->bhgn", jnp.minimum(qf, 0), meta.kmin)
+    nb = ub.shape[-1]
+    valid = jnp.arange(nb)[None, None, None, :] < meta.n_blocks[:, None, None, None]
+    ub = jnp.where(valid, ub, NEG_INF)
+    if share_group:
+        return jnp.max(ub, axis=2)                            # [B,Hkv,nb]
+    return ub.reshape(b, h, nb)
+
+
+def quest_select(q: jnp.ndarray, meta: QuestMeta, cfg: GateConfig,
+                 max_selected=None, share_group: bool = True):
+    scores = quest_scores(q, meta, share_group=share_group)
+    return select_blocks(scores, meta.n_blocks, cfg, max_selected)

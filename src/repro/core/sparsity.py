@@ -1,0 +1,103 @@
+"""Sparsification: soft gate scores -> discrete block selections (paper §3.1).
+
+Two methods:
+  * token budget — top-k over blocks, k = budget // block_size. Skips the
+    softmax (top-k is monotone in the logits).
+  * threshold   — select blocks with softmax score > tau; self-adaptive
+    sparsity per head. For fixed-shape execution the selection is still
+    materialised as a capped index list (max_selected_blocks), which is how
+    the serving engine and the kernel consume it.
+
+Index lists use -1 as the "no block" sentinel, matching the kernel contract
+``block_indices: [B, Hkv, max_selected_blocks] int32``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import GateConfig
+from repro.models.common import NEG_INF
+
+
+def _force_blocks(scores: jnp.ndarray, n_valid_blocks: jnp.ndarray,
+                  cfg: GateConfig) -> jnp.ndarray:
+    """Pin the trailing (possibly partial) block and optionally block 0."""
+    b, hkv, nb = scores.shape
+    ar = jnp.arange(nb)
+    big = jnp.float32(1e30)
+    if cfg.always_last_block:
+        last = (n_valid_blocks - 1)[:, None, None]        # [B,1,1]
+        scores = jnp.where(ar[None, None, :] == last, big, scores)
+    if cfg.always_first_block:
+        scores = scores.at[:, :, 0].set(big)
+    return scores
+
+
+def budget_select(scores: jnp.ndarray, n_valid_blocks: jnp.ndarray,
+                  cfg: GateConfig, max_selected: Optional[int] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Token-budget top-k selection.
+
+    scores: [B, Hkv, nb] gate logits for ONE query step (decode).
+    n_valid_blocks: [B] number of currently visible blocks.
+    Returns (block_indices [B, Hkv, k] int32 with -1 padding, mask [B,Hkv,nb]).
+    """
+    nb = scores.shape[-1]
+    k = max_selected or max(1, cfg.token_budget // cfg.block_size)
+    # the budget can never exclude the force-selected blocks (first/last)
+    min_k = int(cfg.always_last_block) + int(cfg.always_first_block)
+    k = min(max(k, min_k), nb)
+    valid = jnp.arange(nb)[None, None, :] < n_valid_blocks[:, None, None]
+    s = jnp.where(valid, scores, NEG_INF)
+    s = _force_blocks(s, n_valid_blocks, cfg)
+    top_vals, top_idx = jax.lax.top_k(s, k)
+    sel_valid = top_vals > NEG_INF / 2
+    idx = jnp.where(sel_valid, top_idx, -1).astype(jnp.int32)
+    mask = jnp.zeros(s.shape, bool).at[
+        jnp.arange(s.shape[0])[:, None, None],
+        jnp.arange(s.shape[1])[None, :, None],
+        jnp.maximum(top_idx, 0)].set(sel_valid)
+    return idx, mask
+
+
+def threshold_select(probs: jnp.ndarray, n_valid_blocks: jnp.ndarray,
+                     cfg: GateConfig, max_selected: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Threshold selection on softmaxed scores; capped at ``max_selected``
+    (highest-score blocks win when the threshold admits more than the cap).
+
+    probs: [B, Hkv, nb] gate probabilities for one query step.
+    """
+    nb = probs.shape[-1]
+    valid = jnp.arange(nb)[None, None, :] < n_valid_blocks[:, None, None]
+    p = jnp.where(valid, probs, -1.0)
+    p = _force_blocks(p, n_valid_blocks, cfg)
+    admitted = p > cfg.threshold
+    ranked = jnp.where(admitted, p, -1.0)
+    k = min(max_selected, nb)
+    top_vals, top_idx = jax.lax.top_k(ranked, k)
+    sel_valid = top_vals > 0
+    idx = jnp.where(sel_valid, top_idx, -1).astype(jnp.int32)
+    mask = admitted & valid
+    return idx, mask
+
+
+def select_blocks(scores_or_probs: jnp.ndarray, n_valid_blocks: jnp.ndarray,
+                  cfg: GateConfig, max_selected: Optional[int] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    if cfg.method == "budget":
+        return budget_select(scores_or_probs, n_valid_blocks, cfg, max_selected)
+    if cfg.method == "threshold":
+        ms = max_selected or max(1, cfg.token_budget // cfg.block_size)
+        return threshold_select(scores_or_probs, n_valid_blocks, cfg, ms)
+    raise ValueError(cfg.method)
+
+
+def sparsity_ratio(mask: jnp.ndarray, n_valid_blocks: jnp.ndarray) -> jnp.ndarray:
+    """Fraction of visible blocks NOT attended (higher = sparser)."""
+    sel = jnp.sum(mask, axis=-1).astype(jnp.float32)          # [B, Hkv]
+    tot = jnp.maximum(n_valid_blocks[:, None].astype(jnp.float32), 1.0)
+    return 1.0 - jnp.mean(sel / tot)

@@ -1,0 +1,274 @@
+"""Sharding rules: map every param / batch / decode-state leaf to a
+PartitionSpec by path-pattern, MaxText-style.
+
+Axes: single-pod mesh ("data", "model"); multi-pod ("pod", "data", "model").
+DP = ("pod","data") | ("data",);  TP/EP/SP = "model".
+
+Param rules (base spec matches the *unstacked* leaf; leading layer-stack
+dims are auto-padded with None by ndim difference):
+  embed [V,d]                 (model, None)        vocab-sharded embedding
+  lm_head [d,V]               (None, model)
+  attn wq/wk/wv [d,H*dh]      (None, model)        head/TP sharding
+  attn wo [H*dh,d]            (model, None)
+  mlp wi_* [d,f]              (None, model);  wo [f,d] (model, None)
+  moe experts [E,d,f]         (model, None, None)  expert parallelism
+  moe router [d,E]            replicated
+  attngate wq/wk              replicated           (tiny: Hkv*3dh*dg)
+  mamba in_proj [d,2di]       (None, model); out_proj/x_proj [di,..] (model, None)
+  mamba conv/A/D/dt  di-major (model, ...)
+  norms / scalars             replicated
+
+Decode-state rules depend on the shape cell (batch may be unshardable):
+  batch dim -> DP when divisible, else None
+  KV seq dim -> "model" (+ DP axes when batch is unsharded: long_500k
+  context-parallelism — the cross-chip analog of the paper's num_split).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+MODEL = "model"
+
+
+def _base_param_rule(path: str, ndim: int) -> Tuple:
+    """``ndim`` is the UNSTACKED leaf rank (leading layer dims stripped)."""
+    has = lambda s: s in path
+    if has("embed/w"):
+        return (MODEL, None)
+    if has("lm_head/w"):
+        return (None, MODEL)
+    if has("router/"):
+        return (None, None)
+    if has("moe/") and not has("shared/") and (
+            has("/wi_gate") or has("/wi_up") or has("/wo")):
+        return (MODEL, None, None)                    # [E, d, f] EP
+    if has("gate/wq") or has("gate/wk"):
+        return (None, None, None)                     # AttnGate: replicated
+    if has("/wq/") or has("/wk/") or has("/wv/") or has("/wi_gate/") \
+            or has("/wi_up/") or has("/in_proj/") or has("/dt_proj/"):
+        return (None, MODEL)
+    if has("/wo/") or has("/out_proj/") or has("/x_proj/"):
+        return (MODEL, None)
+    if has("conv_w"):
+        return (None, MODEL)
+    if has("conv_b") or has("dt_bias") or has("/D"):
+        return (MODEL,)
+    if has("A_log"):
+        return (MODEL,) + (None,) * (ndim - 1) if ndim >= 1 else ()
+    return ()                                         # replicate (norms etc.)
+
+
+def _pathstr(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+    return "/".join(parts)
+
+
+def _stack_depth(path: str, cfg=None) -> int:
+    """Leading layer-stack dims for params under each top-level key."""
+    top = path.split("/", 1)[0]
+    if top == "units":
+        return 2                                  # [n_units, period, ...]
+    if top == "blocks":
+        return 2 if (cfg is not None and cfg.cross_attn_period) else 1
+    if top in ("cross_blocks", "tail"):
+        return 1
+    return 0
+
+
+def sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Drop sharding on axes the mesh doesn't evenly divide (e.g. a 504-entry
+    vocab on a 16-way model axis): correctness-first fallback to replication
+    on that axis only."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for i, (p, dim) in enumerate(zip(parts, shape)):
+        if p is None:
+            continue
+        if dim % _axsize(mesh, p) != 0:
+            parts[i] = None
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def _ep_major_rule(path: str, ndim: int) -> Tuple:
+    """EP-major (§Perf P2): only experts + lm_head sharded; attention /
+    dense / norms / embed replicated (batch is sharded over data x model
+    instead, so non-expert layers run collective-free)."""
+    has = lambda s: s in path
+    if has("moe/") and not has("shared/") and (
+            has("/wi_gate") or has("/wi_up") or has("/wo")):
+        return (MODEL, None, None)
+    if has("lm_head/w"):
+        return (None, MODEL)
+    return ()
+
+
+def param_pspecs(params: Any, cfg=None, mesh: Optional[Mesh] = None) -> Any:
+    """PartitionSpec pytree mirroring ``params``."""
+    ep = bool(cfg is not None and getattr(cfg, "ep_major", False))
+    rule_fn = _ep_major_rule if ep else _base_param_rule
+
+    def one(kp, leaf):
+        path = _pathstr(kp)
+        depth = _stack_depth(path, cfg)
+        rule = tuple(rule_fn(path, leaf.ndim - depth))
+        rule = rule[:max(leaf.ndim - depth, 0)]
+        pad = leaf.ndim - depth - len(rule)
+        spec = P(*((None,) * depth + (None,) * pad + rule))
+        return sanitize_spec(spec, leaf.shape, mesh) if mesh is not None else spec
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def zero1_param_pspecs(params: Any, mesh: Mesh, cfg=None) -> Any:
+    """ZeRO-1-style optimizer-state specs: additionally shard the first
+    currently-unsharded dim of every large leaf over the DP axes."""
+    dp = dp_axes(mesh)
+    base = param_pspecs(params, cfg, mesh)
+
+    def one(spec: P, leaf) -> P:
+        if leaf.size < 1 << 16:                      # skip tiny leaves
+            return spec
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        for i, (p, dim) in enumerate(zip(parts, leaf.shape)):
+            if p is None and dim % _axsize(mesh, dp) == 0 and dim >= _axsize(mesh, dp):
+                parts[i] = dp if len(dp) > 1 else dp[0]
+                break
+        return P(*parts)
+    return jax.tree.map(one, base, params)
+
+
+def _axsize(mesh: Mesh, axes) -> int:
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def batch_pspecs(batch_size: int, mesh: Mesh, ep_major: bool = False) -> P:
+    """Spec for a [B, ...] batch leaf (DP over batch when divisible).
+    EP-major: fold the 'model' axis into DP when the batch divides it."""
+    dp = dp_axes(mesh)
+    if ep_major:
+        full = dp + (MODEL,)
+        if batch_size % _axsize(mesh, full) == 0:
+            return full
+    if batch_size % _axsize(mesh, dp) == 0:
+        return dp if len(dp) > 1 else dp[0]
+    # try data axis only
+    if "data" in mesh.axis_names and batch_size % mesh.shape["data"] == 0:
+        return ("data",)
+    return None
+
+
+def train_batch_pspecs(batch: Any, mesh: Mesh, ep_major: bool = False) -> Any:
+    def one(leaf):
+        b = batch_pspecs(leaf.shape[0], mesh, ep_major)
+        return P(*((b,) + (None,) * (leaf.ndim - 1)))
+    return jax.tree.map(one, batch)
+
+
+def decode_state_pspecs(state: Any, batch_size: int, mesh: Mesh) -> Any:
+    """Specs for DecodeState-like pytrees.
+
+    Convention by leaf ndim (stacked layer dim first):
+      [L,B,S,H,D] KV caches      -> (None, dp|None, seq_axes, None, None)
+      [L,B,nb,H,Dg] Kg cache     -> same
+      [L,B,...] ssm states       -> (None, dp|None, model on widest dim)
+      [B] / [L,B] lengths        -> replicated
+    When batch is unshardable (long_500k B=1) the KV seq dim takes the DP
+    axes too: context parallelism across the full mesh.
+    """
+    dp = dp_axes(mesh)
+    b_shardable = batch_size % _axsize(mesh, dp) == 0
+    bspec = (dp if len(dp) > 1 else dp[0]) if b_shardable else None
+    seq_axes: Any = MODEL if b_shardable else tuple(dp) + (MODEL,)
+    n_model = mesh.shape[MODEL]
+
+    def one(leaf):
+        if leaf.ndim >= 5:                          # [L,B,S,H,D] caches
+            spec = P(None, bspec, seq_axes, None, None)
+        elif leaf.ndim == 4:
+            # [L,B,*,*] ssm/conv states: put MODEL on the widest trailing
+            # dim the mesh divides (conv state is [L,B,conv_w,d_inner]).
+            dims = leaf.shape[2:]
+            cand = [i for i, d in enumerate(dims) if d % n_model == 0]
+            best = (2 + max(cand, key=lambda i: dims[i])) if cand else None
+            parts = [None, bspec, None, None]
+            if best is not None:
+                parts[best] = MODEL
+            spec = P(*parts)
+        elif leaf.ndim == 3:                        # [L,B,di]-ish
+            spec = P(None, bspec, MODEL)
+        else:
+            spec = P(*((None,) * leaf.ndim))
+        return sanitize_spec(spec, leaf.shape, mesh)
+    return jax.tree.map(one, state)
+
+
+def logical_pspec(name: str, mesh: Mesh, ep_major: bool = False) -> P:
+    """Activation sharding constraints used via the `shard` callback."""
+    dp = dp_axes(mesh)
+    dpa = dp if len(dp) > 1 else dp[0]
+    if ep_major:
+        full = dp + (MODEL,)
+        table = {
+            "activation": P(full, None, None),      # [B, L, d] batch-major
+            "activation_tokens": P(full, None),
+            "logits": P(full, None, MODEL),         # vocab-sharded lm_head
+        }
+        return table.get(name, P())
+    table = {
+        "activation": P(dpa, None, MODEL),          # [B, L, d]
+        "activation_tokens": P(dpa, None),          # [B, L]
+        "moe_buffer": P(MODEL, dpa, None),          # [E, C, d]
+        "logits": P(dpa, None, MODEL),              # [B, L, V]
+    }
+    return table.get(name, P())
+
+
+def decode_partition(mesh: Mesh, batch_size: int):
+    """(batch_spec, seq_axes) for decode-state cells — MUST mirror
+    decode_state_pspecs: batch over DP when divisible; the KV seq dim over
+    'model' (+ the DP axes when batch is unshardable: long_500k CP)."""
+    dp = dp_axes(mesh)
+    b_shardable = batch_size % _axsize(mesh, dp) == 0
+    bspec = (dp if len(dp) > 1 else dp[0]) if b_shardable else None
+    seq_axes = (MODEL,) if b_shardable else tuple(dp) + (MODEL,)
+    return bspec, seq_axes
+
+
+def make_shard_fn(mesh: Optional[Mesh], ep_major: bool = False):
+    if mesh is None:
+        return None
+
+    def shard(x, name: str):
+        spec = logical_pspec(name, mesh, ep_major)
+        if len(spec) > x.ndim:
+            return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    shard.mesh = mesh
+    shard.ep_major = ep_major
+    return shard
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

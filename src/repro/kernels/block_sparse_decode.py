@@ -1,0 +1,140 @@
+"""Block-sparse flash decoding — Pallas TPU kernel (paper §3.3, TPU-native).
+
+The paper's TileLang/H100 kernel walks a per-(batch, kv-head) list of
+selected KV block indices, skipping all other KV-cache reads (decode is
+I/O-bound, so at sparsity rho the speedup approaches 1/(1-rho)).
+
+TPU adaptation (see DESIGN.md §2):
+  * the selected-block index array is delivered via scalar prefetch
+    (``PrefetchScalarGridSpec``) so each grid step's ``BlockSpec.index_map``
+    can pick which KV block to stream HBM->VMEM — the TPU analog of the GPU
+    gather. Only selected blocks ever leave HBM.
+  * the GQA query group is padded to the sublane tile (>=16 rows for bf16)
+    — the analog of the paper padding query-head groups to 64 for wgmma.
+  * grid = (batch, heads_kv, max_selected_blocks); TPU grid iteration is
+    sequential per core, so the online-softmax state (m, l, acc) lives in
+    VMEM scratch across the block loop. Cross-chip split-K (the analog of
+    the paper's num_split load balancing) is done one level up via
+    sequence-sharded shard_map (repro.serve.sharded).
+  * Mosaic double-buffers the HBM->VMEM streams, so the K/V fetch of block
+    j+1 overlaps the MXU dots of block j (warp-specialization analog).
+
+Layouts:
+  q             [B, Hkv, G_pad, Dh]
+  k_cache/v_...  [B, Hkv, nb*bs, Dh]   (head-major for contiguous block reads)
+  block_indices [B, Hkv, nsel] int32 (-1 padding)
+  kv_len        [B] int32
+  out           [B, Hkv, G_pad, Dh]
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(idx_ref, len_ref,              # scalar prefetch
+            q_ref, k_ref, v_ref,           # VMEM in
+            o_ref,                          # VMEM out
+            m_ref, l_ref, acc_ref,          # VMEM scratch
+            *, block_size: int, nsel: int, scale: float):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    blk = idx_ref[b, h, j]
+
+    @pl.when(blk >= 0)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                    # [G_pad, Dh]
+        k = k_ref[0, 0].astype(jnp.float32)                    # [bs, Dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = blk * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < len_ref[b], s, NEG_INF)            # partial block
+        m_prev = jnp.max(m_ref[...], axis=1, keepdims=True)    # [G_pad, 1]
+        l_prev = jnp.max(l_ref[...], axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)                                 # [G_pad, bs]
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(j == nsel - 1)
+    def _finalize():
+        l = jnp.max(l_ref[...], axis=1, keepdims=True)
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def _pad_group(g: int, dtype) -> int:
+    base = 16 if jnp.dtype(dtype).itemsize <= 2 else 8
+    return max(base, -(-g // base) * base)
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def block_sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
+                        v_cache: jnp.ndarray, block_indices: jnp.ndarray,
+                        kv_len: jnp.ndarray, *, block_size: int,
+                        interpret: bool = False) -> jnp.ndarray:
+    """q [B,Hkv,G,Dh]; caches [B,S,Hkv,Dh]; indices [B,Hkv,nsel]; kv_len [B]."""
+    bsz, hkv, g, dh = q.shape
+    s = k_cache.shape[1]
+    nb = s // block_size
+    nsel = block_indices.shape[-1]
+    g_pad = _pad_group(g, q.dtype)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+    kh = jnp.moveaxis(k_cache, 2, 1)                 # [B,Hkv,S,Dh]
+    vh = jnp.moveaxis(v_cache, 2, 1)
+    scale = 1.0 / math.sqrt(dh)
+
+    def q_map(b, h, j, idx_ref, len_ref):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, j, idx_ref, len_ref):
+        return (b, h, jnp.maximum(idx_ref[b, h, j], 0), 0)
+
+    def o_map(b, h, j, idx_ref, len_ref):
+        return (b, h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, hkv, nsel),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_pad, dh), q_map),
+            pl.BlockSpec((1, 1, block_size, dh), kv_map),
+            pl.BlockSpec((1, 1, block_size, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, dh), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, LANES), jnp.float32),   # m
+            pltpu.VMEM((g_pad, LANES), jnp.float32),   # l
+            pltpu.VMEM((g_pad, dh), jnp.float32),      # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_size=block_size, nsel=nsel,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g_pad, dh), q.dtype),
+        interpret=interpret,
+    )(block_indices.astype(jnp.int32), kv_len.astype(jnp.int32), qp, kh, vh)
+    return out[:, :, :g]

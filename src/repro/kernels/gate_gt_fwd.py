@@ -1,0 +1,132 @@
+"""Distillation-GT flash attention forward — Pallas TPU kernel (paper Fig 2b).
+
+A FlashAttention-2-style forward that additionally emits the per-(row,
+kv-block) max of the masked logits (``blockmax``). By the identity in
+repro.core.distill, softmax(blockmax) over the block axis IS the paper's
+column-blockwise max-pooled attention-map ground truth — so the distillation
+target comes for free from the rowmax statistics the flash loop already
+tracks (the paper's "largely reuses intermediate results" trick).
+
+Layouts (head-major):
+  q [B, H, Lq, Dh]   k/v [B, Hkv, Lk, Dh]   (GQA resolved via index_map)
+  -> o [B, H, Lq, Dh], blockmax [B, H, nb, Lq] fp32  (nb = Lk // block_size;
+     transposed block-major so the minor dim is lane-aligned; ops.py
+     transposes back to [B, H, Lq, nb]).
+
+Grid: (B, H, n_q_chunks, n_k_blocks); k innermost so the online-softmax
+state lives in VMEM scratch across the k loop. Fully-future k blocks are
+skipped (no FLOPs, no HBM reads) and their blockmax set to NEG_INF.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, bm_ref, m_ref, l_ref, acc_ref,
+            *, block_size: int, q_chunk: int, n_k: int, scale: float):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * q_chunk
+    k_start = ki * block_size
+    # causal: the whole k block is in the future for every row of this chunk
+    visible = k_start <= q_start + q_chunk - 1
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)               # [qc, Dh]
+        k = k_ref[0, 0].astype(jnp.float32)               # [bs, Dh]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+        rbm = jnp.max(s, axis=1)                          # [qc] block row-max
+        bm_ref[0, 0, 0, :] = rbm
+        m_prev = jnp.max(m_ref[...], axis=1, keepdims=True)
+        l_prev = jnp.max(l_ref[...], axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, rbm[:, None])
+        p = jnp.exp(s - m_new)
+        p = jnp.where(qpos >= kpos, p, 0.0)               # exp(NEG-NEG)=1 guard
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * alpha + pv
+        m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+        l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+    @pl.when(jnp.logical_not(visible))
+    def _masked():
+        bm_ref[0, 0, 0, :] = jnp.full((q_chunk,), NEG_INF, jnp.float32)
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        l = jnp.max(l_ref[...], axis=1, keepdims=True)
+        o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_size", "q_chunk", "interpret"))
+def gate_gt_flash_fwd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      block_size: int, q_chunk: int = 256,
+                      interpret: bool = False):
+    """q [B,Lq,H,Dh], k/v [B,Lk,Hkv,Dh] -> (o [B,Lq,H,Dh], blockmax
+    [B,H,Lq,nb] fp32). Lq % q_chunk == 0 and Lk % block_size == 0 required
+    (the data pipeline packs to multiples; ops.py pads otherwise)."""
+    b, lq, h, dh = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    n_q = lq // q_chunk
+    n_k = lk // block_size
+    scale = 1.0 / math.sqrt(dh)
+
+    qh = jnp.moveaxis(q, 2, 1)          # [B, H, Lq, Dh]
+    kh = jnp.moveaxis(k, 2, 1)          # [B, Hkv, Lk, Dh]
+    vh = jnp.moveaxis(v, 2, 1)
+
+    grid = (b, h, n_q, n_k)
+    out_shapes = (
+        jax.ShapeDtypeStruct((b, h, lq, dh), q.dtype),
+        jax.ShapeDtypeStruct((b, h, n_k, lq), jnp.float32),
+    )
+    o, bm = pl.pallas_call(
+        functools.partial(_kernel, block_size=block_size, q_chunk=q_chunk,
+                          n_k=n_k, scale=scale),
+        grid=grid,
+        out_shape=out_shapes,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_chunk, dh), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, block_size, dh), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_size, dh), lambda b_, h_, qi, ki: (b_, h_ // g, ki, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, q_chunk, dh), lambda b_, h_, qi, ki: (b_, h_, qi, 0)),
+            pl.BlockSpec((1, 1, 1, q_chunk), lambda b_, h_, qi, ki: (b_, h_, ki, qi)),
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((q_chunk, LANES), jnp.float32),   # m
+            pltpu.VMEM((q_chunk, LANES), jnp.float32),   # l
+            pltpu.VMEM((q_chunk, dh), jnp.float32),      # acc
+        ],
+        interpret=interpret,
+    )(qh, kh, vh)
+    o = jnp.moveaxis(o, 1, 2)                       # [B, Lq, H, Dh]
+    bm = jnp.swapaxes(bm, 2, 3)                     # [B, H, Lq, nb]
+    return o, bm

@@ -1,0 +1,57 @@
+"""Jit'd dispatching wrappers over the Pallas kernels and their jnp oracles.
+
+Models call these; the ``use_pallas`` flag (ModelConfig) or explicit
+``impl=`` picks the path. On CPU (tests, dry-run) the jnp path or
+``interpret=True`` is used; on TPU the Mosaic kernels.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.block_sparse_decode import block_sparse_decode as _bsd_pallas
+from repro.kernels.gate_gt_fwd import gate_gt_flash_fwd as _gt_pallas
+
+
+def sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                  block_indices: jnp.ndarray, kv_len: jnp.ndarray, *,
+                  block_size: int, impl: str = "ref") -> jnp.ndarray:
+    """impl: 'ref' (jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check)."""
+    if impl == "ref":
+        return _ref.sparse_decode_ref(q, k_cache, v_cache, block_indices,
+                                      kv_len, block_size=block_size)
+    if impl == "pallas":
+        return _bsd_pallas(q, k_cache, v_cache, block_indices, kv_len,
+                           block_size=block_size)
+    if impl == "pallas_interpret":
+        return _bsd_pallas(q, k_cache, v_cache, block_indices, kv_len,
+                           block_size=block_size, interpret=True)
+    raise ValueError(impl)
+
+
+def gate_gt_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      block_size: int, q_chunk: int = 256,
+                      impl: str = "ref",
+                      segment_ids: Optional[jnp.ndarray] = None,
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Attention fwd + distillation blockmax. The 'chunked' impl is the
+    memory-bounded jnp path used inside models (scan over q chunks)."""
+    if impl == "ref":
+        return _ref.gate_gt_attention_ref(q, k, v, gt_block_size=block_size,
+                                          segment_ids=segment_ids)
+    if impl == "chunked":
+        from repro.models.common import chunked_attention
+        if segment_ids is not None:
+            raise NotImplementedError("packing masks: use impl='ref' in tests")
+        o, bm = chunked_attention(q, k, v, causal=True, q_chunk=q_chunk,
+                                  gt_block_size=block_size)
+        return o, bm
+    if impl in ("pallas", "pallas_interpret"):
+        if segment_ids is not None:
+            raise NotImplementedError("varlen Pallas GT kernel: jnp path only")
+        return _gt_pallas(q, k, v, block_size=block_size, q_chunk=q_chunk,
+                          interpret=(impl == "pallas_interpret"))
+    raise ValueError(impl)

@@ -1,0 +1,103 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness ground truth (kernels assert_allclose against
+them) AND the CPU/dry-run execution path (`use_pallas=False`).
+
+Contracts
+---------
+sparse_decode_ref:
+  q             [B, Hkv, G, Dh]   one new query token, grouped per kv head
+  k_cache       [B, S, Hkv, Dh]   post-rope keys (S = nb * block_size)
+  v_cache       [B, S, Hkv, Dh]
+  block_indices [B, Hkv, nsel]    int32 selected block ids, -1 = padding
+  kv_len        [B]               valid lengths (masks the partial last block)
+  -> o          [B, Hkv, G, Dh]
+
+gate_gt_attention_ref:
+  q [B, Lq, H, Dh], k/v [B, Lk, Hkv, Dh]  (causal, optional segment ids)
+  -> o [B, Lq, H, Dh], blockmax [B, H, Lq, nb] fp32 masked block row-max
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import NEG_INF
+
+
+def sparse_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                      v_cache: jnp.ndarray, block_indices: jnp.ndarray,
+                      kv_len: jnp.ndarray, *, block_size: int) -> jnp.ndarray:
+    b, hkv, g, dh = q.shape
+    s = k_cache.shape[1]
+    nsel = block_indices.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    idx = jnp.maximum(block_indices, 0)                          # [B,Hkv,nsel]
+    # token positions of gathered blocks: [B,Hkv,nsel,bs]
+    pos = idx[..., None] * block_size + jnp.arange(block_size)
+    # gather keys/values: k_cache [B,S,Hkv,Dh] -> [B,Hkv,nsel,bs,Dh]
+    kh = jnp.moveaxis(k_cache, 2, 1)                             # [B,Hkv,S,Dh]
+    vh = jnp.moveaxis(v_cache, 2, 1)
+    gpos = pos.reshape(b, hkv, nsel * block_size)
+    kg = jnp.take_along_axis(kh, gpos[..., None], axis=2)        # [B,Hkv,n*bs,Dh]
+    vg = jnp.take_along_axis(vh, gpos[..., None], axis=2)
+
+    sc = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                    kg.astype(jnp.float32)) * scale
+    valid = (block_indices[..., None] >= 0) & (pos < kv_len[:, None, None, None])
+    valid = valid.reshape(b, hkv, 1, nsel * block_size)
+    sc = jnp.where(valid, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    # guard rows with zero valid keys (shouldn't happen: last block forced)
+    p = jnp.where(jnp.any(valid, axis=-1, keepdims=True), p, 0.0)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, vg.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def dense_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                     kv_len: jnp.ndarray) -> jnp.ndarray:
+    """Dense counterpart with the same [B,Hkv,G,Dh] layout (baseline)."""
+    b, hkv, g, dh = q.shape
+    s = k_cache.shape[1]
+    kh = jnp.moveaxis(k_cache, 2, 1)
+    vh = jnp.moveaxis(v_cache, 2, 1)
+    sc = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                    kh.astype(jnp.float32)) / math.sqrt(dh)
+    valid = (jnp.arange(s)[None, :] < kv_len[:, None])[:, None, None, :]
+    sc = jnp.where(valid, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, vh.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
+def gate_gt_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                          gt_block_size: int,
+                          segment_ids: Optional[jnp.ndarray] = None,
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Naive full-map causal attention that also returns block row-max logits.
+
+    Used only at test scale (materialises [B, H, Lq, Lk]).
+    segment_ids: [B, L] packing document ids; attention never crosses docs.
+    """
+    b, lq, h, dh = q.shape
+    lk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    nb = lk // gt_block_size
+    kf = jnp.repeat(k, g, axis=2) if g > 1 else k
+    vf = jnp.repeat(v, g, axis=2) if g > 1 else v
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) / math.sqrt(dh)
+    mask = jnp.arange(lq)[:, None] >= jnp.arange(lk)[None, :]
+    if segment_ids is not None:
+        mask = mask[None] & (segment_ids[:, :, None] == segment_ids[:, None, :])
+        s = jnp.where(mask[:, None], s, NEG_INF)
+    else:
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, vf.astype(jnp.float32)).astype(q.dtype)
+    blockmax = jnp.max(s.reshape(b, h, lq, nb, gt_block_size), axis=-1)
+    return o, blockmax

@@ -1,0 +1,420 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run driver (deliverable e) + roofline extraction (g).
+
+For every (architecture x input shape x mesh) cell:
+    with mesh:
+        lowered  = jax.jit(step_fn).lower(*abstract_args)   # sharded SDS args
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective-bytes(HLO text)
+
+Emits one JSON record per cell into --out (incremental: reruns skip done
+cells unless --force). Roofline terms per DESIGN.md / v5e constants.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_0_6b --shape decode_32k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out benchmarks/dryrun_results.json]
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+
+import repro.configs as configs
+from repro.config import SHAPES
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes of every collective op in the HLO text."""
+    out = {c: 0 for c in _COLLECTIVES}
+    out["_count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(?:\([^)]*\)|\S+)\s+([\w\-]+)(?:-start)?\(",
+                     ls)
+        if not m:
+            continue
+        op = m.group(1)
+        if op.endswith("-start"):
+            op = op[:-6]
+        if op not in _COLLECTIVES:
+            continue
+        # operand section: text inside the top-level parens after the opcode
+        try:
+            args = ls.split("(", 2)[2] if ls.count("= (") else ls.split("(", 1)[1]
+        except IndexError:
+            continue
+        args = args.rsplit(")", 1)[0]
+        # typed operands look like "bf16[8,128]{1,0} %name"
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(args):
+            if dt in _DTYPE_BYTES:
+                total += _shape_bytes(dt, dims)
+        if total == 0:
+            # untyped operand refs: fall back to the result shape
+            mres = _SHAPE_RE.search(ls.split("=", 1)[1])
+            if mres:
+                total = _shape_bytes(*mres.groups())
+        out[op] += total
+        out["_count"] += 1
+    out["total"] = sum(out[c] for c in _COLLECTIVES)
+    return out
+
+
+_OP_RE = re.compile(r"=\s*(?:\([^)]*\)|\S+)\s+([\w\-]+)\(")
+
+
+def dus_gather_byte_correction(hlo_text: str) -> float:
+    """Bytes over-charged by XLA's cost model for slice-like ops.
+
+    Measured on this backend (see EXPERIMENTS.md §Roofline): a
+    dynamic-update-slice is charged ~2x the FULL operand (real aliased
+    traffic ~2x the update); gather/dynamic-slice are charged the full
+    operand + output (real traffic ~2x the output). The correction is the
+    difference, summed over all such ops in the compiled HLO; subtracting
+    it from `bytes accessed` gives the honest memory-roofline numerator
+    for decode steps that update/read KV caches in place.
+    """
+    corr = 0.0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = _OP_RE.search(ls)
+        if not m:
+            continue
+        op = m.group(1)
+        if op not in ("dynamic-update-slice", "gather", "dynamic-slice",
+                      "scatter"):
+            continue
+        shapes = _SHAPE_RE.findall(ls)
+        if not shapes:
+            continue
+        sizes = [_shape_bytes(dt, dims) for dt, dims in shapes
+                 if dt in _DTYPE_BYTES]
+        if not sizes:
+            continue
+        res = sizes[0]
+        ops = sizes[1:]
+        if op == "dynamic-update-slice" and len(ops) >= 2:
+            full, upd = ops[0], ops[1]
+            corr += max(2.0 * (full - upd), 0.0)
+        elif op == "scatter" and len(ops) >= 3:
+            # charged ~operand+output; real aliased traffic ~2x the updates
+            full, upd = ops[0], ops[2]
+            corr += max(2.0 * (full - upd), 0.0)
+        elif op in ("gather", "dynamic-slice") and ops:
+            corr += max(ops[0] - res, 0.0)
+    return corr
+
+
+def scorelike_bytes(hlo_text: str, seq_len: int) -> float:
+    """Result bytes of attention-score-shaped buffers ([.., Lq_chunk, S]).
+
+    The jnp fallback attention materialises QK^T/softmax chains in HBM; the
+    Pallas flash kernels (gate_gt_fwd / block_sparse_decode) keep these
+    tiles in VMEM on the real TPU. Subtracting this sum from the memory
+    numerator gives the Pallas-projected roofline (§Perf P2 iter 4) —
+    reported separately, never silently.
+    """
+    total = 0.0
+    in_fused = False
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # skip fused-computation bodies: their intermediates live in
+        # registers/VMEM and contribute nothing to `bytes accessed`
+        if ls.startswith("%fused_") or ls.startswith("fused_"):
+            in_fused = True
+        if in_fused:
+            if ls.startswith("}") or ls == "}":
+                in_fused = False
+            continue
+        m = _OP_RE.search(ls)
+        if not m or m.group(1) in ("parameter", "tuple", "fusion"):
+            continue
+        shp = _SHAPE_RE.findall(ls.split("=", 1)[1].split("(", 1)[0]) \
+            if "=" in ls else []
+        for dt, dims in shp:
+            if dt not in _DTYPE_BYTES or not dims:
+                continue
+            d = [int(x) for x in dims.split(",")]
+            # score tile: [..., q_chunk-ish, S-ish] with >=3 dims — excludes
+            # weights (2D / last dim != S), logits (last dim = vocab > S)
+            if (len(d) >= 3 and seq_len // 2 <= d[-1] <= seq_len
+                    and d[-2] >= 256):
+                total += _shape_bytes(dt, dims)
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D for pretrain-mode training,
+    2*N_active*D for distill-mode training (gate-only backward: the base
+    forward dominates) and prefill, 2*N_active per token for decode."""
+    n_dense, n_active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        distill = cfg.gate.enabled and cfg.has_attention and cfg.is_decoder
+        return (2.0 if distill else 6.0) * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch          # one decode token
+
+
+def param_counts(cfg):
+    """(total params, active params) — active excludes non-routed experts."""
+    d, v, L = cfg.d_model, cfg.vocab_size, cfg.num_layers
+    dh = cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    emb = v * d * (1 if cfg.tie_embeddings else 2)
+    if cfg.family == "ssm":
+        di = cfg.ssm.expand * d
+        n = cfg.ssm.state_dim
+        dtr = -(-d // 16)
+        per = d * 2 * di + di * (dtr + 2 * n) + dtr * di + di * n + di * d
+        return emb + L * per, emb + L * per
+    attn = d * (h + 2 * hkv) * dh + h * dh * d
+    if cfg.family == "moe":
+        e, k, sh, f = (cfg.moe.n_experts, cfg.moe.top_k,
+                       cfg.moe.n_shared_experts, cfg.moe.expert_d_ff)
+        expert = 3 * d * f
+        mlp_total = e * expert + 3 * d * sh * f
+        mlp_active = k * expert + 3 * d * sh * f
+        total = emb + L * (attn + mlp_total) + L * d * e
+        active = emb + L * (attn + mlp_active) + L * d * e
+        return total, active
+    if cfg.family == "hybrid":
+        di = cfg.ssm.expand * d
+        n = cfg.ssm.state_dim
+        nh = di // 64
+        per_m = d * (2 * di + 2 * n + nh) + di * d
+        n_units = L // cfg.hybrid_period
+        shared = attn + 3 * d * cfg.d_ff
+        tot = emb + L * per_m + shared
+        act = emb + L * per_m + n_units * shared        # shared block reused
+        return tot, act
+    mlp = 3 * d * cfg.d_ff if cfg.activation in ("swiglu", "geglu") else 2 * d * cfg.d_ff
+    if cfg.family == "vlm":
+        n_units = L // cfg.cross_attn_period
+        n_self = n_units * (cfg.cross_attn_period - 1)
+        tot = emb + n_self * (attn + mlp) + n_units * (attn + mlp)
+        return tot, tot
+    return emb + L * (attn + mlp), emb + L * (attn + mlp)
+
+
+def probe_unit(cfg) -> int:
+    """Smallest layer count that tiles the stack (hybrid/vlm: one unit)."""
+    if cfg.hybrid_period:
+        return cfg.hybrid_period
+    if cfg.cross_attn_period:
+        return cfg.cross_attn_period
+    return 1
+
+
+def probe_costs(cfg, shape, mesh) -> Dict:
+    """Exact per-layer costs via two UNROLLED shallow lowerings.
+
+    XLA's cost_analysis counts a `while` (lax.scan) body once, so the
+    full scanned program under-reports FLOPs/bytes by ~num_layers. We lower
+    the same cell with num_layers=p and 2p unrolled (p = probe unit), take
+    the difference as the exact per-unit cost, and extrapolate:
+        total(L) = m(p) + (L/p - 1) * (m(2p) - m(p)).
+    Collective bytes extrapolate the same way (per-layer collectives live
+    in the layer body; embed/head collectives are in the base term).
+    """
+    from repro.launch import specs as S
+    p = probe_unit(cfg)
+    out = {}
+    for n in (p, 2 * p):
+        # larger q-chunks: identical totals, 4x fewer unrolled bodies
+        c2 = cfg.replace(num_layers=n, scan_layers=False,
+                         q_chunk=max(cfg.q_chunk, 4096))
+        fn, args = S.cell_fn_and_specs(c2, shape, mesh)
+        donate = getattr(fn, "donate_argnums", ())
+        compiled = jax.jit(fn, donate_argnums=donate).lower(*args).compile()
+        cost = compiled.cost_analysis() or {}
+        txt = compiled.as_text()
+        coll = collective_bytes(txt)
+        raw_b = float(cost.get("bytes accessed", 0.0))
+        adj_b = max(raw_b - dus_gather_byte_correction(txt), 0.0)
+        flash_b = max(adj_b - scorelike_bytes(txt, shape.seq_len), 0.0)
+        out[n] = (float(cost.get("flops", 0.0)), raw_b,
+                  float(coll["total"]), adj_b, flash_b)
+    L = cfg.num_layers
+    base, two = out[p], out[2 * p]
+    per = tuple(b - a for a, b in zip(base, two))
+    scale = L / p - 1.0
+    tot = tuple(a + scale * d for a, d in zip(base, per))
+    return {"probe_unit": p,
+            "flops": tot[0], "bytes": tot[1], "collective": tot[2],
+            "bytes_adjusted": tot[3], "bytes_flash": tot[4],
+            "per_layer_flops": per[0] / p, "per_layer_bytes": per[1] / p,
+            "per_layer_collective": per[2] / p,
+            "base_flops": base[0] - per[0], "probe_l": [p, 2 * p]}
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             verbose: bool = True) -> Dict:
+    import dataclasses as _dc
+    import os as _os
+    from repro.launch import specs as S
+    cfg = configs.get(arch)
+    if _os.environ.get("REPRO_MOE_IMPL") == "shard_map" and cfg.moe.n_experts:
+        cfg = cfg.replace(moe=_dc.replace(cfg.moe, dispatch="shard_map"))
+    if _os.environ.get("REPRO_EP_MAJOR") == "1" and cfg.moe.n_experts:
+        cfg = cfg.replace(ep_major=True)
+    if _os.environ.get("REPRO_REMAT"):
+        cfg = cfg.replace(remat=_os.environ["REPRO_REMAT"])
+    if _os.environ.get("REPRO_QCHUNK"):
+        cfg = cfg.replace(q_chunk=int(_os.environ["REPRO_QCHUNK"]))
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "chips": n_chips, "ok": False}
+    t0 = time.time()
+    try:
+        with mesh:
+            fn, args = S.cell_fn_and_specs(cfg, shape, mesh)
+            donate = getattr(fn, "donate_argnums", ())
+            lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            txt = compiled.as_text()
+            coll = collective_bytes(txt)
+        flops = float((cost or {}).get("flops", 0.0))
+        bytes_acc = float((cost or {}).get("bytes accessed", 0.0))
+        mflops = model_flops(cfg, shape)
+        rec.update({
+            "ok": True,
+            "t_lower_s": round(t_lower, 2),
+            "t_compile_s": round(t_compile, 2),
+            "hlo_flops": flops,
+            "hlo_bytes": bytes_acc,
+            "collectives": coll,
+            "model_flops": mflops,
+            "hlo_size_chars": len(txt),
+        })
+        # probe: exact per-layer costs (scan bodies are costed once by XLA).
+        # single-pod only: the §Roofline table is single-pod; the multi-pod
+        # pass is the sharding/compile proof.
+        try:
+            if mesh_kind == "multi":
+                raise RuntimeError("probe skipped on multi-pod (by design)")
+            with mesh:
+                pr = probe_costs(cfg, shape, mesh)
+            rec["probe"] = pr
+            flops = pr["flops"]
+            bytes_acc = pr.get("bytes_adjusted", pr["bytes"])
+            coll = dict(coll)
+            coll["total"] = pr["collective"]
+            rec["probe_used"] = True
+        except Exception as pe:  # noqa: BLE001
+            rec["probe_error"] = f"{type(pe).__name__}: {pe}"
+        if mem is not None:
+            for k in ("temp_size_in_bytes", "argument_size_in_bytes",
+                      "output_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+        # roofline terms (seconds). cost_analysis of the partitioned module
+        # is per-device; collective bytes likewise.
+        rec["t_compute"] = flops / PEAK_FLOPS_BF16
+        rec["t_memory"] = bytes_acc / HBM_BW
+        rec["t_collective"] = coll["total"] / ICI_BW
+        terms = {"compute": rec["t_compute"], "memory": rec["t_memory"],
+                 "collective": rec["t_collective"]}
+        rec["bottleneck"] = max(terms, key=terms.get)
+        rec["useful_flops_ratio"] = (mflops / n_chips) / flops if flops else 0.0
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_kind}] OK "
+                  f"compile={t_compile:.1f}s flops/dev={flops:.3e} "
+                  f"bytes/dev={bytes_acc:.3e} coll={coll['total']:.3e} "
+                  f"bottleneck={rec['bottleneck']}")
+            if mem is not None:
+                print(f"  memory_analysis: args={rec.get('argument_size_in_bytes')} "
+                      f"temp={rec.get('temp_size_in_bytes')}")
+    except Exception as e:  # noqa: BLE001
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_kind}] FAIL: {rec['error']}")
+    return rec
+
+
+def load_results(path: str) -> Dict[str, Dict]:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="benchmarks/dryrun_results.json")
+    args = ap.parse_args()
+
+    cells = []
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        for aid in configs.ARCH_IDS:
+            for shp in configs.shapes_for(aid):
+                for m in meshes:
+                    cells.append((aid, shp.name, m))
+    else:
+        assert args.arch and args.shape
+        for m in meshes:
+            cells.append((configs.canon(args.arch), args.shape, m))
+
+    results = load_results(args.out)
+    for (aid, shp, m) in cells:
+        key = f"{aid}|{shp}|{m}"
+        if not args.force and results.get(key, {}).get("ok"):
+            print(f"[{key}] cached OK, skip")
+            continue
+        rec = run_cell(aid, shp, m)
+        results[key] = rec
+        with open(args.out, "w") as f:
+            json.dump(results, f, indent=1)
+    n_ok = sum(1 for r in results.values() if r.get("ok"))
+    print(f"\n{n_ok}/{len(results)} cells OK -> {args.out}")
+    sys.exit(0 if n_ok == len(results) else 1)
+
+
+if __name__ == "__main__":
+    main()

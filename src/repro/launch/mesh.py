@@ -1,0 +1,26 @@
+"""Production mesh construction (dry-run target: TPU v5e pods).
+
+A FUNCTION, not a module constant — importing this module never touches
+jax device state (required: smoke tests must see 1 CPU device; only
+dryrun.py sets XLA_FLAGS for 512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """1-device mesh with the production axis names (tests)."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+# TPU v5e hardware constants (roofline denominators)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link (~per-chip usable)

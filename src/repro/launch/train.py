@@ -1,0 +1,71 @@
+"""Distributed training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3_0_6b \
+        [--mode distill|pretrain] [--steps 100] [--reduced] \
+        [--batch 16] [--seq 4096] [--ckpt-dir /tmp/repro_ckpt]
+
+On a real TPU cluster this process runs per host (jax.distributed
+auto-initialises from the TPU environment); in this container it runs on
+CPU — use --reduced for a smoke-scale run. The loop carries the full
+fault-tolerance path: atomic async checkpoints, restore-on-failure,
+deterministic data resume, straggler watchdog (repro.train.loop).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+import repro.configs as configs
+from repro.config import OptimConfig, TrainConfig, reduced
+from repro.train import loop as train_loop
+
+
+def maybe_init_distributed() -> None:
+    """Initialise multi-host JAX when launched under a cluster scheduler
+    (TPU pods set the coordinator env vars; single-process otherwise)."""
+    import os
+    if os.environ.get("COORDINATOR_ADDRESS") or os.environ.get("MEGASCALE_COORDINATOR_ADDRESS"):
+        jax.distributed.initialize()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_0_6b")
+    ap.add_argument("--mode", default=None, choices=[None, "distill", "pretrain"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU smoke scale (tiny same-family config)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    maybe_init_distributed()
+    cfg = configs.get(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    gate_on = cfg.gate.enabled and cfg.has_attention and cfg.is_decoder
+    mode = args.mode or ("distill" if gate_on else "pretrain")
+    if mode == "distill" and not gate_on:
+        raise SystemExit(f"{args.arch}: no gate to distill (family {cfg.family})")
+
+    seq = args.seq or (512 if args.reduced else 4096)
+    bsz = args.batch or (4 if args.reduced else 16)
+    tcfg = TrainConfig(
+        mode=mode, seq_len=seq, global_batch=bsz, steps=args.steps,
+        checkpoint_every=args.ckpt_every, checkpoint_dir=args.ckpt_dir,
+        log_every=10,
+        optim=OptimConfig(lr=args.lr, total_steps=args.steps,
+                          warmup_steps=max(args.steps // 20, 1)))
+    print(f"train: arch={cfg.arch_id} mode={mode} steps={args.steps} "
+          f"batch={bsz} seq={seq} devices={jax.device_count()}")
+    state, hist = train_loop.run_training(cfg, tcfg)
+    key = "kl" if mode == "distill" else "ce"
+    print(f"done. {key}: {hist[0][key]:.4f} -> {hist[-1][key]:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,280 @@
+"""Mamba blocks: v1 (selective scan — falcon-mamba-7b) and v2 (SSD chunked
+matmul form — zamba2). Attention-free; SeerAttention-R is inapplicable here
+(no KV cache / attention map to gate) — see DESIGN.md §5.
+
+Mamba1 sequence path uses a chunked associative scan (O(chunk) materialised
+state, matmul-free inner update). Mamba2 uses the SSD chunk algorithm whose
+inner ops are matmuls (MXU-friendly on TPU). Both expose a single-token
+recurrent decode with O(1) state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.common import layer_scan, init_linear, init_rmsnorm, linear, rms_norm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Mamba1 (selective scan)
+# ---------------------------------------------------------------------------
+
+def _dt_rank(d_model: int) -> int:
+    return -(-d_model // 16)
+
+
+def init_mamba1(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    n = cfg.ssm.state_dim
+    dtr = _dt_rank(d)
+    ks = jax.random.split(key, 7)
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {
+        "in_proj": init_linear(ks[0], d, 2 * di, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_dim, di), jnp.float32)
+                   / math.sqrt(cfg.ssm.conv_dim)).astype(dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": init_linear(ks[2], di, dtr + 2 * n, cfg.dtype),
+        "dt_proj": init_linear(ks[3], dtr, di, cfg.dtype),
+        "dt_bias": jnp.zeros((di,), jnp.float32),
+        # A_log init: log(1..n) per channel (S4D-real init)
+        "A_log": jnp.broadcast_to(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)),
+                                  (di, n)).copy(),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": init_linear(ks[4], di, d, cfg.dtype),
+    }
+    return p
+
+
+def _causal_conv_full(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """Depthwise causal conv. x [B, L, di]; w [K, di]."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    return out + b
+
+
+def _ssm_scan_chunked(a: jnp.ndarray, bx: jnp.ndarray, c: jnp.ndarray,
+                      h0: jnp.ndarray, chunk: int, unroll: bool = False):
+    """Selective-scan h_t = a_t*h_{t-1} + bx_t; y_t = sum_n c_t[n] h_t[:,n].
+
+    a, bx: [B, L, di, n]; c: [B, L, n]; h0: [B, di, n].
+    Returns y [B, L, di], h_final. Chunked: the [B, chunk, di, n] state is
+    the only large intermediate.
+    """
+    bsz, l, di, n = a.shape
+    nchunks = l // chunk
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    def one_chunk(h, inp):
+        ac, bxc, cc = inp                      # [B, chunk, di, n], [B,chunk,n]
+        aa, bb = jax.lax.associative_scan(combine, (ac, bxc), axis=1)
+        h_t = aa * h[:, None] + bb             # [B, chunk, di, n]
+        y = jnp.einsum("bldn,bln->bld", h_t, cc)
+        return h_t[:, -1], y
+
+    ar = a.reshape(bsz, nchunks, chunk, di, n).swapaxes(0, 1)
+    bxr = bx.reshape(bsz, nchunks, chunk, di, n).swapaxes(0, 1)
+    cr = c.reshape(bsz, nchunks, chunk, n).swapaxes(0, 1)
+    h, ys = layer_scan(one_chunk, h0, (ar, bxr, cr), unroll=unroll)
+    y = ys.swapaxes(0, 1).reshape(bsz, l, di)
+    return y, h
+
+
+def mamba1_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                h0: Optional[jnp.ndarray] = None):
+    """x [B, L, d] -> (y [B, L, d], (conv_state, ssm_state))."""
+    bsz, l, d = x.shape
+    di = cfg.ssm.expand * d
+    n = cfg.ssm.state_dim
+    dtr = _dt_rank(d)
+    xz = linear(p["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xc = jax.nn.silu(_causal_conv_full(xs, p["conv_w"], p["conv_b"]))
+    proj = linear(p["x_proj"], xc)
+    dt_in, b_in, c_in = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(linear(p["dt_proj"], dt_in).astype(jnp.float32)
+                         + p["dt_bias"])                       # [B,L,di]
+    a_mat = -jnp.exp(p["A_log"])                               # [di, n]
+    da = jnp.exp(dt[..., None] * a_mat)                        # [B,L,di,n]
+    bx = (dt * xc.astype(jnp.float32))[..., None] * \
+        b_in.astype(jnp.float32)[:, :, None, :]                # [B,L,di,n]
+    h0 = h0 if h0 is not None else jnp.zeros((bsz, di, n), jnp.float32)
+    # NOTE: chunk scan stays a lax.scan even in the probe path — unrolling
+    # 128 associative-scan bodies is a pathological CPU compile, and the
+    # chunk body is a small fraction of the layer cost (projections
+    # dominate). The probe under-counts it by n_chunks; recorded in
+    # EXPERIMENTS.md §Dry-run as a known fidelity bound for SSM cells.
+    y, h = _ssm_scan_chunked(da, bx, c_in.astype(jnp.float32), h0,
+                             min(cfg.ssm.chunk_size, l), unroll=False)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    conv_state = xs[:, -(cfg.ssm.conv_dim - 1):]               # [B,K-1,di]
+    return linear(p["out_proj"], y), (conv_state, h)
+
+
+def mamba1_step(p: Params, x1: jnp.ndarray, cfg: ModelConfig,
+                conv_state: jnp.ndarray, h: jnp.ndarray):
+    """x1 [B, 1, d]; conv_state [B, K-1, di]; h [B, di, n]."""
+    bsz = x1.shape[0]
+    d = x1.shape[-1]
+    n = cfg.ssm.state_dim
+    dtr = _dt_rank(d)
+    xz = linear(p["in_proj"], x1)[:, 0]
+    xs, z = jnp.split(xz, 2, axis=-1)                          # [B, di]
+    window = jnp.concatenate([conv_state, xs[:, None]], axis=1)  # [B,K,di]
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])
+    proj = linear(p["x_proj"], xc)
+    dt_in, b_in, c_in = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus((dt_in @ p["dt_proj"]["w"]).astype(jnp.float32)
+                         + p["dt_bias"])                       # [B, di]
+    a_mat = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt[..., None] * a_mat)                        # [B,di,n]
+    bx = (dt * xc.astype(jnp.float32))[..., None] * \
+        b_in.astype(jnp.float32)[:, None, :]
+    h_new = da * h + bx
+    y = jnp.einsum("bdn,bn->bd", h_new, c_in.astype(jnp.float32))
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x1.dtype)
+    return linear(p["out_proj"], y)[:, None], (window[:, 1:], h_new)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, chunked matmul algorithm)
+# ---------------------------------------------------------------------------
+
+def _m2_dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    d = cfg.d_model
+    di = cfg.ssm.expand * d
+    hd = 64                                       # mamba2 head dim
+    nh = cfg.ssm.n_ssm_heads or di // hd
+    return di, hd, nh, cfg.ssm.state_dim
+
+
+def init_mamba2(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    di, hd, nh, n = _m2_dims(cfg)
+    ks = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.dtype)
+    # in_proj emits [z (di), x (di), B (n), C (n), dt (nh)]
+    p: Params = {
+        "in_proj": init_linear(ks[0], d, 2 * di + 2 * n + nh, cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm.conv_dim, di + 2 * n),
+                                     jnp.float32)
+                   / math.sqrt(cfg.ssm.conv_dim)).astype(dt),
+        "conv_b": jnp.zeros((di + 2 * n,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "norm": init_rmsnorm(di, cfg.dtype),
+        "out_proj": init_linear(ks[2], di, d, cfg.dtype),
+    }
+    return p
+
+
+def _ssd_chunks(xh, bmat, cmat, loga, h0, chunk, unroll=False):
+    """SSD chunked algorithm (all-matmul inner ops).
+
+    xh   [B, L, nh, hd]  (dt-scaled inputs)
+    bmat [B, L, n], cmat [B, L, n]  (shared across heads, n_groups=1)
+    loga [B, L, nh]      (log decay = dt * A, <= 0)
+    h0   [B, nh, hd, n]
+    Returns y [B, L, nh, hd], h_final.
+    """
+    bsz, l, nh, hd = xh.shape
+    n = bmat.shape[-1]
+    nc = l // chunk
+
+    xr = xh.reshape(bsz, nc, chunk, nh, hd).swapaxes(0, 1)
+    br = bmat.reshape(bsz, nc, chunk, n).swapaxes(0, 1)
+    cr = cmat.reshape(bsz, nc, chunk, n).swapaxes(0, 1)
+    lr = loga.reshape(bsz, nc, chunk, nh).swapaxes(0, 1)
+
+    def one_chunk(h, inp):
+        xc, bc, cc, lc = inp
+        cum = jnp.cumsum(lc, axis=1)                       # [B,Q,nh]
+        # intra-chunk: scores[t,s] = (C_t . B_s) * exp(cum_t - cum_s), t>=s
+        cb = jnp.einsum("btn,bsn->bts", cc, bc)            # [B,Q,Q]
+        decay = cum[:, :, None, :] - cum[:, None, :, :]    # [B,Q,Q,nh]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lmask = jnp.where(tri[None, :, :, None], jnp.exp(decay), 0.0)
+        y_intra = jnp.einsum("bts,btsh,bshd->bthd", cb, lmask, xc)
+        # inter-chunk: y_t += C_t . (exp(cum_t) * h_prev)
+        y_inter = jnp.einsum("btn,bthdn->bthd",
+                             cc, jnp.exp(cum)[..., None, None] *
+                             h[:, None])                    # h [B,nh,hd,n]
+        # state update: h' = exp(cum_Q) h + sum_s exp(cum_Q - cum_s) x_s B_s
+        tail = jnp.exp(cum[:, -1:, :] - cum)               # [B,Q,nh]
+        dstate = jnp.einsum("bshd,bsn,bsh->bhdn", xc, bc, tail)
+        h_new = jnp.exp(cum[:, -1])[..., None, None] * h + dstate
+        return h_new, y_intra + y_inter
+
+    h, ys = layer_scan(one_chunk, h0, (xr, br, cr, lr), unroll=unroll)
+    return ys.swapaxes(0, 1).reshape(bsz, l, nh, hd), h
+
+
+def mamba2_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
+                h0: Optional[jnp.ndarray] = None):
+    bsz, l, d = x.shape
+    di, hd, nh, n = _m2_dims(cfg)
+    zxbcdt = linear(p["in_proj"], x)
+    z, xs, bc, dt_in = jnp.split(zxbcdt, [di, 2 * di, 2 * di + 2 * n], axis=-1)
+    xbc = jnp.concatenate([xs, bc], axis=-1)
+    xbc = jax.nn.silu(_causal_conv_full(xbc, p["conv_w"], p["conv_b"]))
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # [B,L,nh]
+    a = -jnp.exp(p["A_log"])                                        # [nh]
+    loga = dt * a                                                   # [B,L,nh]
+    xh = xs.reshape(bsz, l, nh, hd).astype(jnp.float32) * dt[..., None]
+    h0 = h0 if h0 is not None else jnp.zeros((bsz, nh, hd, n), jnp.float32)
+    # see note in mamba1_full: chunk scan never unrolls
+    y, h = _ssd_chunks(xh, bmat.astype(jnp.float32),
+                       cmat.astype(jnp.float32), loga, h0,
+                       min(cfg.ssm.chunk_size, l), unroll=False)
+    y = y + p["D"][:, None] * xs.reshape(bsz, l, nh, hd).astype(jnp.float32)
+    y = y.reshape(bsz, l, di)
+    y = (y * jax.nn.silu(z.astype(jnp.float32)))
+    y = rms_norm(p["norm"], y.astype(x.dtype), cfg.norm_eps)
+    # conv cache stores the raw (pre-conv) input tail
+    raw_xbc = jnp.concatenate(
+        [zxbcdt[:, :, di:2 * di], zxbcdt[:, :, 2 * di:2 * di + 2 * n]], axis=-1)
+    conv_state = raw_xbc[:, -(cfg.ssm.conv_dim - 1):]
+    return linear(p["out_proj"], y), (conv_state, h)
+
+
+def mamba2_step(p: Params, x1: jnp.ndarray, cfg: ModelConfig,
+                conv_state: jnp.ndarray, h: jnp.ndarray):
+    bsz = x1.shape[0]
+    d = x1.shape[-1]
+    di, hd, nh, n = _m2_dims(cfg)
+    zxbcdt = linear(p["in_proj"], x1)[:, 0]
+    z, xs_raw, bc_raw, dt_in = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + 2 * n], axis=-1)
+    raw = jnp.concatenate([xs_raw, bc_raw], axis=-1)        # [B, di+2n]
+    window = jnp.concatenate([conv_state, raw[:, None]], axis=1)
+    xbc = jax.nn.silu(jnp.einsum("bkd,kd->bd", window, p["conv_w"]) + p["conv_b"])
+    xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # [B,nh]
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)                                            # [B,nh]
+    xh = xs.reshape(bsz, nh, hd).astype(jnp.float32) * dt[..., None]
+    h_new = da[..., None, None] * h + \
+        jnp.einsum("bhd,bn->bhdn", xh, bmat.astype(jnp.float32))
+    y = jnp.einsum("bhdn,bn->bhd", h_new, cmat.astype(jnp.float32))
+    y = y + p["D"][:, None] * xs.reshape(bsz, nh, hd).astype(jnp.float32)
+    y = y.reshape(bsz, di)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(p["norm"], y.astype(x1.dtype), cfg.norm_eps)
+    return linear(p["out_proj"], y)[:, None], (window[:, 1:], h_new)

@@ -1,0 +1,36 @@
+"""Family dispatch: a uniform functional API over all model families."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from repro.config import ModelConfig
+from repro.models import hybrid, ssm_lm
+from repro.models import transformer as tf
+
+
+class ModelApi(NamedTuple):
+    init_params: Callable          # (key, cfg) -> params
+    forward: Callable              # (params, batch, cfg, *, mode, shard) -> (loss, metrics)
+    init_decode_state: Callable    # (cfg, batch_size, max_len) -> state
+    prefill: Callable              # (params, batch, cfg, max_len, shard) -> (logits, state)
+    decode_step: Callable          # (params, state, token, cfg, *, sparse, sparse_impl, shard)
+
+
+_TF_API = ModelApi(tf.init_lm, tf.lm_forward, tf.init_decode_state,
+                   tf.lm_prefill, tf.lm_decode_step)
+_SSM_API = ModelApi(ssm_lm.init_lm, ssm_lm.lm_forward,
+                    ssm_lm.init_decode_state, ssm_lm.lm_prefill,
+                    ssm_lm.lm_decode_step)
+_HYBRID_API = ModelApi(hybrid.init_lm, hybrid.lm_forward,
+                       hybrid.init_decode_state, hybrid.lm_prefill,
+                       hybrid.lm_decode_step)
+
+
+def get_api(cfg: ModelConfig) -> ModelApi:
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        return _TF_API
+    if cfg.family == "ssm":
+        return _SSM_API
+    if cfg.family == "hybrid":
+        return _HYBRID_API
+    raise ValueError(f"unknown family {cfg.family}")

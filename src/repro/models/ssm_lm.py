@@ -1,0 +1,119 @@
+"""Attention-free Mamba1 LM (falcon-mamba-7b family).
+
+SeerAttention-R is inapplicable (no attention); decode is O(1)-state so
+long_500k decode is native. Layers scanned like the transformer stack.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import mamba
+from repro.models.common import (cross_entropy_loss, init_linear,
+                                 init_rmsnorm, layer_scan, linear, rms_norm)
+
+Params = Dict[str, Any]
+
+
+class SSMDecodeState(NamedTuple):
+    conv: jnp.ndarray      # [L, B, K-1, di]
+    h: jnp.ndarray         # [L, B, di, n]
+    cur_len: jnp.ndarray   # [B]
+
+
+def _init_block(key, cfg: ModelConfig) -> Params:
+    return {"ln": init_rmsnorm(cfg.d_model, cfg.dtype),
+            "mixer": mamba.init_mamba1(key, cfg)}
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 4)
+    dt = jnp.dtype(cfg.dtype)
+    p: Params = {
+        "embed": {"w": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                          jnp.float32) * 0.02).astype(dt)},
+        "blocks": jax.vmap(lambda k: _init_block(k, cfg))(
+            jax.random.split(ks[1], cfg.num_layers)),
+        "final_norm": init_rmsnorm(cfg.d_model, cfg.dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(ks[2], cfg.d_model, cfg.vocab_size, cfg.dtype)
+    return p
+
+
+def _remat(fn, cfg):
+    if cfg.remat == "none":
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def lm_forward(params: Params, batch, cfg: ModelConfig, *, mode="pretrain",
+               shard=None):
+    x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+
+    def body(x, bp):
+        y, _ = mamba.mamba1_full(bp["mixer"], rms_norm(bp["ln"], x, cfg.norm_eps), cfg)
+        return x + y, None
+
+    x, _ = layer_scan(_remat(body, cfg), x, params["blocks"],
+                      unroll=not cfg.scan_layers)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = (x @ params["embed"]["w"].T if cfg.tie_embeddings
+              else linear(params["lm_head"], x))
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+    return loss, {"ce": loss}
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int = 0
+                      ) -> SSMDecodeState:
+    di = cfg.ssm.expand * cfg.d_model
+    return SSMDecodeState(
+        conv=jnp.zeros((cfg.num_layers, batch, cfg.ssm.conv_dim - 1, di),
+                       jnp.dtype(cfg.dtype)),
+        h=jnp.zeros((cfg.num_layers, batch, di, cfg.ssm.state_dim),
+                    jnp.float32),
+        cur_len=jnp.zeros((batch,), jnp.int32))
+
+
+def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int = 0,
+               shard=None):
+    tokens = batch["tokens"]
+    b, l = tokens.shape
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)
+
+    def body(x, bp):
+        y, st = mamba.mamba1_full(bp["mixer"], rms_norm(bp["ln"], x, cfg.norm_eps), cfg)
+        return x + y, st
+
+    x, states = layer_scan(body, x, params["blocks"],
+                           unroll=not cfg.scan_layers)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1]
+    logits = (last @ params["embed"]["w"].T if cfg.tie_embeddings
+              else linear(params["lm_head"], last))
+    conv, h = states
+    st = SSMDecodeState(conv=conv.astype(jnp.dtype(cfg.dtype)), h=h,
+                        cur_len=jnp.full((b,), l, jnp.int32))
+    return logits, st
+
+
+def lm_decode_step(params: Params, state: SSMDecodeState, token, cfg,
+                   *, sparse=True, sparse_impl="ref", shard=None):
+    x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
+
+    def body(x1, inp):
+        bp, conv, h = inp
+        y, (conv2, h2) = mamba.mamba1_step(
+            bp["mixer"], rms_norm(bp["ln"], x1, cfg.norm_eps), cfg, conv, h)
+        return x1 + y, (conv2, h2)
+
+    x1, (conv, h) = layer_scan(body, x1, (params["blocks"], state.conv,
+                                          state.h), unroll=not cfg.scan_layers)
+    x1 = rms_norm(params["final_norm"], x1, cfg.norm_eps)
+    logits = (x1 @ params["embed"]["w"].T if cfg.tie_embeddings
+              else linear(params["lm_head"], x1))
+    return logits[:, 0], SSMDecodeState(conv.astype(state.conv.dtype), h,
+                                        state.cur_len + 1)

@@ -1,0 +1,589 @@
+"""Decoder (and encoder) transformer LM with SeerAttention-R gates.
+
+Covers families: dense, moe, vlm (cross-attn units), audio (encoder-only).
+SSM/hybrid live in repro.models.mamba / repro.models.hybrid.
+
+Layers are stacked and `lax.scan`ned (HLO stays compact at 61L/1T scale);
+remat policy from cfg. All forward fns are pure; params are dict pytrees.
+
+Modes:
+  lm_forward(..., mode="pretrain")  -> logits + CE-ready
+  lm_forward(..., mode="distill")   -> per-layer gate KL (base frozen; the
+                                       caller differentiates wrt gate params)
+  lm_prefill / lm_decode_step       -> serving with KV + K-compression cache
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import attngate as ag
+from repro.core import kcache as kc
+from repro.core import sparsity as sp
+from repro.core.distill import gate_kl_loss, ground_truth_from_blockmax
+from repro.kernels import ops
+from repro.models import moe as moe_mod
+from repro.models.common import (NEG_INF, apply_rope, chunked_attention,
+                                 cross_entropy_loss, decode_attention,
+                                 init_linear, init_mlp, init_rmsnorm,
+                                 layer_scan, linear, mlp, rms_norm)
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, *, with_gate: bool,
+                   cross: bool = False) -> Params:
+    dh = cfg.resolved_head_dim
+    h, hkv, d = cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    ks = jax.random.split(key, 5)
+    p: Params = {
+        "wq": init_linear(ks[0], d, h * dh, cfg.dtype),
+        "wk": init_linear(ks[1], d, hkv * dh, cfg.dtype),
+        "wv": init_linear(ks[2], d, hkv * dh, cfg.dtype),
+        "wo": init_linear(ks[3], h * dh, d, cfg.dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh, cfg.dtype)
+        p["k_norm"] = init_rmsnorm(dh, cfg.dtype)
+    if with_gate and not cross:
+        p["gate"] = ag.init_attngate(
+            ks[4], n_kv_heads=hkv, group=cfg.gqa_group, head_dim=dh,
+            cfg=cfg.gate, dtype=cfg.dtype)
+    return p
+
+
+def init_block(key, cfg: ModelConfig, *, with_gate: bool,
+               cross: bool = False) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.dtype),
+        "ln2": init_rmsnorm(cfg.d_model, cfg.dtype),
+        "attn": init_attention(k1, cfg, with_gate=with_gate, cross=cross),
+    }
+    if cfg.family == "moe" and not cross:
+        p["moe"] = moe_mod.init_moe(k2, cfg.d_model, cfg.moe,
+                                    cfg.activation, cfg.dtype)
+    else:
+        p["mlp"] = init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.activation, cfg.dtype)
+    return p
+
+
+def _stack_init(fn, key, n: int):
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    p: Params = {}
+    if cfg.family == "audio":
+        p["in_proj"] = init_linear(ks[0], cfg.n_audio_features, cfg.d_model,
+                                   cfg.dtype)
+        p["embed"] = {"w": (jax.random.normal(ks[4], (cfg.vocab_size, cfg.d_model),
+                                              jnp.float32) * 0.02).astype(jnp.dtype(cfg.dtype))}
+    else:
+        p["embed"] = {"w": (jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model),
+                                              jnp.float32) * 0.02).astype(jnp.dtype(cfg.dtype))}
+
+    gate_on = cfg.gate.enabled and cfg.has_attention and cfg.is_decoder
+    if cfg.cross_attn_period:
+        period = cfg.cross_attn_period
+        n_units = cfg.num_layers // period
+        n_self = period - 1
+
+        def unit_self(k):
+            return _stack_init(lambda kk: init_block(kk, cfg, with_gate=gate_on),
+                               k, n_self)
+        p["blocks"] = _stack_init(unit_self, ks[1], n_units)
+        p["cross_blocks"] = _stack_init(
+            lambda k: init_block(k, cfg, with_gate=False, cross=True),
+            ks[2], n_units)
+    else:
+        p["blocks"] = _stack_init(
+            lambda k: init_block(k, cfg, with_gate=gate_on),
+            ks[1], cfg.num_layers)
+    p["final_norm"] = init_rmsnorm(cfg.d_model, cfg.dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(ks[3], cfg.d_model, cfg.vocab_size, cfg.dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _qkv(p: Params, x: jnp.ndarray, cfg: ModelConfig):
+    b, l, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, l, cfg.n_heads, dh)
+    k = linear(p["wk"], x).reshape(b, l, cfg.n_kv_heads, dh)
+    v = linear(p["wv"], x).reshape(b, l, cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    return q, k, v
+
+
+def attention_full(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                   rope_positions: jnp.ndarray,
+                   segment_ids: Optional[jnp.ndarray],
+                   distill: bool, collect_cache: bool,
+                   collect_gate: bool = False):
+    """Returns (out, kl_loss, cache_tuple|None).
+
+    ``collect_gate`` (requires distill): the cache slot instead carries
+    {"glog", "gt", "qr", "kr"} for gate-quality evaluation (benchmarks).
+    """
+    b, l, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    q_nope, k_nope = q, k
+    qr = apply_rope(q, rope_positions, cfg.rope_theta)
+    kr = apply_rope(k, rope_positions, cfg.rope_theta)
+
+    gate_on = distill and "gate" in p
+    gt_bs = cfg.gate.block_size if gate_on else 0
+    o, bm = chunked_attention(
+        qr, kr, v, causal=cfg.causal, q_chunk=cfg.q_chunk,
+        logit_softcap=cfg.attn_logit_softcap, gt_block_size=gt_bs,
+        segment_ids=segment_ids, unroll_chunks=not cfg.scan_layers)
+
+    kl = jnp.zeros((), jnp.float32)
+    glog = gt = None
+    if gate_on:
+        gt = ground_truth_from_blockmax(jax.lax.stop_gradient(bm), cfg.gqa_group)
+        qg = ag.gate_q(p["gate"], jax.lax.stop_gradient(q_nope),
+                       rope_positions, cfg.gate)
+        kg = ag.gate_k(p["gate"], jax.lax.stop_gradient(k_nope), cfg.gate)
+        glog = ag.gate_logits(qg, kg)                     # [B,Hkv,L,nb]
+        mask = ag.block_causal_mask(jnp.arange(l), kg.shape[1],
+                                    cfg.gate.block_size)
+        glog = jnp.where(mask[None, None], glog, NEG_INF)
+        kl = gate_kl_loss(glog, gt)
+
+    cache = None
+    if collect_gate and gate_on:
+        cache = {"glog": glog, "gt": gt, "qr": qr, "kr": kr}
+    elif collect_cache:
+        kg_full = (ag.gate_k(p["gate"], k_nope, cfg.gate)
+                   if "gate" in p else None)
+        cache = (kr, v, kg_full)
+    return linear(p["wo"], o.reshape(b, l, -1)), kl, cache
+
+
+def cross_attention_full(p: Params, x: jnp.ndarray, ctx: jnp.ndarray,
+                         cfg: ModelConfig):
+    """Cross-attn into a fixed context (stub image embeddings). No RoPE on
+    the context side; queries use their own positions implicitly via the
+    self-attn layers, so cross-attn here is position-free (Flamingo-style)."""
+    b, l, _ = x.shape
+    dh = cfg.resolved_head_dim
+    q = linear(p["wq"], x).reshape(b, l, cfg.n_heads, dh)
+    k = linear(p["wk"], ctx).reshape(b, ctx.shape[1], cfg.n_kv_heads, dh)
+    v = linear(p["wv"], ctx).reshape(b, ctx.shape[1], cfg.n_kv_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
+        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
+    o, _ = chunked_attention(q, k, v, causal=False, q_chunk=cfg.q_chunk,
+                             unroll_chunks=not cfg.scan_layers)
+    return linear(p["wo"], o.reshape(b, l, -1))
+
+
+def block_fwd_full(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                   rope_positions, segment_ids, distill: bool,
+                   collect_cache: bool = False, collect_gate: bool = False,
+                   cross_ctx=None, is_cross: bool = False, shard=None):
+    h = rms_norm(p["ln1"], x, cfg.norm_eps)
+    if is_cross:
+        attn_out = cross_attention_full(p["attn"], h, cross_ctx, cfg)
+        kl, cache = jnp.zeros((), jnp.float32), None
+    else:
+        attn_out, kl, cache = attention_full(
+            p["attn"], h, cfg, rope_positions=rope_positions,
+            segment_ids=segment_ids, distill=distill,
+            collect_cache=collect_cache, collect_gate=collect_gate)
+    x = x + attn_out
+    h2 = rms_norm(p["ln2"], x, cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        b, l, d = h2.shape
+        y, aux = moe_mod.moe_mlp(p["moe"], h2.reshape(b * l, d), cfg.moe,
+                                 cfg.activation, shard)
+        y = y.reshape(b, l, d)
+    else:
+        y = mlp(p["mlp"], h2, cfg.activation)
+    return x + y, kl, aux, cache
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    policies = {
+        "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+        "dots_saveable": jax.checkpoint_policies.dots_saveable,
+        "full": jax.checkpoint_policies.everything_saveable,
+    }
+    return jax.checkpoint(fn, policy=policies[cfg.remat])
+
+
+def lm_backbone(params: Params, x: jnp.ndarray, cfg: ModelConfig, *,
+                rope_positions, segment_ids, distill: bool,
+                cross_ctx=None, collect_cache: bool = False,
+                collect_gate: bool = False, shard=None):
+    """Runs the layer stack. Returns (x, kl_sum, aux_sum, caches|None)."""
+
+    def self_body(carry, layer_p):
+        x, kl, aux = carry
+        y, l_kl, l_aux, cache = block_fwd_full(
+            layer_p, x, cfg, rope_positions=rope_positions,
+            segment_ids=segment_ids, distill=distill,
+            collect_cache=collect_cache, collect_gate=collect_gate,
+            shard=shard)
+        return (y, kl + l_kl, aux + l_aux), cache
+
+    self_body = _remat(self_body, cfg)
+    zero = jnp.zeros((), jnp.float32)
+
+    if cfg.cross_attn_period:
+        def unit_body(carry, unit_p):
+            (x, kl, aux) = carry
+            (x, kl, aux), caches = layer_scan(
+                self_body, (x, kl, aux), unit_p["self"],
+                unroll=not cfg.scan_layers)
+            x2, c_kl, c_aux, _ = block_fwd_full(
+                unit_p["cross"], x, cfg, rope_positions=rope_positions,
+                segment_ids=segment_ids, distill=False, cross_ctx=cross_ctx,
+                is_cross=True, shard=shard)
+            return (x2, kl + c_kl, aux + c_aux), caches
+
+        units = {"self": params["blocks"], "cross": params["cross_blocks"]}
+        (x, kl, aux), caches = layer_scan(unit_body, (x, zero, zero), units,
+                                          unroll=not cfg.scan_layers)
+        if collect_cache and caches is not None:
+            # [n_units, n_self, ...] -> [n_layers_self, ...]
+            caches = jax.tree.map(
+                lambda c: c.reshape((-1,) + c.shape[2:]), caches)
+        return x, kl, aux, caches
+
+    (x, kl, aux), caches = layer_scan(self_body, (x, zero, zero),
+                                      params["blocks"],
+                                      unroll=not cfg.scan_layers)
+    return x, kl, aux, caches
+
+
+def lm_forward(params: Params, batch: Dict[str, jnp.ndarray],
+               cfg: ModelConfig, *, mode: str = "pretrain", shard=None):
+    """mode: 'pretrain' -> (loss, metrics); 'distill' -> (kl_loss, metrics)."""
+    if cfg.family == "audio":
+        x = linear(params["in_proj"], batch["features"])
+    else:
+        x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+    b, l = x.shape[:2]
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(l), (b, l))
+    seg = batch.get("segment_ids")
+    cross_ctx = batch.get("image_embeds")
+
+    x, kl, aux, _ = lm_backbone(params, x, cfg, rope_positions=pos,
+                                segment_ids=seg, distill=(mode == "distill"),
+                                cross_ctx=cross_ctx, shard=shard)
+    if mode == "distill":
+        n_gate_layers = _n_gate_layers(cfg)
+        kl = kl / max(n_gate_layers, 1)
+        return kl + aux * 0.0, {"kl": kl}
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["w"].T
+    else:
+        logits = linear(params["lm_head"], x)
+    loss = cross_entropy_loss(logits, batch["labels"], batch.get("loss_mask"))
+    return loss + aux, {"ce": loss, "aux": aux}
+
+
+def _n_gate_layers(cfg: ModelConfig) -> int:
+    if not (cfg.gate.enabled and cfg.has_attention and cfg.is_decoder):
+        return 0
+    if cfg.cross_attn_period:
+        n_units = cfg.num_layers // cfg.cross_attn_period
+        return n_units * (cfg.cross_attn_period - 1)
+    return cfg.num_layers
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode with KV cache and K-compression cache
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    k_cache: jnp.ndarray          # [L, B, S_max, Hkv, Dh]  (post-rope)
+    v_cache: jnp.ndarray          # [L, B, S_max, Hkv, Dh]
+    kg_cache: Optional[jnp.ndarray]     # [L, B, nb_max, Hkv, Dg]
+    kg_n: Optional[jnp.ndarray]         # [L, B]
+    cur_len: jnp.ndarray          # [B]
+    cross_k: Optional[jnp.ndarray] = None   # [Lc, B, n_img, Hkv, Dh]
+    cross_v: Optional[jnp.ndarray] = None
+
+
+def n_self_layers(cfg: ModelConfig) -> int:
+    if cfg.cross_attn_period:
+        return (cfg.num_layers // cfg.cross_attn_period) * (cfg.cross_attn_period - 1)
+    return cfg.num_layers
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None) -> DecodeState:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    dh, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    nl = n_self_layers(cfg)
+    nb_max = max_len // cfg.gate.block_size
+    gate_on = cfg.gate.enabled
+    kg = (jnp.zeros((nl, batch, nb_max, hkv, cfg.gate.d_gate), dt)
+          if gate_on else None)
+    kg_n = jnp.zeros((nl, batch), jnp.int32) if gate_on else None
+    cross = None
+    if cfg.cross_attn_period:
+        n_units = cfg.num_layers // cfg.cross_attn_period
+        cross = jnp.zeros((n_units, batch, cfg.n_image_tokens, hkv, dh), dt)
+    return DecodeState(
+        k_cache=jnp.zeros((nl, batch, max_len, hkv, dh), dt),
+        v_cache=jnp.zeros((nl, batch, max_len, hkv, dh), dt),
+        kg_cache=kg, kg_n=kg_n,
+        cur_len=jnp.zeros((batch,), jnp.int32),
+        cross_k=cross, cross_v=cross)
+
+
+def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
+                     k_cache, v_cache, kg_cache, kg_n, cur_len,
+                     sparse: bool, sparse_impl: str, shard=None):
+    """One token. x1 [B,1,d]; caches for ONE layer [B,S,Hkv,Dh].
+
+    sparse_impl='sharded' takes the sequence-parallel shard_map path
+    (repro.serve.sharded): explicit split-K collectives instead of GSPMD
+    resharding of the gathered cache — requires a mesh on ``shard``.
+    """
+    b = x1.shape[0]
+    dh, hkv, g = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.gqa_group
+    q, k, v = _qkv(p, x1, cfg)
+    q_nope = q
+    pos = cur_len[:, None]                                 # [B,1]
+    qr = apply_rope(q, pos, cfg.rope_theta)
+    kr = apply_rope(k, pos, cfg.rope_theta)
+
+    mesh = getattr(shard, "mesh", None)
+    if sparse and "gate" in p and sparse_impl == "sharded" and mesh is not None:
+        from repro.distributed.sharding import decode_partition
+        from repro.serve.sharded import sharded_sparse_decode
+        bspec, seq_axes = decode_partition(mesh, b)
+        qg = ag.gate_q(p["gate"], q_nope, pos, cfg.gate)[:, 0]  # [B,Hkv,Dg]
+        qgrp = qr[:, 0].reshape(b, hkv, g, dh)
+        o, k_cache, v_cache, kg_cache = sharded_sparse_decode(
+            qg, qgrp, kr[:, 0], v[:, 0], k_cache, v_cache, kg_cache,
+            cur_len, p["gate"]["wk"], mesh=mesh, seq_axes=seq_axes,
+            batch_spec=bspec, cfg=cfg.gate, rope_theta=cfg.rope_theta)
+        new_len = cur_len + 1
+        completed = (new_len % cfg.gate.block_size) == 0
+        kg_n = jnp.where(completed, new_len // cfg.gate.block_size,
+                         kg_n).astype(jnp.int32)
+        o = o.reshape(b, 1, hkv * g, dh)
+        out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
+        return out, (k_cache, v_cache, kg_cache, kg_n)
+
+    bidx = jnp.arange(b)
+    k_cache = k_cache.at[bidx, cur_len].set(kr[:, 0])
+    v_cache = v_cache.at[bidx, cur_len].set(v[:, 0])
+    new_len = cur_len + 1
+
+    if sparse and "gate" in p:
+        cache = kc.KCompressionCache(kg_cache, kg_n)
+        cache = kc.update_kcache(cache, p["gate"], k_cache, new_len, cfg.gate,
+                                 cache_is_roped=True, rope_theta=cfg.rope_theta)
+        qg = ag.gate_q(p["gate"], q_nope, pos, cfg.gate)   # [B,1,Hkv,Dg]
+        scores = ag.gate_logits(qg, cache.kg)[:, :, 0]     # [B,Hkv,nb]
+        n_valid = kc.visible_blocks(new_len, cfg.gate.block_size)
+        nb = scores.shape[-1]
+        vmask = jnp.arange(nb)[None, None] < n_valid[:, None, None]
+        scores = jnp.where(vmask, scores, NEG_INF)
+        if cfg.gate.method == "threshold":
+            scores = jax.nn.softmax(scores, axis=-1)
+        idx, _ = sp.select_blocks(scores, n_valid, cfg.gate)
+        qgrp = qr[:, 0].reshape(b, hkv, g, dh)
+        o = ops.sparse_decode(qgrp, k_cache, v_cache, idx, new_len,
+                              block_size=cfg.gate.block_size,
+                              impl=sparse_impl)
+        o = o.reshape(b, 1, hkv * g, dh)
+        kg_cache, kg_n = cache.kg, cache.n_complete
+    else:
+        o = decode_attention(qr, k_cache, v_cache, new_len,
+                             logit_softcap=cfg.attn_logit_softcap)
+    out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
+    return out, (k_cache, v_cache, kg_cache, kg_n)
+
+
+def block_decode(p: Params, x1, cfg: ModelConfig, layer_state, cur_len, *,
+                 sparse: bool, sparse_impl: str, shard=None):
+    k_cache, v_cache, kg_cache, kg_n = layer_state
+    h = rms_norm(p["ln1"], x1, cfg.norm_eps)
+    attn_out, new_state = attention_decode(
+        p["attn"], h, cfg, k_cache=k_cache, v_cache=v_cache,
+        kg_cache=kg_cache, kg_n=kg_n, cur_len=cur_len, sparse=sparse,
+        sparse_impl=sparse_impl, shard=shard)
+    x1 = x1 + attn_out
+    h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
+    if "moe" in p:
+        b = x1.shape[0]
+        y, _ = moe_mod.moe_mlp(p["moe"], h2.reshape(b, -1), cfg.moe,
+                               cfg.activation, shard)
+        y = y.reshape(b, 1, -1)
+    else:
+        y = mlp(p["mlp"], h2, cfg.activation)
+    return x1 + y, new_state
+
+
+def cross_block_decode(p: Params, x1, cfg: ModelConfig, ck, cv):
+    """Cross-attn block at decode: context K/V precomputed at prefill."""
+    b = x1.shape[0]
+    dh, hkv, g = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.gqa_group
+    h = rms_norm(p["ln1"], x1, cfg.norm_eps)
+    q = linear(p["attn"]["wq"], h).reshape(b, 1, cfg.n_heads, dh)
+    if cfg.qk_norm:
+        q = rms_norm(p["attn"]["q_norm"], q, cfg.norm_eps)
+    n_img = ck.shape[1]
+    o = decode_attention(q, ck, cv, jnp.full((b,), n_img, jnp.int32))
+    x1 = x1 + linear(p["attn"]["wo"], o.reshape(b, 1, -1))
+    h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
+    return x1 + mlp(p["mlp"], h2, cfg.activation)
+
+
+def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
+                   cfg: ModelConfig, *, sparse: bool = True,
+                   sparse_impl: str = "ref", shard=None):
+    """token [B] -> (logits [B, V], new DecodeState)."""
+    x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
+
+    def self_scan(carry, inp):
+        x1 = carry
+        layer_p, layer_state = inp
+        y, new_state = block_decode(layer_p, x1, cfg, layer_state,
+                                    state.cur_len, sparse=sparse,
+                                    sparse_impl=sparse_impl, shard=shard)
+        return y, new_state
+
+    layer_states = (state.k_cache, state.v_cache, state.kg_cache, state.kg_n)
+
+    if cfg.cross_attn_period:
+        n_units = cfg.num_layers // cfg.cross_attn_period
+        n_self = cfg.cross_attn_period - 1
+
+        def unit_scan(x1, inp):
+            unit_p, unit_states, cross_p, ck, cv = inp
+            x1, new_states = layer_scan(self_scan, x1, (unit_p, unit_states),
+                                        unroll=not cfg.scan_layers)
+            x1 = cross_block_decode(cross_p, x1, cfg, ck, cv)
+            return x1, new_states
+
+        shaped = jax.tree.map(
+            lambda c: c.reshape((n_units, n_self) + c.shape[1:]) if c is not None else None,
+            layer_states)
+        x1, new_states = layer_scan(
+            unit_scan, x1,
+            (params["blocks"], shaped, params["cross_blocks"],
+             state.cross_k, state.cross_v), unroll=not cfg.scan_layers)
+        new_states = jax.tree.map(
+            lambda c: c.reshape((-1,) + c.shape[2:]) if c is not None else None,
+            new_states)
+    else:
+        x1, new_states = layer_scan(self_scan, x1,
+                                    (params["blocks"], layer_states),
+                                    unroll=not cfg.scan_layers)
+
+    x1 = rms_norm(params["final_norm"], x1, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x1 @ params["embed"]["w"].T
+    else:
+        logits = linear(params["lm_head"], x1)
+    new_state = DecodeState(
+        k_cache=new_states[0], v_cache=new_states[1],
+        kg_cache=new_states[2], kg_n=new_states[3],
+        cur_len=state.cur_len + 1,
+        cross_k=state.cross_k, cross_v=state.cross_v)
+    return logits[:, 0], new_state
+
+
+def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],
+               cfg: ModelConfig, max_len: int, shard=None
+               ) -> Tuple[jnp.ndarray, DecodeState]:
+    """Full forward filling the caches. Returns (last logits, state)."""
+    tokens = batch["tokens"]
+    b, l = tokens.shape
+    x = jnp.take(params["embed"]["w"], tokens, axis=0)
+    pos = jnp.broadcast_to(jnp.arange(l), (b, l))
+    cross_ctx = batch.get("image_embeds")
+
+    x, _, _, caches = lm_backbone(params, x, cfg, rope_positions=pos,
+                                  segment_ids=None, distill=False,
+                                  cross_ctx=cross_ctx, collect_cache=True,
+                                  shard=shard)
+    kr, v, kg = caches                       # [L, B, S, Hkv, Dh] stacked
+    nl = kr.shape[0]
+    pad = max_len - l
+    k_cache = jnp.pad(kr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    v_cache = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    kg_cache = kg_n = None
+    if kg is not None:
+        nb_max = max_len // cfg.gate.block_size
+        nb = kg.shape[2]
+        kg_cache = jnp.pad(kg, ((0, 0), (0, 0), (0, nb_max - nb),
+                                (0, 0), (0, 0))).astype(jnp.dtype(cfg.dtype))
+        kg_n = jnp.full((nl, b), nb, jnp.int32)
+
+    cross_k = cross_v = None
+    if cfg.cross_attn_period and cross_ctx is not None:
+        def cross_kv(cp):
+            dh = cfg.resolved_head_dim
+            ck = linear(cp["attn"]["wk"], cross_ctx).reshape(
+                b, -1, cfg.n_kv_heads, dh)
+            cv = linear(cp["attn"]["wv"], cross_ctx).reshape(
+                b, -1, cfg.n_kv_heads, dh)
+            if cfg.qk_norm:
+                ck = rms_norm(cp["attn"]["k_norm"], ck, cfg.norm_eps)
+            return ck, cv
+        cross_k, cross_v = jax.vmap(cross_kv)(params["cross_blocks"])
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    last = x[:, -1]
+    if cfg.tie_embeddings:
+        logits = last @ params["embed"]["w"].T
+    else:
+        logits = linear(params["lm_head"], last)
+    state = DecodeState(k_cache=k_cache, v_cache=v_cache, kg_cache=kg_cache,
+                        kg_n=kg_n, cur_len=jnp.full((b,), l, jnp.int32),
+                        cross_k=cross_k, cross_v=cross_v)
+    return logits, state
+
+
+def lm_gate_collect(params: Params, batch: Dict[str, jnp.ndarray],
+                    cfg: ModelConfig) -> Dict[str, jnp.ndarray]:
+    """Gate-quality evaluation pass (benchmark harness).
+
+    Runs the full-sequence forward in distill mode collecting, per layer:
+      glog [L, B, Hkv, Lq, nb]  masked gate logits
+      gt   [L, B, Hkv, Lq, nb]  distillation ground truth (block-mass dist.)
+      qr/kr [L, B, Lq, H(kv), Dh] post-rope Q/K (for the Quest baseline).
+    Only meaningful for gated attention families at REDUCED scale.
+    """
+    x = jnp.take(params["embed"]["w"], batch["tokens"], axis=0)
+    b, l = x.shape[:2]
+    pos = batch.get("positions")
+    if pos is None:
+        pos = jnp.broadcast_to(jnp.arange(l), (b, l))
+    _, _, _, extras = lm_backbone(
+        params, x, cfg, rope_positions=pos,
+        segment_ids=batch.get("segment_ids"), distill=True,
+        cross_ctx=batch.get("image_embeds"), collect_gate=True)
+    return extras

@@ -1,0 +1,111 @@
+"""AdamW + cosine schedule + grad clip + gradient compression, pure JAX.
+
+Matches the paper's distillation recipe: AdamW, lr 1e-3, cosine decay,
+global batch 16, 800 steps (paper §4.1/§5.5).
+
+Gradient compression hooks (distributed-optimization knob):
+  * "bf16"    — cast grads to bf16 before the (GSPMD-inserted) all-reduce;
+                halves DP collective bytes.
+  * "topk_ef" — per-leaf top-k magnitude sparsification with error-feedback
+                residual state (Stich et al.); bounds DP collective bytes by
+                ratio*|g| at the cost of an extra state pytree.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import OptimConfig
+
+
+class AdamWState(NamedTuple):
+    m: Any
+    v: Any
+    count: jnp.ndarray
+    ef: Optional[Any] = None       # error-feedback residual (topk_ef)
+
+
+def cosine_lr(cfg: OptimConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def init(params: Any, cfg: OptimConfig) -> AdamWState:
+    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), p)
+    ef = zeros(params) if cfg.grad_compression == "topk_ef" else None
+    return AdamWState(m=zeros(params), v=zeros(params),
+                      count=jnp.zeros((), jnp.int32), ef=ef)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jnp.ndarray]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def _topk_ef(grads: Any, ef: Any, ratio: float) -> Tuple[Any, Any]:
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        flat = g.reshape(-1)
+        k = max(1, int(flat.size * ratio))
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(g) >= thresh
+        sent = jnp.where(mask, g, 0.0)
+        return sent, g - sent
+    pairs = jax.tree.map(one, grads, ef)
+    sent = jax.tree.map(lambda p: p[0], pairs,
+                        is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda p: p[1], pairs,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return sent, resid
+
+
+def compress_grads(grads: Any, state: AdamWState, cfg: OptimConfig
+                   ) -> Tuple[Any, AdamWState]:
+    if cfg.grad_compression == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), state
+    if cfg.grad_compression == "topk_ef":
+        sent, resid = _topk_ef(grads, state.ef, cfg.topk_ratio)
+        return sent, state._replace(ef=resid)
+    return grads, state
+
+
+def apply(params: Any, grads: Any, state: AdamWState, cfg: OptimConfig
+          ) -> Tuple[Any, AdamWState, Dict[str, jnp.ndarray]]:
+    grads, state = compress_grads(grads, state, cfg)
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.grad_clip > 0:
+        grads, gn = clip_by_global_norm(grads, cfg.grad_clip)
+    else:
+        gn = global_norm(grads)
+    count = state.count + 1
+    lr = cosine_lr(cfg, count)
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * g * g
+        mh = m2 / b1c
+        vh = v2 / b2c
+        step = mh / (jnp.sqrt(vh) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    is3 = lambda x: isinstance(x, tuple) and len(x) == 3 and not hasattr(x, "_fields")
+    new_p = jax.tree.map(lambda t: t[0], out, is_leaf=is3)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is3)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is3)
+    return new_p, AdamWState(new_m, new_v, count, state.ef), \
+        {"lr": lr, "grad_norm": gn}

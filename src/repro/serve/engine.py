@@ -1,0 +1,87 @@
+"""Sparse decode serving engine.
+
+Wraps (prefill -> repeated decode_step) with the SeerAttention-R machinery:
+KV cache + K-compression cache live in the DecodeState; each step runs the
+gate, selects blocks (budget or threshold) and calls the block-sparse
+decode kernel. Tracks achieved sparsity and derived I/O savings.
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.registry import get_api
+
+
+class GenerationResult(Dict):
+    pass
+
+
+class DecodeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, max_len: int,
+                 sparse: bool = True, sparse_impl: str = "ref",
+                 greedy: bool = True, shard=None):
+        self.cfg = cfg
+        self.params = params
+        self.api = get_api(cfg)
+        self.max_len = max_len
+        self.sparse = sparse
+        self.sparse_impl = sparse_impl
+        self.greedy = greedy
+        self.shard = shard          # mesh-aware: enables sparse_impl="sharded"
+        # the decode state is donated: KV/Kg cache updates alias in place
+        self._step = jax.jit(functools.partial(
+            self._decode_step, sparse=sparse, sparse_impl=sparse_impl),
+            donate_argnums=(1,))
+
+    def _decode_step(self, params, state, token, *, sparse, sparse_impl):
+        logits, state = self.api.decode_step(
+            params, state, token, self.cfg, sparse=sparse,
+            sparse_impl=sparse_impl, shard=self.shard)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, logits, state
+
+    def prefill(self, batch: Dict[str, jnp.ndarray]):
+        logits, state = self.api.prefill(self.params, batch, self.cfg,
+                                         self.max_len)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return first, state
+
+    def generate(self, batch: Dict[str, jnp.ndarray], n_tokens: int
+                 ) -> GenerationResult:
+        t0 = time.perf_counter()
+        token, state = self.prefill(batch)
+        prefill_s = time.perf_counter() - t0
+        toks = [token]
+        t1 = time.perf_counter()
+        for _ in range(n_tokens - 1):
+            token, _, state = self._step(self.params, state, token)
+            toks.append(token)
+        jax.block_until_ready(token)
+        decode_s = time.perf_counter() - t1
+        out = jnp.stack(toks, axis=1)
+        return GenerationResult(
+            tokens=out, prefill_s=prefill_s, decode_s=decode_s,
+            tok_per_s=(n_tokens - 1) * out.shape[0] / max(decode_s, 1e-9),
+            final_len=state.cur_len)
+
+    def sparsity_stats(self, state) -> Dict[str, float]:
+        """Derived I/O economics of the current step (paper Fig. 6 model)."""
+        cfg = self.cfg
+        if not (cfg.gate.enabled and self.sparse):
+            return {"sparsity": 0.0, "io_speedup": 1.0}
+        cur = int(state.cur_len[0])
+        nb = -(-cur // cfg.gate.block_size)
+        nsel = min(max(1, cfg.gate.token_budget // cfg.gate.block_size), nb)
+        rho = 1.0 - nsel / nb
+        return {"sparsity": rho,
+                "io_speedup": nb / nsel,
+                "kv_bytes_read": nsel * cfg.gate.block_size
+                * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * 2,
+                "gate_overhead_frac": (cfg.gate.d_gate / cfg.gate.block_size)
+                / (2 * cfg.resolved_head_dim)}

@@ -1,0 +1,224 @@
+"""Sequence-parallel sparse flash decoding (shard_map, explicit collectives).
+
+The paper's kernel splits the *selected* KV blocks over SMs (num_split) and
+combines online-softmax partials. Across TPU chips the same idea becomes:
+
+  * KV cache + K-compression cache sharded along the SEQUENCE dim over the
+    'model' axis (plus the DP axes when batch is unshardable — long_500k);
+  * each shard scores its local gate blocks, takes a local top-c candidate
+    list, and the budget's global top-k is resolved with ONE small
+    all-gather of candidate scores (hierarchical exact top-k);
+  * each shard runs block-sparse attention over its own selected blocks
+    only (gathered from the LOCAL cache shard — no cross-chip KV movement);
+  * partials (o_i, m_i, l_i) merge with the flash-decoding rescale:
+        m = pmax(m_i),  l = psum(l_i e^{m_i-m}),  o = psum(o_i e^{m_i-m})/l.
+  * the new token's K/V (and the completed block's Kg entry) are written by
+    the OWNING shard only.
+
+Collective payload per layer step: all-gather of [B,Hkv,c] scores + psum of
+[B,Hkv,G,Dh]+[B,Hkv,G,2] partials — KBs/step instead of the GBs/step that
+GSPMD's resharding of a gathered KV cache costs (EXPERIMENTS.md §Perf).
+
+Load balance: the paper splits the selected list evenly; with a sharded
+cache a shard can own at most ``c = ceil(k/nshards * local_cap_factor)``
+selected blocks (static shape). Score-ordered overflow beyond c is dropped;
+with the default factor 2 this only triggers when >2x of the budget
+concentrates in one shard (recall impact measured in benchmarks).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import GateConfig
+from repro.models.common import NEG_INF, apply_rope
+
+try:  # JAX >= 0.6
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _sm
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+
+def _flat_axis_index(axes: Tuple[str, ...], sizes: Tuple[int, ...]):
+    idx = jnp.int32(0)
+    for a, s in zip(axes, sizes):
+        idx = idx * s + jax.lax.axis_index(a)
+    return idx
+
+
+def sharded_sparse_decode(
+        qg: jnp.ndarray,          # [B, Hkv, Dg]    gate query (post-rope)
+        qr: jnp.ndarray,          # [B, Hkv, G, Dh] attention query (post-rope)
+        kr_new: jnp.ndarray,      # [B, Hkv, Dh]    new key (post-rope)
+        v_new: jnp.ndarray,       # [B, Hkv, Dh]
+        k_cache: jnp.ndarray,     # [B, S, Hkv, Dh] seq-sharded
+        v_cache: jnp.ndarray,
+        kg_cache: jnp.ndarray,    # [B, nb, Hkv, Dg] seq-sharded
+        cur_len: jnp.ndarray,     # [B] length BEFORE this token
+        gate_wk: jnp.ndarray,     # [Hkv, 3*Dh, Dg]
+        *,
+        mesh: Mesh,
+        seq_axes: Tuple[str, ...],
+        batch_spec,
+        cfg: GateConfig,
+        rope_theta: float,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step for ONE layer. Returns (o [B,Hkv,G,Dh], k_cache,
+    v_cache, kg_cache) with the caches updated in place (same shardings).
+    """
+    sizes = tuple(int(mesh.shape[a]) for a in seq_axes)
+    nsh = 1
+    for s in sizes:
+        nsh *= s
+    bs = cfg.block_size
+    k_budget = max(1, cfg.token_budget // bs)
+    cap = max(1, min(int(math.ceil(k_budget / nsh * cfg.local_cap_factor)),
+                     k_cache.shape[1] // (bs * nsh)))
+
+    bspec = batch_spec
+    seq = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
+    spec_q = P(bspec, None, None, None)       # qr [B,Hkv,G,Dh]
+    spec_qg = P(bspec, None, None)
+    spec_kv = P(bspec, seq, None, None)
+    spec_len = P(bspec)
+    spec_w = P(None, None, None)
+
+    def local(qg, qr, kr_new, v_new, k_loc, v_loc, kg_loc, cur_len, wk):
+        b, s_loc, hkv, dh = k_loc.shape
+        nb_loc = kg_loc.shape[1]
+        g = qr.shape[2]
+        dg = qg.shape[-1]
+        ax = _flat_axis_index(seq_axes, sizes)
+        tok0 = ax * s_loc                                  # global token base
+        blk0 = ax * nb_loc                                 # global block base
+        new_len = cur_len + 1                              # [B]
+        bidx = jnp.arange(b)
+
+        # -- 1) KV write by the owning shard ------------------------------
+        own_tok = (cur_len >= tok0) & (cur_len < tok0 + s_loc)
+        lpos = jnp.clip(cur_len - tok0, 0, s_loc - 1)
+        cur_k = k_loc[bidx, lpos]
+        cur_v = v_loc[bidx, lpos]
+        k_loc = k_loc.at[bidx, lpos].set(
+            jnp.where(own_tok[:, None, None], kr_new, cur_k))
+        v_loc = v_loc.at[bidx, lpos].set(
+            jnp.where(own_tok[:, None, None], v_new, cur_v))
+
+        # -- 2) Kg write when a block completes ---------------------------
+        completed = (new_len % bs) == 0
+        gblk = jnp.maximum(new_len // bs - 1, 0)           # [B] global block
+        own_blk = (gblk >= blk0) & (gblk < blk0 + nb_loc) & completed
+        lblk = jnp.clip(gblk - blk0, 0, nb_loc - 1)
+        lstart = lblk * bs
+
+        def kg_row(k_row, st, gb):
+            blk = jax.lax.dynamic_slice_in_dim(k_row, st, bs, axis=0)
+            pos = -(tok0 + st + jnp.arange(bs))            # un-rope
+            blk = apply_rope(blk[None], pos[None], rope_theta)[0]
+            pooled = jnp.concatenate(
+                [jnp.max(blk, 0), jnp.min(blk, 0),
+                 jnp.mean(blk.astype(jnp.float32), 0).astype(blk.dtype)], -1)
+            kg = jnp.einsum("he,hed->hd", pooled, wk)      # [Hkv, Dg]
+            if cfg.use_rope:
+                kg = apply_rope(kg[None, None], (gb * bs)[None, None],
+                                cfg.rope_theta)[0, 0]
+            return kg
+
+        kg_new = jax.vmap(kg_row)(k_loc, lstart, gblk)     # [B,Hkv,Dg]
+        cur_kg = kg_loc[bidx, lblk]
+        kg_loc = kg_loc.at[bidx, lblk].set(
+            jnp.where(own_blk[:, None, None],
+                      kg_new.astype(kg_loc.dtype), cur_kg))
+
+        # -- 3) local gate scores + candidates ----------------------------
+        gid = blk0 + jnp.arange(nb_loc)                    # global block ids
+        n_valid = -(-new_len // bs)                        # [B]
+        s_gate = jnp.einsum("bhd,bnhd->bhn", qg.astype(jnp.float32),
+                            kg_loc.astype(jnp.float32)) / math.sqrt(dg)
+        vis = gid[None, None, :] < n_valid[:, None, None]
+        s_raw = jnp.where(vis, s_gate, NEG_INF)            # unforced scores
+        big = jnp.float32(1e30)
+        s_gate = s_raw
+        if cfg.always_last_block:
+            s_gate = jnp.where(
+                gid[None, None, :] == (n_valid - 1)[:, None, None], big, s_gate)
+        if cfg.always_first_block:
+            s_gate = jnp.where(gid[None, None, :] == 0, big, s_gate)
+        c = min(cap, nb_loc)
+        cand_v, cand_i = jax.lax.top_k(s_gate, c)          # [B,Hkv,c] local
+
+        if cfg.method == "threshold":
+            # -- 4t) distributed softmax threshold (paper §3.1) ----------
+            # softmax stats over the UNFORCED scores (forcing would skew
+            # the normalizer); forced candidates pass unconditionally
+            gm = jnp.max(s_raw, axis=-1, keepdims=True)
+            gm = jax.lax.pmax(gm, seq) if nsh > 1 else gm
+            gl = jnp.sum(jnp.where(vis, jnp.exp(s_raw - gm), 0.0),
+                         axis=-1, keepdims=True)
+            gl = jax.lax.psum(gl, seq) if nsh > 1 else gl
+            cand_raw = jnp.take_along_axis(s_raw, cand_i, axis=-1)
+            probs = jnp.exp(cand_raw - gm) / jnp.maximum(gl, 1e-30)
+            mine = ((probs > cfg.threshold) | (cand_v > 1e29)) \
+                & (cand_raw > NEG_INF / 2)
+        else:
+            # -- 4) hierarchical exact top-k ------------------------------
+            if nsh > 1:
+                allv = jax.lax.all_gather(cand_v, seq, axis=0, tiled=False)
+                allv = jnp.moveaxis(allv.reshape((nsh,) + cand_v.shape), 0, -2)
+                allv = allv.reshape(cand_v.shape[:-1] + (nsh * c,))
+            else:
+                allv = cand_v
+            kk = min(k_budget, allv.shape[-1])
+            thr = jax.lax.top_k(allv, kk)[0][..., -1:]     # [B,Hkv,1]
+            mine = (cand_v >= thr) & (cand_v > NEG_INF / 2)  # [B,Hkv,c]
+
+        # -- 5) local block-sparse attention ------------------------------
+        # gather straight off the [B,S,Hkv,Dh] layout (a moveaxis here
+        # would materialise a transposed copy of the WHOLE cache shard
+        # every step — §Perf P1 iteration 2)
+        lsel = cand_i                                       # local block ids
+        pos_l = lsel[..., None] * bs + jnp.arange(bs)       # [B,Hkv,c,bs]
+        gpos = pos_l.reshape(b, hkv, c * bs)
+        idx_seq = jnp.swapaxes(gpos, 1, 2)[..., None]       # [B,c*bs,Hkv,1]
+        kg_ = jnp.take_along_axis(k_loc, idx_seq, axis=1)   # [B,c*bs,Hkv,Dh]
+        vg_ = jnp.take_along_axis(v_loc, idx_seq, axis=1)
+        sc = jnp.einsum("bhgd,bkhd->bhgk", qr.astype(jnp.float32),
+                        kg_.astype(jnp.float32)) / math.sqrt(dh)
+        tok_valid = (tok0 + pos_l) < new_len[:, None, None, None]
+        valid = mine[..., None] & tok_valid                 # [B,Hkv,c,bs]
+        valid = valid.reshape(b, hkv, 1, c * bs)
+        sc = jnp.where(valid, sc, NEG_INF)
+        m_i = jnp.max(sc, axis=-1, keepdims=True)           # [B,Hkv,G,1]
+        p = jnp.where(valid, jnp.exp(sc - m_i), 0.0)
+        l_i = jnp.sum(p, axis=-1, keepdims=True)
+        o_i = jnp.einsum("bhgk,bkhd->bhgd", p, vg_.astype(jnp.float32))
+
+        # -- 6) flash-decoding combine across shards ----------------------
+        if nsh > 1:
+            m = jax.lax.pmax(m_i, seq)
+            alpha = jnp.exp(m_i - m)
+            l = jax.lax.psum(l_i * alpha, seq)
+            o = jax.lax.psum(o_i * alpha, seq)
+        else:
+            l, o = l_i, o_i
+        o = o / jnp.maximum(l, 1e-30)
+        return o.astype(qr.dtype), k_loc, v_loc, kg_loc
+
+    fn = shard_map(
+        local, mesh,
+        in_specs=(spec_qg, spec_q, P(bspec, None, None), P(bspec, None, None),
+                  spec_kv, spec_kv, spec_kv, spec_len, spec_w),
+        out_specs=(spec_q, spec_kv, spec_kv, spec_kv))
+    return fn(qg, qr, kr_new, v_new, k_cache, v_cache, kg_cache, cur_len,
+              gate_wk)

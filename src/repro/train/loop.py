@@ -1,0 +1,202 @@
+"""Training loop: gate distillation (paper-faithful) and pretrain modes,
+with checkpoint/restart fault tolerance and deterministic data resume.
+
+Distillation trains ONLY the AttnGate parameters (paper §2.3): the gate
+subtree is extracted into a flat {path: leaf} dict (a valid pytree), grads
+are taken wrt that dict, and the base model stays frozen byte-for-byte.
+
+Fault tolerance (run_training):
+  * atomic async checkpoints every ``checkpoint_every`` steps, carrying
+    (params|gate, opt state, data-iterator state, step);
+  * on any step failure: restore latest checkpoint, rebuild the iterator at
+    the saved position, continue (bounded retries) — node-failure recovery;
+  * a step-time watchdog logs straggler steps (> ``watchdog_factor`` x
+    median) — on a real cluster this feeds the preemption/repair signal.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import manager as ckpt
+from repro.config import ModelConfig, TrainConfig
+from repro.data.pipeline import DataState, make_batch
+from repro.models.registry import get_api
+from repro.optim import adamw
+
+
+# ---------------------------------------------------------------------------
+# param partitioning (distill: train gate only)
+# ---------------------------------------------------------------------------
+
+def _pathstr(kp) -> str:
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/".join(parts)
+
+
+def is_gate_path(path: str) -> bool:
+    return "/gate/" in path or path.endswith("/gate") or path.startswith("gate/")
+
+
+def extract_gate(params: Any) -> Dict[str, jnp.ndarray]:
+    out: Dict[str, jnp.ndarray] = {}
+
+    def visit(kp, leaf):
+        p = _pathstr(kp)
+        if is_gate_path(p):
+            out[p] = leaf
+        return leaf
+    jax.tree_util.tree_map_with_path(visit, params)
+    return out
+
+
+def merge_gate(params: Any, gate: Dict[str, jnp.ndarray]) -> Any:
+    def visit(kp, leaf):
+        p = _pathstr(kp)
+        return gate[p] if p in gate else leaf
+    return jax.tree_util.tree_map_with_path(visit, params)
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+
+class TrainState(NamedTuple):
+    params: Any              # full model params (distill: frozen base incl.
+                             # CURRENT gate values — gate dict is authoritative)
+    gate: Optional[Dict]     # distill-mode trainable subtree ({} in pretrain)
+    opt: adamw.AdamWState
+    step: jnp.ndarray
+
+
+def init_train_state(key, cfg: ModelConfig, tcfg: TrainConfig) -> TrainState:
+    api = get_api(cfg)
+    params = api.init_params(key, cfg)
+    if tcfg.mode == "distill":
+        gate = extract_gate(params)
+        assert gate, f"{cfg.arch_id}: distill mode but no gate params"
+        opt = adamw.init(gate, tcfg.optim)
+    else:
+        gate = None
+        opt = adamw.init(params, tcfg.optim)
+    return TrainState(params, gate, opt, jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, shard=None
+                    ) -> Callable:
+    api = get_api(cfg)
+
+    if tcfg.mode == "distill":
+        def loss_fn(gate, params, batch):
+            full = merge_gate(params, gate)
+            loss, metrics = api.forward(full, batch, cfg, mode="distill",
+                                        shard=shard)
+            return loss, metrics
+
+        def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state.gate, state.params, batch)
+            gate, opt, om = adamw.apply(state.gate, grads, state.opt,
+                                        tcfg.optim)
+            params = merge_gate(state.params, gate)
+            return TrainState(params, gate, opt, state.step + 1), \
+                {"loss": loss, **metrics, **om}
+        return step
+
+    def loss_fn(params, batch):
+        loss, metrics = api.forward(params, batch, cfg, mode="pretrain",
+                                    shard=shard)
+        return loss, metrics
+
+    def step(state: TrainState, batch) -> Tuple[TrainState, Dict]:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            state.params, batch)
+        params, opt, om = adamw.apply(state.params, grads, state.opt,
+                                      tcfg.optim)
+        return TrainState(params, None, opt, state.step + 1), \
+            {"loss": loss, **metrics, **om}
+    return step
+
+
+# ---------------------------------------------------------------------------
+# outer loop with fault tolerance
+# ---------------------------------------------------------------------------
+
+def run_training(cfg: ModelConfig, tcfg: TrainConfig, *,
+                 steps: Optional[int] = None,
+                 batch_size: Optional[int] = None,
+                 seq_len: Optional[int] = None,
+                 fail_at: Optional[Callable[[int], None]] = None,
+                 max_retries: int = 3,
+                 watchdog_factor: float = 5.0,
+                 log: Callable[[str], None] = print) -> Tuple[TrainState, list]:
+    """Returns (final state, metrics history). ``fail_at`` is a fault
+    injection hook used by the fault-tolerance tests."""
+    steps = steps if steps is not None else tcfg.steps
+    bsz = batch_size or tcfg.global_batch
+    slen = seq_len or tcfg.seq_len
+    key = jax.random.PRNGKey(tcfg.seed)
+    state = init_train_state(key, cfg, tcfg)
+    data_state = DataState(tcfg.seed, 0)
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    saver = ckpt.AsyncCheckpointer(tcfg.checkpoint_dir)
+    history = []
+    retries = 0
+    step_times: list = []
+
+    def save(state, data_state):
+        tree = {"params": state.params, "gate": state.gate,
+                "opt": state.opt}
+        saver.save(int(state.step), tree,
+                   meta={"data_step": data_state.step,
+                         "seed": data_state.seed})
+
+    i = int(state.step)
+    while i < steps:
+        try:
+            batch = make_batch(cfg, bsz, slen, DataState(data_state.seed, i))
+            if fail_at is not None:
+                fail_at(i)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            step_times.append(dt)
+            med = sorted(step_times)[len(step_times) // 2]
+            if len(step_times) > 4 and dt > watchdog_factor * med:
+                log(f"[watchdog] straggler step {i}: {dt:.2f}s vs median {med:.2f}s")
+            history.append({"step": i, **metrics})
+            if tcfg.log_every and i % tcfg.log_every == 0:
+                log(f"step {i}: " + " ".join(f"{k}={v:.4g}" for k, v in metrics.items()))
+            i = int(state.step)
+            if tcfg.checkpoint_every and i % tcfg.checkpoint_every == 0:
+                save(state, DataState(data_state.seed, i))
+        except (KeyboardInterrupt,):
+            raise
+        except Exception as e:  # noqa: BLE001 — node-failure recovery path
+            retries += 1
+            if retries > max_retries:
+                raise
+            last = ckpt.latest_step(tcfg.checkpoint_dir)
+            log(f"[recover] step {i} failed ({type(e).__name__}: {e}); "
+                f"restoring step {last}")
+            if last is None:
+                state = init_train_state(key, cfg, tcfg)
+                i = 0
+                continue
+            like = {"params": state.params, "gate": state.gate,
+                    "opt": state.opt}
+            tree, meta = ckpt.restore(tcfg.checkpoint_dir, last, like)
+            state = TrainState(tree["params"], tree["gate"], tree["opt"],
+                               jnp.asarray(last, jnp.int32))
+            i = int(meta["data_step"])
+    saver.wait()
+    return state, history

@@ -1,0 +1,150 @@
+"""Subprocess bodies for multi-device shard_map tests.
+
+Run via `python tests/sharded_helpers.py <name>` with
+XLA_FLAGS=--xla_force_host_platform_device_count=8 — pytest's main process
+stays single-device (jax locks the device count at first init).
+"""
+import sys
+
+
+def sharded_decode_parity():
+    import dataclasses, functools
+    import jax, jax.numpy as jnp
+    import numpy as np
+    import repro.configs as configs
+    from repro.config import reduced
+    from repro.data.pipeline import DataState, make_batch
+    from repro.models import transformer as tf
+    from repro.distributed import sharding as shd
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = reduced(configs.get("qwen3_0_6b"))
+    cfg = cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, token_budget=64,
+        local_cap_factor=8.0))  # cap not binding -> exact parity
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    B, PRE, MAX = 4, 120, 256
+    batch = {"tokens": make_batch(cfg, B, PRE, DataState(0, 0))["tokens"]}
+    logits, st = tf.lm_prefill(params, batch, cfg, max_len=MAX)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    shard = shd.make_shard_fn(mesh)
+    with mesh:
+        step_ref = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg,
+                                             sparse=True, sparse_impl="ref"))
+        step_sh = jax.jit(functools.partial(
+            tf.lm_decode_step, cfg=cfg, sparse=True, sparse_impl="sharded",
+            shard=shard))
+        st_r = st_s = st
+        t = tok
+        for i in range(12):
+            lg_r, st_r = step_ref(params, st_r, t)
+            lg_s, st_s = step_sh(params, st_s, t)
+            d = float(jnp.max(jnp.abs(lg_r.astype(jnp.float32)
+                                      - lg_s.astype(jnp.float32))))
+            assert d < 1e-3, f"step {i}: dlogit {d}"
+            t = jnp.argmax(lg_r, -1).astype(jnp.int32)
+        for name in ("k_cache", "v_cache", "kg_cache"):
+            a, b = getattr(st_r, name), getattr(st_s, name)
+            d = float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+            assert d < 1e-3, f"{name}: {d}"
+        assert np.array_equal(np.asarray(st_r.kg_n), np.asarray(st_s.kg_n))
+    print("sharded_decode_parity OK")
+
+
+def sharded_decode_threshold_parity():
+    import dataclasses, functools
+    import jax, jax.numpy as jnp
+    import repro.configs as configs
+    from repro.config import reduced
+    from repro.data.pipeline import DataState, make_batch
+    from repro.models import transformer as tf
+    from repro.distributed import sharding as shd
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = reduced(configs.get("qwen3_0_6b"))
+    cfg = cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, method="threshold",
+        threshold=2e-2, token_budget=256, local_cap_factor=8.0))
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": make_batch(cfg, 4, 120, DataState(0, 0))["tokens"]}
+    logits, st = tf.lm_prefill(params, batch, cfg, max_len=256)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    shard = shd.make_shard_fn(mesh)
+    with mesh:
+        step_ref = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg,
+                                             sparse=True, sparse_impl="ref"))
+        step_sh = jax.jit(functools.partial(
+            tf.lm_decode_step, cfg=cfg, sparse=True, sparse_impl="sharded",
+            shard=shard))
+        st_r = st_s = st
+        t = tok
+        for i in range(8):
+            lg_r, st_r = step_ref(params, st_r, t)
+            lg_s, st_s = step_sh(params, st_s, t)
+            d = float(jnp.max(jnp.abs(lg_r.astype(jnp.float32)
+                                      - lg_s.astype(jnp.float32))))
+            assert d < 1e-3, f"step {i}: dlogit {d}"
+            t = jnp.argmax(lg_r, -1).astype(jnp.int32)
+    print("sharded_decode_threshold_parity OK")
+
+
+def moe_sharded_parity():
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.config import MoEConfig
+    from repro.models import moe as moe_mod
+    from repro.distributed import sharding as shd
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    D, E, K, F = 32, 8, 2, 64
+    mcfg = MoEConfig(n_experts=E, top_k=K, n_shared_experts=1,
+                     expert_d_ff=F, capacity_factor=8.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), D, mcfg, "swiglu", "float32")
+    shard = shd.make_shard_fn(mesh)
+    mcfg2 = dataclasses.replace(mcfg, dispatch="shard_map")
+    for t in (64, 8):   # big_t all-to-all path / small_t psum path
+        x = jax.random.normal(jax.random.PRNGKey(1), (t, D), jnp.float32)
+        y_ref, aux_ref = moe_mod.moe_mlp(p, x, mcfg, "swiglu", None)
+        with mesh:
+            xs = jax.device_put(x, NamedSharding(mesh, P("data", "model")))
+            y_sm, aux_sm = jax.jit(
+                lambda xx: moe_mod.moe_mlp(p, xx, mcfg2, "swiglu", shard))(xs)
+        assert float(jnp.max(jnp.abs(y_ref - y_sm))) < 1e-4, t
+        assert abs(float(aux_ref) - float(aux_sm)) < 1e-5, t
+    print("moe_sharded_parity OK")
+
+
+def moe_sharded_grads():
+    """Gradients flow through the explicit all-to-all dispatch."""
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.config import MoEConfig
+    from repro.models import moe as moe_mod
+    from repro.distributed import sharding as shd
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    D, E, K, F = 32, 8, 2, 64
+    mcfg = MoEConfig(n_experts=E, top_k=K, expert_d_ff=F, capacity_factor=8.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(0), D, mcfg, "swiglu", "float32")
+    shard = shd.make_shard_fn(mesh)
+    mcfg2 = dataclasses.replace(mcfg, dispatch="shard_map")
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, D), jnp.float32)
+
+    def loss(x, mc, sh):
+        y, aux = moe_mod.moe_mlp(p, x, mc, "swiglu", sh)
+        return jnp.sum(y ** 2) + aux
+
+    g_ref = jax.grad(lambda xx: loss(xx, mcfg, None))(x)
+    with mesh:
+        xs = jax.device_put(x, NamedSharding(mesh, P("data", "model")))
+        g_sm = jax.jit(jax.grad(lambda xx: loss(xx, mcfg2, shard)))(xs)
+    d = float(jnp.max(jnp.abs(g_ref - jax.device_get(g_sm))))
+    assert d < 1e-4, d
+    print("moe_sharded_grads OK")
+
+
+if __name__ == "__main__":
+    globals()[sys.argv[1]]()

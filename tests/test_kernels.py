@@ -1,0 +1,175 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracle,
+swept over shapes/dtypes, plus hypothesis property tests on the contracts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_sparse_inputs(key, b, hkv, g, dh, nb, bs, nsel, dtype):
+    ks = jax.random.split(key, 4)
+    s = nb * bs
+    q = jax.random.normal(ks[0], (b, hkv, g, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, dh), jnp.float32).astype(dtype)
+    rng = np.random.default_rng(0)
+    idx = np.full((b, hkv, nsel), -1, np.int32)
+    for bi in range(b):
+        for hi in range(hkv):
+            n = rng.integers(1, nsel + 1)
+            idx[bi, hi, :n] = np.sort(rng.choice(nb, n, replace=False))
+    kv_len = jnp.asarray(rng.integers(s - bs + 1, s + 1, size=(b,)), jnp.int32)
+    # ensure the last (possibly partial) block is selected (engine contract)
+    last_blk = (np.asarray(kv_len) - 1) // bs
+    idx[:, :, 0] = last_blk[:, None]
+    return q, k, v, jnp.asarray(idx), kv_len
+
+
+SWEEP = [
+    # b, hkv, g, dh, nb, bs, nsel, dtype
+    (1, 1, 1, 64, 4, 16, 2, jnp.float32),
+    (2, 2, 4, 64, 8, 16, 5, jnp.float32),
+    (2, 2, 8, 128, 8, 64, 4, jnp.bfloat16),
+    (1, 4, 2, 128, 16, 32, 8, jnp.bfloat16),
+    (3, 1, 48, 128, 4, 64, 3, jnp.float32),   # granite-style MQA group
+]
+
+
+@pytest.mark.parametrize("b,hkv,g,dh,nb,bs,nsel,dtype", SWEEP)
+def test_block_sparse_decode_matches_ref(b, hkv, g, dh, nb, bs, nsel, dtype):
+    q, k, v, idx, kv_len = _mk_sparse_inputs(
+        jax.random.PRNGKey(42), b, hkv, g, dh, nb, bs, nsel, dtype)
+    o_ref = ref.sparse_decode_ref(q, k, v, idx, kv_len, block_size=bs)
+    o_pal = ops.sparse_decode(q, k, v, idx, kv_len, block_size=bs,
+                              impl="pallas_interpret")
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o_pal, np.float32),
+                               np.asarray(o_ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_sparse_decode_full_selection_equals_dense():
+    """Selecting ALL blocks must reproduce dense attention exactly."""
+    b, hkv, g, dh, nb, bs = 2, 2, 2, 32, 8, 16
+    key = jax.random.PRNGKey(1)
+    q, k, v, _, _ = _mk_sparse_inputs(key, b, hkv, g, dh, nb, bs, nb,
+                                      jnp.float32)
+    kv_len = jnp.array([nb * bs, nb * bs - 3])
+    idx = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32), (b, hkv, nb))
+    o_sparse = ref.sparse_decode_ref(q, k, v, idx, kv_len, block_size=bs)
+    o_dense = ref.dense_decode_ref(q, k, v, kv_len)
+    np.testing.assert_allclose(np.asarray(o_sparse), np.asarray(o_dense),
+                               atol=1e-5, rtol=1e-5)
+
+
+GT_SWEEP = [
+    # b, lq, h, hkv, dh, bs, q_chunk, dtype
+    (1, 64, 2, 1, 32, 16, 16, jnp.float32),
+    (2, 128, 4, 2, 64, 32, 32, jnp.float32),
+    (2, 128, 8, 2, 64, 64, 64, jnp.bfloat16),
+    (1, 256, 4, 4, 128, 64, 128, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("b,lq,h,hkv,dh,bs,qc,dtype", GT_SWEEP)
+def test_gate_gt_fwd_matches_ref(b, lq, h, hkv, dh, bs, qc, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (b, lq, h, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, lq, hkv, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, lq, hkv, dh), jnp.float32).astype(dtype)
+    o1, bm1 = ops.gate_gt_attention(q, k, v, block_size=bs, impl="ref")
+    o2, bm2 = ops.gate_gt_attention(q, k, v, block_size=bs, q_chunk=qc,
+                                    impl="pallas_interpret")
+    tol = 3e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(o2, np.float32),
+                               np.asarray(o1, np.float32), atol=tol, rtol=tol)
+    clip = lambda x: np.maximum(np.asarray(x, np.float32), -1e29)
+    np.testing.assert_allclose(clip(bm2), clip(bm1), atol=tol, rtol=tol)
+
+
+def test_gate_gt_chunked_matches_ref():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    b, lq, h, hkv, dh, bs = 2, 96, 4, 2, 32, 16
+    q = jax.random.normal(ks[0], (b, lq, h, dh))
+    k = jax.random.normal(ks[1], (b, lq, hkv, dh))
+    v = jax.random.normal(ks[2], (b, lq, hkv, dh))
+    o1, bm1 = ops.gate_gt_attention(q, k, v, block_size=bs, impl="ref")
+    o2, bm2 = ops.gate_gt_attention(q, k, v, block_size=bs, q_chunk=32,
+                                    impl="chunked")
+    np.testing.assert_allclose(np.asarray(o2), np.asarray(o1), atol=2e-5,
+                               rtol=2e-5)
+    clip = lambda x: np.maximum(np.asarray(x), -1e29)
+    np.testing.assert_allclose(clip(bm2), clip(bm1), atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 3), hkv=st.integers(1, 3), g=st.integers(1, 4),
+    nb=st.integers(2, 8), seed=st.integers(0, 2**16),
+)
+def test_property_sparse_decode_subset_invariance(b, hkv, g, nb, seed):
+    """Output depends only on the SET of selected blocks: permuting the
+    index list and adding -1 padding must not change the result."""
+    dh, bs = 16, 8
+    q, k, v, idx, kv_len = _mk_sparse_inputs(
+        jax.random.PRNGKey(seed), b, hkv, g, dh, nb, bs, nb, jnp.float32)
+    o1 = ref.sparse_decode_ref(q, k, v, idx, kv_len, block_size=bs)
+    rng = np.random.default_rng(seed)
+    idx_np = np.asarray(idx)
+    perm = np.stack([np.stack([rng.permutation(idx_np[bi, hi])
+                               for hi in range(hkv)]) for bi in range(b)])
+    extra = np.full((b, hkv, 2), -1, np.int32)
+    idx2 = jnp.asarray(np.concatenate([perm, extra], axis=-1))
+    o2 = ref.sparse_decode_ref(q, k, v, idx2, kv_len, block_size=bs)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-5,
+                               rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), scale=st.floats(0.1, 4.0))
+def test_property_gt_blockmax_softmax_identity(seed, scale):
+    """softmax over blocks of blockmax == column-blockwise max-pool of the
+    true attention row distribution, renormalised (the paper identity)."""
+    b, lq, h, dh, bs = 1, 32, 2, 16, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, lq, h, dh)) * scale
+    k = jax.random.normal(ks[1], (b, lq, h, dh))
+    v = jax.random.normal(ks[2], (b, lq, h, dh))
+    _, bm = ops.gate_gt_attention(q, k, v, block_size=bs, impl="ref")
+    gt_fast = jax.nn.softmax(bm, axis=-1)
+    # explicit route: full attention map -> block max-pool -> renormalise
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(dh)
+    mask = jnp.arange(lq)[:, None] >= jnp.arange(lq)[None, :]
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    pm = p.reshape(b, h, lq, lq // bs, bs).max(axis=-1)
+    gt_slow = pm / jnp.maximum(pm.sum(axis=-1, keepdims=True), 1e-30)
+    np.testing.assert_allclose(np.asarray(gt_fast), np.asarray(gt_slow),
+                               atol=1e-5, rtol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_property_budget_selection_monotone(seed):
+    """A larger token budget must select a superset of blocks."""
+    from repro.config import GateConfig
+    from repro.core.sparsity import budget_select
+    rng = np.random.default_rng(seed)
+    b, hkv, nb, bs = 2, 2, 16, 8
+    scores = jnp.asarray(rng.normal(size=(b, hkv, nb)).astype(np.float32))
+    n_valid = jnp.asarray(rng.integers(1, nb + 1, size=(b,)), jnp.int32)
+    small = GateConfig(block_size=bs, token_budget=2 * bs)
+    big = GateConfig(block_size=bs, token_budget=6 * bs)
+    _, m_small = budget_select(scores, n_valid, small)
+    _, m_big = budget_select(scores, n_valid, big)
+    assert bool(jnp.all(~m_small | m_big))

@@ -1,0 +1,43 @@
+"""KV-offload economics + simulator (paper §3.2/§6.1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.configs as configs
+from repro.serve.offload import OffloadedKV, offload_step_model
+
+
+def test_offload_model_paper_numbers():
+    cfg = configs.get("qwen3_0_6b")
+    m = offload_step_model(cfg, seq_len=32768)
+    # paper §3.2: Kg cache is <1% of the KV cache at b=64
+    assert m["kg_over_kv"] < 0.01
+    # sparse on-HBM beats dense on-HBM by ~S/budget
+    assert m["t_sparse_hbm_s"] < m["t_dense_hbm_s"] / 4
+    # decision surface: offload beats dense-HBM only when sparsity exceeds
+    # 1 - PCIE_BW/HBM_BW (~96% at PCIe gen4) — at 32k with a 4k budget
+    # (87.5% sparse) it does NOT; at 500k (99.2% sparse) it does. This
+    # quantifies the paper's §6.1 suggestion: offload needs very long
+    # contexts or NVLink-class host links.
+    assert not m["offload_beats_dense"]
+    m_long = offload_step_model(cfg, seq_len=524288)
+    assert m_long["offload_beats_dense"]
+
+
+def test_offload_fetch_matches_direct_gather():
+    rng = np.random.default_rng(0)
+    b, s, hkv, dh, bs = 2, 256, 2, 16, 16
+    k = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    kg = jnp.zeros((b, s // bs, hkv, 8))
+    store = OffloadedKV(k, v, kg, bs)
+    idx = jnp.asarray(rng.integers(0, s // bs, size=(b, hkv, 3)), jnp.int32)
+    k_sel, v_sel, store2 = store.fetch(idx)
+    assert k_sel.shape == (b, hkv, 3 * bs, dh)
+    assert store2.fetched_blocks == 3
+    for bi in range(b):
+        for h in range(hkv):
+            blk = int(idx[bi, h, 0])
+            np.testing.assert_array_equal(
+                np.asarray(k_sel[bi, h, :bs]),
+                np.asarray(k[bi, blk * bs:(blk + 1) * bs, h]))

@@ -1,0 +1,193 @@
+"""Property-based tests (hypothesis) for the system's core invariants."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import GateConfig
+from repro.core import sparsity as sp
+from repro.core.distill import ground_truth_from_blockmax
+from repro.kernels import ops
+from repro.models.common import NEG_INF
+
+SET = settings(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# sparsify invariants
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(2, 24),
+       st.integers(1, 24), st.integers(0, 10**6))
+def test_budget_select_invariants(b, hkv, nb, k, seed):
+    """Selected indices are valid, unique (except -1 padding), within the
+    visible prefix, and always include the last + first visible blocks."""
+    rng = np.random.default_rng(seed)
+    scores = jnp.asarray(rng.normal(size=(b, hkv, nb)).astype(np.float32))
+    n_valid = jnp.asarray(rng.integers(1, nb + 1, size=(b,)).astype(np.int32))
+    cfg = GateConfig(block_size=8, token_budget=k * 8)
+    idx, mask = sp.budget_select(scores, n_valid, cfg)
+    idx = np.asarray(idx)
+    nv = np.asarray(n_valid)
+    for bi in range(b):
+        for h in range(hkv):
+            sel = idx[bi, h]
+            real = sel[sel >= 0]
+            assert len(set(real.tolist())) == len(real)      # unique
+            assert (real < nv[bi]).all()                     # visible only
+            assert 0 in real                                 # first forced
+            assert (nv[bi] - 1) in real                      # last forced
+            # budget is honoured up to the forced-block minimum
+            assert len(real) <= min(max(k, 2), nv[bi])
+
+
+@SET
+@given(st.integers(1, 3), st.integers(1, 4), st.integers(2, 24),
+       st.floats(1e-4, 0.5), st.integers(0, 10**6))
+def test_threshold_select_subset_of_admitted(b, hkv, nb, tau, seed):
+    rng = np.random.default_rng(seed)
+    raw = jnp.asarray(rng.normal(size=(b, hkv, nb)).astype(np.float32))
+    probs = jax.nn.softmax(raw, axis=-1)
+    n_valid = jnp.full((b,), nb, jnp.int32)
+    cfg = GateConfig(block_size=8, threshold=tau, method="threshold",
+                     always_first_block=False, always_last_block=False)
+    idx, mask = sp.threshold_select(probs, n_valid, cfg, max_selected=nb)
+    idx = np.asarray(idx)
+    pm = np.asarray(probs)
+    for bi in range(b):
+        for h in range(hkv):
+            real = idx[bi, h][idx[bi, h] >= 0]
+            assert all(pm[bi, h, j] > tau for j in real)
+
+
+# ---------------------------------------------------------------------------
+# distillation ground truth invariants
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.integers(1, 2), st.integers(1, 3), st.integers(1, 4),
+       st.integers(2, 10), st.integers(0, 10**6))
+def test_gt_is_distribution_and_group_max(b, hkv, g, nb, seed):
+    rng = np.random.default_rng(seed)
+    lq = 6
+    bm = rng.normal(size=(b, hkv * g, lq, nb)).astype(np.float32)
+    gt = np.asarray(ground_truth_from_blockmax(jnp.asarray(bm), g))
+    assert gt.shape == (b, hkv, lq, nb)
+    np.testing.assert_allclose(gt.sum(-1), 1.0, rtol=1e-5)
+    assert (gt >= 0).all()
+    # group max-pool: softmax argmax equals argmax of per-group max logits
+    gm = bm.reshape(b, hkv, g, lq, nb).max(2)
+    np.testing.assert_array_equal(gt.argmax(-1), gm.argmax(-1))
+
+
+# ---------------------------------------------------------------------------
+# sparse decode kernel invariants (ref oracle)
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.integers(1, 2), st.integers(1, 2), st.integers(1, 4),
+       st.sampled_from([8, 16]), st.integers(2, 6), st.integers(0, 10**6))
+def test_sparse_decode_full_selection_equals_dense(b, hkv, g, bs, nb, seed):
+    """Selecting ALL blocks must reproduce dense attention exactly."""
+    rng = np.random.default_rng(seed)
+    s = nb * bs
+    dh = 16
+    q = jnp.asarray(rng.normal(size=(b, hkv, g, dh)).astype(np.float32))
+    kc = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    kv_len = jnp.asarray(rng.integers(1, s + 1, size=(b,)).astype(np.int32))
+    idx = jnp.broadcast_to(jnp.arange(nb), (b, hkv, nb)).astype(jnp.int32)
+    from repro.kernels.ref import dense_decode_ref
+    o_sp = ops.sparse_decode(q, kc, vc, idx, kv_len, block_size=bs, impl="ref")
+    o_dn = dense_decode_ref(q, kc, vc, kv_len)
+    np.testing.assert_allclose(np.asarray(o_sp), np.asarray(o_dn),
+                               rtol=1e-5, atol=1e-5)
+
+
+@SET
+@given(st.integers(1, 2), st.integers(1, 2), st.integers(2, 5),
+       st.integers(0, 10**6))
+def test_sparse_decode_permutation_invariant(b, hkv, nsel, seed):
+    """Output must not depend on the ORDER of the selected block indices."""
+    rng = np.random.default_rng(seed)
+    bs, nb, dh, g = 8, 6, 16, 2
+    s = nb * bs
+    q = jnp.asarray(rng.normal(size=(b, hkv, g, dh)).astype(np.float32))
+    kc = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    kv_len = jnp.full((b,), s, jnp.int32)
+    base = rng.choice(nb, size=nsel, replace=False)
+    i1 = jnp.broadcast_to(jnp.asarray(base, jnp.int32), (b, hkv, nsel))
+    i2 = jnp.broadcast_to(jnp.asarray(base[::-1].copy(), jnp.int32),
+                          (b, hkv, nsel))
+    o1 = ops.sparse_decode(q, kc, vc, i1, kv_len, block_size=bs, impl="ref")
+    o2 = ops.sparse_decode(q, kc, vc, i2, kv_len, block_size=bs, impl="ref")
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.integers(4, 32), st.sampled_from([4, 8]), st.integers(1, 3),
+       st.integers(0, 10**6))
+def test_moe_dispatch_conservation(t, e, k, seed):
+    """With generous capacity nothing drops: every token's output equals the
+    prob-weighted sum of its experts' outputs (checked via linearity: experts
+    set to scaled identity-ish maps)."""
+    from repro.config import MoEConfig
+    from repro.models import moe as moe_mod
+    rng = np.random.default_rng(seed)
+    d, f = 8, 16
+    mcfg = MoEConfig(n_experts=e, top_k=k, expert_d_ff=f, capacity_factor=e * 1.0)
+    p = moe_mod.init_moe(jax.random.PRNGKey(seed % 97), d, mcfg,
+                         "swiglu", "float32")
+    x = jnp.asarray(rng.normal(size=(t, d)).astype(np.float32))
+    y, aux = moe_mod.moe_mlp(p, x, mcfg, "swiglu", None)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    # manual recompute of routing + per-expert GLU for one token
+    logits = x.astype(jnp.float32) @ p["router"]["w"]
+    probs = jax.nn.softmax(logits, -1)
+    top_p, top_i = jax.lax.top_k(probs, k)
+    w = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    ti = np.asarray(top_i)[0]
+    tw = np.asarray(w)[0]
+    acc = np.zeros((d,), np.float32)
+    for j, ei in enumerate(ti):
+        g = x[0] @ p["wi_gate"][ei]
+        u = x[0] @ p["wi_up"][ei]
+        ye = (jax.nn.silu(g) * u) @ p["wo"][ei]
+        acc += tw[j] * np.asarray(ye)
+    np.testing.assert_allclose(np.asarray(y[0]), acc, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# flash combine invariant (the sharded decode merge rule)
+# ---------------------------------------------------------------------------
+
+@SET
+@given(st.integers(2, 6), st.integers(4, 32), st.integers(0, 10**6))
+def test_flash_partial_combine(nsplit, n, seed):
+    """Combining per-split online-softmax partials == global softmax."""
+    rng = np.random.default_rng(seed)
+    s = rng.normal(size=(nsplit, n)).astype(np.float64)
+    v = rng.normal(size=(nsplit, n, 3)).astype(np.float64)
+    # global
+    flat = s.reshape(-1)
+    p = np.exp(flat - flat.max())
+    o_ref = (p[:, None] * v.reshape(-1, 3)).sum(0) / p.sum()
+    # per-split partials + merge
+    m_i = s.max(1)
+    l_i = np.exp(s - m_i[:, None]).sum(1)
+    o_i = (np.exp(s - m_i[:, None])[..., None] * v).sum(1)
+    m = m_i.max()
+    alpha = np.exp(m_i - m)
+    o = (o_i * alpha[:, None]).sum(0) / (l_i * alpha).sum()
+    np.testing.assert_allclose(o, o_ref, rtol=1e-10)

@@ -1,0 +1,36 @@
+"""scan_layers=False (the probe execution path) must be numerically
+identical to the scanned production path for every family."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro.configs as configs
+from repro.config import reduced
+from repro.data.pipeline import DataState, make_batch
+from repro.models.registry import get_api
+
+FAMS = ["qwen3_0_6b", "deepseek_moe_16b", "zamba2_1_2b", "falcon_mamba_7b",
+        "llama_3_2_vision_11b", "hubert_xlarge"]
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_unroll_matches_scan(arch):
+    cfg = reduced(configs.get(arch))
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, 2, 64, DataState(0, 0))
+    l1, _ = api.forward(params, batch, cfg, mode="pretrain")
+    cfg2 = cfg.replace(scan_layers=False)
+    l2, _ = get_api(cfg2).forward(params, batch, cfg2, mode="pretrain")
+    assert abs(float(l1) - float(l2)) < 5e-3   # bf16 reduction-order noise
+
+
+def test_unroll_matches_scan_distill():
+    cfg = reduced(configs.get("qwen3_0_6b"))
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg, 2, 64, DataState(0, 0))
+    l1, _ = api.forward(params, batch, cfg, mode="distill")
+    cfg2 = cfg.replace(scan_layers=False)
+    l2, _ = get_api(cfg2).forward(params, batch, cfg2, mode="distill")
+    assert abs(float(l1) - float(l2)) < 5e-3

@@ -1,0 +1,160 @@
+"""Training-substrate tests: distillation actually learns (KL drops, base
+frozen), optimizer correctness, checkpoint roundtrip + elastic restore,
+fault-injection recovery, gradient compression."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.checkpoint import manager as ckpt
+from repro.config import OptimConfig, TrainConfig, reduced
+from repro.data.pipeline import DataState, make_batch
+from repro.optim import adamw
+from repro.train import loop as tl
+
+
+def _tcfg(tmp, **kw):
+    base = dict(mode="distill", seq_len=64, global_batch=2, steps=8,
+                optim=OptimConfig(lr=3e-3, warmup_steps=2, total_steps=8,
+                                  weight_decay=0.0),
+                checkpoint_every=4, checkpoint_dir=str(tmp), log_every=0)
+    base.update(kw)
+    return TrainConfig(**base)
+
+
+def test_distill_reduces_kl_and_freezes_base(tmp_path):
+    """Gate distillation must reduce held-out KL while the base model stays
+    byte-identical (paper: only AttnGate is trained)."""
+    cfg = reduced(C.get("qwen3_0_6b"))
+    tcfg = _tcfg(tmp_path, steps=12, checkpoint_every=0)
+    state = tl.init_train_state(jax.random.PRNGKey(0), cfg, tcfg)
+    base_leaf_before = np.asarray(
+        state.params["blocks"]["attn"]["wq"]["w"]).copy()
+    g0 = {k: np.asarray(v).copy() for k, v in state.gate.items()}
+    step = jax.jit(tl.make_train_step(cfg, tcfg))
+    from repro.models.registry import get_api
+    api = get_api(cfg)
+    eval_batch = make_batch(cfg, 2, 64, DataState(99, 0), mean_doc_len=32)
+    kl_before = float(api.forward(state.params, eval_batch, cfg,
+                                  mode="distill")[0])
+    for i in range(12):
+        batch = make_batch(cfg, 2, 64, DataState(0, i), mean_doc_len=32)
+        state, m = step(state, batch)
+    kl_after = float(api.forward(state.params, eval_batch, cfg,
+                                 mode="distill")[0])
+    assert kl_after < kl_before, f"held-out KL: {kl_before} -> {kl_after}"
+    base_leaf_after = np.asarray(state.params["blocks"]["attn"]["wq"]["w"])
+    np.testing.assert_array_equal(base_leaf_before, base_leaf_after)
+    moved = any(not np.allclose(g0[k], np.asarray(v))
+                for k, v in state.gate.items())
+    assert moved
+
+
+def test_pretrain_loss_decreases(tmp_path):
+    cfg = reduced(C.get("falcon_mamba_7b"))
+    tcfg = _tcfg(tmp_path, mode="pretrain", steps=8,
+                 optim=OptimConfig(lr=1e-2, warmup_steps=1, total_steps=8,
+                                   weight_decay=0.0))
+    _, hist = tl.run_training(cfg, tcfg, steps=8, batch_size=2, seq_len=64,
+                              log=lambda *_: None)
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+
+def test_fault_injection_recovery(tmp_path):
+    """Kill the step function mid-run; training must restore the checkpoint
+    and converge to the same step count."""
+    cfg = reduced(C.get("qwen3_0_6b"))
+    tcfg = _tcfg(tmp_path, steps=9, checkpoint_every=3)
+    boom = {"armed": True}
+
+    def fail_at(i):
+        if i == 5 and boom["armed"]:
+            boom["armed"] = False
+            raise RuntimeError("injected node failure")
+
+    state, hist = tl.run_training(cfg, tcfg, steps=9, batch_size=2,
+                                  seq_len=64, fail_at=fail_at,
+                                  log=lambda *_: None)
+    assert int(state.step) == 9
+    # recovery replayed steps 3..5 deterministically: the data stream is
+    # position-resumed, so losses at a given step index must be consistent
+    by_step = {}
+    for h in hist:
+        by_step.setdefault(h["step"], []).append(h["loss"])
+    for s, losses in by_step.items():
+        if len(losses) > 1:
+            np.testing.assert_allclose(losses[0], losses[-1], rtol=1e-4)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(5, dtype=jnp.float32),
+            "b": {"c": jnp.ones((2, 3), jnp.bfloat16)}}
+    ckpt.save(str(tmp_path), 7, tree, meta={"data_step": 7})
+    assert ckpt.latest_step(str(tmp_path)) == 7
+    restored, meta = ckpt.restore(str(tmp_path), 7, tree)
+    assert meta["data_step"] == 7
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == np.dtype("bfloat16") or \
+        str(restored["b"]["c"].dtype) == "bfloat16"
+
+
+def test_checkpoint_atomic_publish(tmp_path):
+    tree = {"a": jnp.zeros(3)}
+    ckpt.save(str(tmp_path), 1, tree)
+    # tmp dirs must not linger
+    assert not [d for d in os.listdir(tmp_path) if d.startswith(".tmp")]
+
+
+def test_adamw_matches_reference_step():
+    cfg = OptimConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0,
+                      grad_clip=0.0, warmup_steps=0, total_steps=10**9,
+                      schedule="cosine")
+    p = {"w": jnp.array([1.0, -2.0])}
+    g = {"w": jnp.array([0.5, 0.5])}
+    st = adamw.init(p, cfg)
+    p2, st2, _ = adamw.apply(p, g, st, cfg)
+    # bias-corrected first step: update = lr * g/|g| elementwise = lr*sign
+    m = 0.1 * 0.5 / (1 - 0.9)
+    v = 0.001 * 0.25 / (1 - 0.999)
+    expect = np.array([1.0, -2.0]) - 0.1 * (m / (np.sqrt(v) + 1e-8))
+    # lr at count=1 with cosine over 1e9 steps ~ lr
+    np.testing.assert_allclose(np.asarray(p2["w"]), expect, rtol=1e-4)
+
+
+def test_grad_clip():
+    g = {"w": jnp.array([3.0, 4.0])}
+    clipped, gn = adamw.clip_by_global_norm(g, 1.0)
+    assert abs(float(gn) - 5.0) < 1e-6
+    np.testing.assert_allclose(np.asarray(clipped["w"]), [0.6, 0.8],
+                               rtol=1e-6)
+
+
+def test_topk_ef_compression_conserves_mass():
+    cfg = OptimConfig(grad_compression="topk_ef", topk_ratio=0.25)
+    p = {"w": jnp.zeros(8)}
+    st = adamw.init(p, cfg)
+    g = {"w": jnp.array([5.0, 0.1, 0.2, 4.0, 0.3, 0.1, 0.0, 0.05])}
+    sent, st2 = adamw.compress_grads(g, st, cfg)
+    nz = np.count_nonzero(np.asarray(sent["w"]))
+    assert nz == 2                        # top 25% of 8
+    # error feedback: sent + residual == original
+    np.testing.assert_allclose(np.asarray(sent["w"] + st2.ef["w"]),
+                               np.asarray(g["w"]), atol=1e-6)
+    # next round the residual is re-added
+    sent2, _ = adamw.compress_grads({"w": jnp.zeros(8)}, st2, cfg)
+    assert np.count_nonzero(np.asarray(sent2["w"])) == 2
+
+
+def test_cosine_schedule_shape():
+    cfg = OptimConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    lrs = [float(adamw.cosine_lr(cfg, jnp.asarray(s))) for s in
+           [0, 5, 10, 55, 100]]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6
+    assert abs(lrs[2] - 1.0) < 1e-6
+    assert 0.4 < lrs[3] < 0.6
+    assert lrs[4] < 1e-6
