@@ -11,9 +11,12 @@ released checkpoints + GPUs; DESIGN.md §7 records the mapping):
   fig9   threshold vs token-budget selection       (paper Fig. 9)
   tab1   sparse-decode error accumulation          (paper Tab. 1 proxy)
   tab2   distillation training cost                (paper Tab. 2)
+  serve  continuous-batching paged-KV engine vs pad-to-max contiguous
+         batching on ragged traffic (--engine paged|contiguous|both)
   roofline  print the dry-run roofline table       (EXPERIMENTS.md source)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6] [--fast]
+            [--engine paged]
 Output: CSV-ish lines `section,key,value` plus human-readable summaries.
 """
 from __future__ import annotations
@@ -409,6 +412,81 @@ def bench_tab2():
     emit("tab2", "paper_gpu_hours_8b", "12.2")
 
 
+ENGINE = "both"           # --engine: paged | contiguous | both
+
+
+def _serve_requests(cfg, n_req: int, seed: int = 9):
+    """Ragged 'traffic': mixed prompt lengths and decode budgets."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_req):
+        plen = int(rng.integers(16, 96))
+        mn = int(rng.integers(8, 24))
+        reqs.append({"rid": i, "max_new_tokens": mn,
+                     "tokens": rng.integers(0, cfg.vocab_size,
+                                            size=(plen,)).astype(np.int32)})
+    return reqs
+
+
+def bench_serve():
+    """Multi-tenant serving scenario: N ragged requests through (a) the
+    paged continuous-batching engine and (b) the contiguous engine padding
+    every prompt to the longest and decoding the max budget for everyone
+    (the pre-paging deployment mode). Reports wall-clock throughput plus
+    the structural waste the paged engine eliminates."""
+    from repro.serve.engine import DecodeEngine
+    print(f"\n== serve: continuous batching vs pad-to-max (engine={ENGINE}) ==")
+    cfg = tiny_cfg(16, num_layers=2, budget=128)
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    n_req = 6 if FAST else 12
+    n_slots = 4
+    reqs = _serve_requests(cfg, n_req)
+    useful = sum(r["max_new_tokens"] for r in reqs)
+    max_plen = max(len(r["tokens"]) for r in reqs)
+    max_new = max(r["max_new_tokens"] for r in reqs)
+    emit("serve", "n_requests", n_req)
+    emit("serve", "useful_tokens", useful)
+
+    eng = DecodeEngine(cfg, params, max_len=max_plen + max_new + 16,
+                       sparse=True, sparse_impl="ref")
+    if ENGINE in ("paged", "both"):
+        res = eng.serve(reqs, n_slots=n_slots)          # warm compile
+        t0 = time.perf_counter()
+        res = eng.serve(reqs, n_slots=n_slots)
+        dt = time.perf_counter() - t0
+        st = res["stats"]
+        emit("serve", "paged_tok_per_s", f"{useful / dt:.1f}")
+        emit("serve", "paged_decode_steps", st["decode_steps"])
+        emit("serve", "paged_slot_util", f"{st['slot_util']:.3f}")
+        emit("serve", "paged_pages", st["num_pages"])
+
+    if ENGINE in ("contiguous", "both"):
+        # pad-to-max static batching in waves of n_slots
+        pad_tok = 0
+
+        def wave(batch_reqs):
+            nonlocal pad_tok
+            toks = np.zeros((len(batch_reqs), max_plen), np.int64)
+            for i, r in enumerate(batch_reqs):
+                toks[i, -len(r["tokens"]):] = r["tokens"]   # left-pad
+            pad_tok += sum(max_plen - len(r["tokens"]) +
+                           max_new - r["max_new_tokens"] for r in batch_reqs)
+            return eng.generate({"tokens": jnp.asarray(toks)}, max_new)
+
+        waves = [reqs[i:i + n_slots] for i in range(0, n_req, n_slots)]
+        for w in waves:                                     # warm compile
+            wave(w)
+        pad_tok = 0
+        t0 = time.perf_counter()
+        for w in waves:
+            wave(w)
+        dt = time.perf_counter() - t0
+        emit("serve", "contiguous_tok_per_s", f"{useful / dt:.1f}")
+        emit("serve", "contiguous_padded_waste_tok", pad_tok)
+        emit("serve", "contiguous_waste_frac",
+             f"{pad_tok / (pad_tok + useful):.3f}")
+
+
 def bench_roofline():
     """Pretty-print the dry-run roofline table (EXPERIMENTS.md source)."""
     print("\n== roofline: dry-run derived terms (single-pod) ==")
@@ -435,19 +513,28 @@ def bench_roofline():
 SECTIONS = {
     "fig4": bench_fig4, "fig5": bench_fig5, "fig6": bench_fig6,
     "fig7": bench_fig7, "fig8": bench_fig8, "fig9": bench_fig9,
-    "tab1": bench_tab1, "tab2": bench_tab2, "roofline": bench_roofline,
+    "tab1": bench_tab1, "tab2": bench_tab2, "serve": bench_serve,
+    "roofline": bench_roofline,
 }
 
 
 def main() -> None:
-    global FAST
+    global FAST, ENGINE
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section names")
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--engine", default="both",
+                    choices=["paged", "contiguous", "both"],
+                    help="serving engine(s) for the `serve` section; "
+                         "--engine paged implies --only serve unless "
+                         "--only is given")
     args = ap.parse_args()
     if args.fast:
         FAST = True
+    ENGINE = args.engine
+    if args.engine != "both" and args.only is None:
+        args.only = "serve"
     names = args.only.split(",") if args.only else list(SECTIONS)
     t0 = time.perf_counter()
     for n in names:

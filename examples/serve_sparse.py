@@ -4,11 +4,16 @@ models) end to end.
 
     PYTHONPATH=src python examples/serve_sparse.py [--arch qwen3_0_6b]
         [--budget 128] [--method budget|threshold] [--batch 4] [--new 64]
+        [--paged]
 
-Batched requests of different lengths are left-packed into one batch;
-per-request kv lengths drive the gate's visible-block masks, the trailing
-partial block is force-selected (K-compression-cache semantics), and the
-engine reports achieved sparsity + derived I/O economics.
+Default: one uniform batch through ``DecodeEngine.generate``. With
+``--paged``, ragged requests (mixed prompt lengths and decode budgets) go
+through the continuous-batching paged-KV path (``DecodeEngine.serve``):
+iteration-level admission into decode slots, per-request page tables over
+a shared page pool, and the gate's K-compression cache paged alongside
+the raw KV. Either way the trailing partial block is force-selected
+(K-compression-cache semantics) and the engine reports achieved sparsity
++ derived I/O economics.
 """
 import argparse
 import dataclasses
@@ -35,6 +40,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prefill", type=int, default=256)
     ap.add_argument("--new", type=int, default=64)
+    ap.add_argument("--paged", action="store_true",
+                    help="ragged requests through the continuous-batching "
+                         "paged-KV engine (serve) instead of one uniform "
+                         "batch (generate)")
     args = ap.parse_args()
 
     cfg = reduced(configs.get(args.arch))
@@ -47,6 +56,32 @@ def main():
 
     params = get_api(cfg).init_params(jax.random.PRNGKey(0), cfg)
     max_len = args.prefill + args.new + 16
+
+    if args.paged:
+        rng = np.random.default_rng(3)
+        reqs = []
+        for i in range(args.batch):
+            plen = int(rng.integers(max(args.prefill // 4, 1),
+                                    args.prefill + 1))
+            mn = int(rng.integers(max(args.new // 4, 1), args.new + 1))
+            reqs.append({"rid": i, "max_new_tokens": mn,
+                         "tokens": rng.integers(
+                             0, cfg.vocab_size, size=(plen,)).astype(np.int32)})
+        eng = DecodeEngine(cfg, params, max_len=max_len, sparse=True)
+        t0 = time.perf_counter()
+        res = eng.serve(reqs, n_slots=max(2, args.batch // 2))
+        wall = time.perf_counter() - t0
+        st = res["stats"]
+        print(f"arch={cfg.arch_id} paged serve: {len(reqs)} ragged requests, "
+              f"{st['generated_tokens']} tokens in {st['decode_steps']} steps "
+              f"({st['tok_per_s']:.1f} tok/s, wall {wall:.2f}s)")
+        print(f"slot utilisation {st['slot_util']:.2f}, "
+              f"page pool {st['num_pages']} x {st['page_size']} tokens, "
+              f"admission stalls {st['admission_stalls']}")
+        for r in reqs[:2]:
+            print(f"req{r['rid']} ({len(r['tokens'])} prompt tok): "
+                  f"{res[r['rid']][:12]}")
+        return
 
     # batched requests (shared-length packing; ragged lengths via kv_len)
     batch = {"tokens": make_batch(cfg, args.batch, args.prefill,

@@ -43,6 +43,27 @@ def prefill_kcache(cache: KCompressionCache, gate_params: Dict[str, Any],
     return KCompressionCache(new, jnp.full((b,), nb, jnp.int32))
 
 
+def finalize_block_kg(gate_params: Dict[str, Any], blk: jnp.ndarray,
+                      start_pos, block_index, cfg: GateConfig, *,
+                      is_roped: bool, rope_theta: float = 10000.0
+                      ) -> jnp.ndarray:
+    """One COMPLETE block of keys [block_size, Hkv, Dh] -> Kg row [Hkv, Dg].
+
+    The single source of truth for block finalization, shared by the
+    contiguous decode update (below) and the paged cache
+    (serve.paging.append_token_paged) so the two can never drift. When
+    ``is_roped`` the stored keys are rotated back to the pre-rope frame
+    first (RoPE is an orthogonal rotation: inversion = apply with negated
+    positions), avoiding a second pre-rope K cache just for the gate.
+    """
+    from repro.models.common import apply_rope
+    if is_roped:
+        pos = -(start_pos + jnp.arange(blk.shape[0]))
+        blk = apply_rope(blk[None], pos[None], rope_theta)[0]
+    return gate_k(gate_params, blk[None], cfg,
+                  first_block_index=block_index)[0, 0]
+
+
 def update_kcache(cache: KCompressionCache, gate_params: Dict[str, Any],
                   k_cache_raw: jnp.ndarray, cur_len: jnp.ndarray,
                   cfg: GateConfig, *, cache_is_roped: bool = False,
@@ -61,7 +82,6 @@ def update_kcache(cache: KCompressionCache, gate_params: Dict[str, Any],
     ``cur_len // block_size - 1``. Uniform-length batches share one boundary
     check; ragged batches are handled per-row via where-masking.
     """
-    from repro.models.common import apply_rope
     bs = cfg.block_size
     completed = (cur_len % bs) == 0                       # [B] bool
     blk_idx = jnp.maximum(cur_len // bs - 1, 0)           # [B]
@@ -69,11 +89,9 @@ def update_kcache(cache: KCompressionCache, gate_params: Dict[str, Any],
 
     def one_row(k_raw, st, bi):
         blk = jax.lax.dynamic_slice_in_dim(k_raw, st, bs, axis=0)  # [bs,Hkv,Dh]
-        if cache_is_roped:
-            pos = -(st + jnp.arange(bs))
-            blk = apply_rope(blk[None], pos[None], rope_theta)[0]
-        kg = gate_k(gate_params, blk[None], cfg, first_block_index=bi)[0, 0]
-        return kg                                          # [Hkv, Dg]
+        return finalize_block_kg(gate_params, blk, st, bi, cfg,
+                                 is_roped=cache_is_roped,
+                                 rope_theta=rope_theta)    # [Hkv, Dg]
 
     kg_new = jax.vmap(one_row)(k_cache_raw, start, blk_idx)   # [B,Hkv,Dg]
     cur = jax.vmap(lambda c, i: c[i])(cache.kg, blk_idx)      # current content

@@ -40,22 +40,17 @@ NEG_INF = -1e30
 LANES = 128
 
 
-def _kernel(idx_ref, len_ref,              # scalar prefetch
-            q_ref, k_ref, v_ref,           # VMEM in
-            o_ref,                          # VMEM out
-            m_ref, l_ref, acc_ref,          # VMEM scratch
-            *, block_size: int, nsel: int, scale: float):
-    b = pl.program_id(0)
-    h = pl.program_id(1)
-    j = pl.program_id(2)
+def _flash_step(blk, b, j, len_ref, q_ref, k_ref, v_ref, o_ref,
+                m_ref, l_ref, acc_ref, *, block_size: int, nsel: int,
+                scale: float):
+    """Shared online-softmax body: init scratch, fold one selected block
+    (skipped on ``blk < 0`` padding), finalize on the last grid step."""
 
     @pl.when(j == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    blk = idx_ref[b, h, j]
 
     @pl.when(blk >= 0)
     def _compute():
@@ -83,6 +78,36 @@ def _kernel(idx_ref, len_ref,              # scalar prefetch
     def _finalize():
         l = jnp.max(l_ref[...], axis=1, keepdims=True)
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+
+
+def _kernel(idx_ref, len_ref,              # scalar prefetch
+            q_ref, k_ref, v_ref,           # VMEM in
+            o_ref,                          # VMEM out
+            m_ref, l_ref, acc_ref,          # VMEM scratch
+            *, block_size: int, nsel: int, scale: float):
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+    _flash_step(idx_ref[b, h, j], b, j, len_ref, q_ref, k_ref, v_ref,
+                o_ref, m_ref, l_ref, acc_ref, block_size=block_size,
+                nsel=nsel, scale=scale)
+
+
+def _kernel_paged(idx_ref, pt_ref, len_ref,  # scalar prefetch (+page table)
+                  q_ref, k_ref, v_ref,       # VMEM in (k/v blocks are PAGES)
+                  o_ref,                      # VMEM out
+                  m_ref, l_ref, acc_ref,      # VMEM scratch
+                  *, block_size: int, nsel: int, scale: float):
+    # identical math to _kernel — the logical->physical translation lives
+    # entirely in the BlockSpec index_map (pt_ref is consumed there); the
+    # in-kernel masking stays in LOGICAL positions so kv_len semantics match
+    # the contiguous kernel exactly.
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    j = pl.program_id(2)
+    _flash_step(idx_ref[b, h, j], b, j, len_ref, q_ref, k_ref, v_ref,
+                o_ref, m_ref, l_ref, acc_ref, block_size=block_size,
+                nsel=nsel, scale=scale)
 
 
 def _pad_group(g: int, dtype) -> int:
@@ -137,4 +162,68 @@ def block_sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g_pad, dh), q.dtype),
         interpret=interpret,
     )(block_indices.astype(jnp.int32), kv_len.astype(jnp.int32), qp, kh, vh)
+    return out[:, :, :g]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def block_sparse_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
+                              v_pages: jnp.ndarray,
+                              block_indices: jnp.ndarray,
+                              page_table: jnp.ndarray, kv_len: jnp.ndarray,
+                              *, block_size: int,
+                              interpret: bool = False) -> jnp.ndarray:
+    """Paged variant: q [B,Hkv,G,Dh]; k_pages/v_pages [P, ps, Hkv, Dh]
+    global pools (ps == block_size); block_indices [B,Hkv,nsel] LOGICAL
+    block ids (-1 padding); page_table [B, npt] logical->physical.
+
+    The page table rides the same scalar-prefetch path as the selected
+    indices, so the logical->physical indirection happens inside the
+    ``BlockSpec.index_map``: grid step (b, h, j) streams physical page
+    ``page_table[b, block_indices[b,h,j]]`` HBM->VMEM. Non-selected pages
+    never leave HBM — paging adds zero extra KV I/O.
+    """
+    bsz, hkv, g, dh = q.shape
+    ps = k_pages.shape[1]
+    assert ps == block_size, (ps, block_size)
+    nsel = block_indices.shape[-1]
+    g_pad = _pad_group(g, q.dtype)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+    kh = jnp.moveaxis(k_pages, 2, 1)                 # [P, Hkv, ps, Dh]
+    vh = jnp.moveaxis(v_pages, 2, 1)
+    scale = 1.0 / math.sqrt(dh)
+
+    def q_map(b, h, j, idx_ref, pt_ref, len_ref):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, j, idx_ref, pt_ref, len_ref):
+        log = jnp.maximum(idx_ref[b, h, j], 0)
+        phys = pt_ref[b, log]
+        return (jnp.maximum(phys, 0), h, 0, 0)
+
+    def o_map(b, h, j, idx_ref, pt_ref, len_ref):
+        return (b, h, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(bsz, hkv, nsel),
+        in_specs=[
+            pl.BlockSpec((1, 1, g_pad, dh), q_map),
+            pl.BlockSpec((1, 1, ps, dh), kv_map),
+            pl.BlockSpec((1, 1, ps, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g_pad, dh), o_map),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, LANES), jnp.float32),   # m
+            pltpu.VMEM((g_pad, LANES), jnp.float32),   # l
+            pltpu.VMEM((g_pad, dh), jnp.float32),      # acc
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel_paged, block_size=block_size, nsel=nsel,
+                          scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bsz, hkv, g_pad, dh), q.dtype),
+        interpret=interpret,
+    )(block_indices.astype(jnp.int32), page_table.astype(jnp.int32),
+      kv_len.astype(jnp.int32), qp, kh, vh)
     return out[:, :, :g]

@@ -12,7 +12,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.block_sparse_decode import block_sparse_decode as _bsd_pallas
+from repro.kernels.block_sparse_decode import (
+    block_sparse_decode as _bsd_pallas,
+    block_sparse_decode_paged as _bsd_paged_pallas)
 from repro.kernels.gate_gt_fwd import gate_gt_flash_fwd as _gt_pallas
 
 
@@ -29,6 +31,27 @@ def sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     if impl == "pallas_interpret":
         return _bsd_pallas(q, k_cache, v_cache, block_indices, kv_len,
                            block_size=block_size, interpret=True)
+    raise ValueError(impl)
+
+
+def paged_sparse_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
+                        v_pages: jnp.ndarray, block_indices: jnp.ndarray,
+                        page_table: jnp.ndarray, kv_len: jnp.ndarray, *,
+                        block_size: int, impl: str = "ref") -> jnp.ndarray:
+    """Paged-KV twin of ``sparse_decode``: block_indices are LOGICAL block
+    ids, translated through ``page_table`` [B, npt]. Pools are
+    [P, page_size, Hkv, Dh] with page_size == block_size."""
+    if impl == "ref":
+        return _ref.paged_sparse_decode_ref(
+            q, k_pages, v_pages, block_indices, page_table, kv_len,
+            block_size=block_size)
+    if impl == "pallas":
+        return _bsd_paged_pallas(q, k_pages, v_pages, block_indices,
+                                 page_table, kv_len, block_size=block_size)
+    if impl == "pallas_interpret":
+        return _bsd_paged_pallas(q, k_pages, v_pages, block_indices,
+                                 page_table, kv_len, block_size=block_size,
+                                 interpret=True)
     raise ValueError(impl)
 
 

@@ -58,6 +58,49 @@ def sparse_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
     return o.astype(q.dtype)
 
 
+def paged_sparse_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                            v_pages: jnp.ndarray, block_indices: jnp.ndarray,
+                            page_table: jnp.ndarray, kv_len: jnp.ndarray, *,
+                            block_size: int) -> jnp.ndarray:
+    """Paged twin of ``sparse_decode_ref``.
+
+    k_pages/v_pages: [P, ps, Hkv, Dh] global page pools (ps == block_size);
+    page_table: [B, npt] int32 logical block -> physical page;
+    block_indices carry LOGICAL block ids (the gate's view) — the
+    logical->physical indirection happens here, mirroring the kernel's
+    scalar-prefetch index_map. After the page gather the math is kept
+    identical to the contiguous reference so paged == contiguous holds to
+    rounding.
+    """
+    b, hkv, g, dh = q.shape
+    ps = k_pages.shape[1]
+    assert ps == block_size, (ps, block_size)
+    nsel = block_indices.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+
+    idx = jnp.maximum(block_indices, 0)                          # [B,Hkv,nsel]
+    pt = jnp.broadcast_to(page_table[:, None, :],
+                          (b, hkv, page_table.shape[1]))
+    phys = jnp.take_along_axis(pt, idx, axis=2)                  # [B,Hkv,nsel]
+    kh = jnp.moveaxis(k_pages, 2, 0)                             # [Hkv,P,ps,Dh]
+    vh = jnp.moveaxis(v_pages, 2, 0)
+    har = jnp.arange(hkv)[None, :, None]
+    kg = kh[har, phys].reshape(b, hkv, nsel * ps, dh)            # [B,Hkv,n*ps,Dh]
+    vg = vh[har, phys].reshape(b, hkv, nsel * ps, dh)
+
+    # token positions are LOGICAL (masking against kv_len)
+    pos = idx[..., None] * ps + jnp.arange(ps)                   # [B,Hkv,nsel,ps]
+    sc = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                    kg.astype(jnp.float32)) * scale
+    valid = (block_indices[..., None] >= 0) & (pos < kv_len[:, None, None, None])
+    valid = valid.reshape(b, hkv, 1, nsel * ps)
+    sc = jnp.where(valid, sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    p = jnp.where(jnp.any(valid, axis=-1, keepdims=True), p, 0.0)
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, vg.astype(jnp.float32))
+    return o.astype(q.dtype)
+
+
 def dense_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      kv_len: jnp.ndarray) -> jnp.ndarray:
     """Dense counterpart with the same [B,Hkv,G,Dh] layout (baseline)."""

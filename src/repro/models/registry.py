@@ -14,10 +14,15 @@ class ModelApi(NamedTuple):
     init_decode_state: Callable    # (cfg, batch_size, max_len) -> state
     prefill: Callable              # (params, batch, cfg, max_len, shard) -> (logits, state)
     decode_step: Callable          # (params, state, token, cfg, *, sparse, sparse_impl, shard)
+    # continuous-batching paged decode (serve.paging); None = unsupported
+    # (params, pages, token, page_table, cur_len, active, cfg, *, sparse,
+    #  sparse_impl) -> (logits, pages)
+    decode_step_paged: Any = None
 
 
 _TF_API = ModelApi(tf.init_lm, tf.lm_forward, tf.init_decode_state,
-                   tf.lm_prefill, tf.lm_decode_step)
+                   tf.lm_prefill, tf.lm_decode_step,
+                   decode_step_paged=tf.lm_decode_step_paged)
 _SSM_API = ModelApi(ssm_lm.init_lm, ssm_lm.lm_forward,
                     ssm_lm.init_decode_state, ssm_lm.lm_prefill,
                     ssm_lm.lm_decode_step)

@@ -171,7 +171,11 @@ def attention_full(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
     if collect_gate and gate_on:
         cache = {"glog": glog, "gt": gt, "qr": qr, "kr": kr}
     elif collect_cache:
-        kg_full = (ag.gate_k(p["gate"], k_nope, cfg.gate)
+        # only COMPLETE blocks enter the K-compression cache (ragged
+        # prompts: the trailing partial block stays stale-until-complete,
+        # same contract as kcache.prefill_kcache)
+        nb_full = (l // cfg.gate.block_size) * cfg.gate.block_size
+        kg_full = (ag.gate_k(p["gate"], k_nope[:, :nb_full], cfg.gate)
                    if "gate" in p else None)
         cache = (kr, v, kg_full)
     return linear(p["wo"], o.reshape(b, l, -1)), kl, cache
@@ -358,6 +362,27 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
         cross_k=cross, cross_v=cross)
 
 
+def _gate_select(gate_p: Params, q_nope: jnp.ndarray, pos: jnp.ndarray,
+                 kg: jnp.ndarray, new_len: jnp.ndarray, cfg: ModelConfig):
+    """Gate scoring + discrete block selection for ONE decode step.
+
+    kg: the logical per-row Kg view [B, nb, Hkv, Dg] — contiguous cache or
+    paged gather. Shared by both decode paths; parity-critical (a change
+    here changes contiguous and paged selection together, by construction).
+    Returns logical block indices [B, Hkv, nsel].
+    """
+    qg = ag.gate_q(gate_p, q_nope, pos, cfg.gate)          # [B,1,Hkv,Dg]
+    scores = ag.gate_logits(qg, kg)[:, :, 0]               # [B,Hkv,nb]
+    n_valid = kc.visible_blocks(jnp.maximum(new_len, 1), cfg.gate.block_size)
+    nb = scores.shape[-1]
+    vmask = jnp.arange(nb)[None, None] < n_valid[:, None, None]
+    scores = jnp.where(vmask, scores, NEG_INF)
+    if cfg.gate.method == "threshold":
+        scores = jax.nn.softmax(scores, axis=-1)
+    idx, _ = sp.select_blocks(scores, n_valid, cfg.gate)
+    return idx
+
+
 def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                      k_cache, v_cache, kg_cache, kg_n, cur_len,
                      sparse: bool, sparse_impl: str, shard=None):
@@ -403,15 +428,7 @@ def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         cache = kc.KCompressionCache(kg_cache, kg_n)
         cache = kc.update_kcache(cache, p["gate"], k_cache, new_len, cfg.gate,
                                  cache_is_roped=True, rope_theta=cfg.rope_theta)
-        qg = ag.gate_q(p["gate"], q_nope, pos, cfg.gate)   # [B,1,Hkv,Dg]
-        scores = ag.gate_logits(qg, cache.kg)[:, :, 0]     # [B,Hkv,nb]
-        n_valid = kc.visible_blocks(new_len, cfg.gate.block_size)
-        nb = scores.shape[-1]
-        vmask = jnp.arange(nb)[None, None] < n_valid[:, None, None]
-        scores = jnp.where(vmask, scores, NEG_INF)
-        if cfg.gate.method == "threshold":
-            scores = jax.nn.softmax(scores, axis=-1)
-        idx, _ = sp.select_blocks(scores, n_valid, cfg.gate)
+        idx = _gate_select(p["gate"], q_nope, pos, cache.kg, new_len, cfg)
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
         o = ops.sparse_decode(qgrp, k_cache, v_cache, idx, new_len,
                               block_size=cfg.gate.block_size,
@@ -513,6 +530,106 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
         cur_len=state.cur_len + 1,
         cross_k=state.cross_k, cross_v=state.cross_v)
     return logits[:, 0], new_state
+
+
+# ---------------------------------------------------------------------------
+# paged decode (continuous batching): per-row ragged lengths + page pools
+# ---------------------------------------------------------------------------
+
+def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
+                           k_pages, v_pages, kg_pages, page_table, cur_len,
+                           active, sparse: bool, sparse_impl: str):
+    """One token over paged KV. x1 [S,1,d]; pools for ONE layer
+    [P, ps, Hkv, Dh]; page_table [S, npt]; cur_len/active [S] per-slot.
+
+    The gate path is identical to the contiguous ``attention_decode`` —
+    same selection, same force-select of the trailing partial block — but
+    the Kg cache is the paged twin and the block-sparse attention gathers
+    physical pages through the page table. Rows with ``active == False``
+    (empty decode slots) write to the null page and do not advance."""
+    b = x1.shape[0]
+    dh, hkv, g = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.gqa_group
+    ps = cfg.gate.block_size
+    q, k, v = _qkv(p, x1, cfg)
+    q_nope = q
+    pos = cur_len[:, None]                                 # [S,1]
+    qr = apply_rope(q, pos, cfg.rope_theta)
+    kr = apply_rope(k, pos, cfg.rope_theta)
+
+    from repro.serve import paging as pg
+    k_pages, v_pages, kg_pages = pg.append_token_paged(
+        k_pages, v_pages, kg_pages, kr[:, 0], v[:, 0], page_table, cur_len,
+        active, p.get("gate"), cfg.gate, rope_theta=cfg.rope_theta)
+    new_len = cur_len + active.astype(jnp.int32)
+
+    if sparse and "gate" in p:
+        kg_slot = pg.gather_kg(kg_pages, page_table)       # [S,npt,Hkv,Dg]
+        idx = _gate_select(p["gate"], q_nope, pos, kg_slot, new_len, cfg)
+        qgrp = qr[:, 0].reshape(b, hkv, g, dh)
+        o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx, page_table,
+                                    new_len, block_size=ps, impl=sparse_impl)
+        o = o.reshape(b, 1, hkv * g, dh)
+    else:
+        k_ct = pg.gather_kv(k_pages, page_table)           # [S,npt*ps,Hkv,Dh]
+        v_ct = pg.gather_kv(v_pages, page_table)
+        o = decode_attention(qr, k_ct, v_ct, new_len,
+                             logit_softcap=cfg.attn_logit_softcap)
+    out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
+    return out, (k_pages, v_pages, kg_pages)
+
+
+def block_decode_paged(p: Params, x1, cfg: ModelConfig, layer_pages,
+                       page_table, cur_len, active, *, sparse: bool,
+                       sparse_impl: str):
+    k_pages, v_pages, kg_pages = layer_pages
+    h = rms_norm(p["ln1"], x1, cfg.norm_eps)
+    attn_out, new_pages = attention_decode_paged(
+        p["attn"], h, cfg, k_pages=k_pages, v_pages=v_pages,
+        kg_pages=kg_pages, page_table=page_table, cur_len=cur_len,
+        active=active, sparse=sparse, sparse_impl=sparse_impl)
+    x1 = x1 + attn_out
+    h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
+    if "moe" in p:
+        b = x1.shape[0]
+        y, _ = moe_mod.moe_mlp(p["moe"], h2.reshape(b, -1), cfg.moe,
+                               cfg.activation, None)
+        y = y.reshape(b, 1, -1)
+    else:
+        y = mlp(p["mlp"], h2, cfg.activation)
+    return x1 + y, new_pages
+
+
+def lm_decode_step_paged(params: Params, pages, token: jnp.ndarray,
+                         page_table: jnp.ndarray, cur_len: jnp.ndarray,
+                         active: jnp.ndarray, cfg: ModelConfig, *,
+                         sparse: bool = True, sparse_impl: str = "ref"):
+    """Continuous-batching decode step. token/cur_len/active [n_slots];
+    pages is a ``serve.paging.PagedPages`` (layer-stacked pools);
+    page_table [n_slots, npt]. Returns (logits [n_slots, V], new pages).
+
+    Inactive rows produce garbage logits (the engine masks them) but do
+    not touch live pages or advance — per-row raggedness is carried by
+    ``cur_len``/``active`` rather than a uniform batch length."""
+    if cfg.cross_attn_period:
+        raise NotImplementedError("paged decode: cross-attn families TBD")
+    from repro.serve.paging import PagedPages
+    x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
+
+    def self_scan(x1, inp):
+        layer_p, layer_pages = inp
+        return block_decode_paged(layer_p, x1, cfg, layer_pages, page_table,
+                                  cur_len, active, sparse=sparse,
+                                  sparse_impl=sparse_impl)
+
+    x1, new_pages = layer_scan(self_scan, x1,
+                               (params["blocks"], tuple(pages)),
+                               unroll=not cfg.scan_layers)
+    x1 = rms_norm(params["final_norm"], x1, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x1 @ params["embed"]["w"].T
+    else:
+        logits = linear(params["lm_head"], x1)
+    return logits[:, 0], PagedPages(*new_pages)
 
 
 def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],

@@ -1,24 +1,44 @@
 """Sparse decode serving engine.
 
-Wraps (prefill -> repeated decode_step) with the SeerAttention-R machinery:
-KV cache + K-compression cache live in the DecodeState; each step runs the
-gate, selects blocks (budget or threshold) and calls the block-sparse
-decode kernel. Tracks achieved sparsity and derived I/O savings.
+Two serving paths share the SeerAttention-R machinery (gate scoring,
+budget/threshold block selection, block-sparse decode kernel):
+
+  * ``generate(batch, n)`` — the original uniform-batch path: one
+    contiguous DecodeState, every row decodes in lockstep. Kept as the
+    simple single-tenant API and as the parity reference for the paged
+    path.
+  * ``serve(requests)`` — continuous batching over a PAGED KV cache
+    (serve.paging + serve.scheduler): iteration-level admission into free
+    decode slots, per-row ragged lengths, retirement + page recycling the
+    moment a request finishes. The K-compression cache pages alongside
+    the raw KV (page size == gate block size), so gate state can never
+    desync from the cache under admission/eviction churn.
+
+Tracks achieved sparsity and derived I/O savings either way.
 """
 from __future__ import annotations
 
 import functools
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.config import ModelConfig
 from repro.models.registry import get_api
+from repro.serve import paging as pg
+from repro.serve.scheduler import Request, Scheduler, pages_needed
 
 
 class GenerationResult(Dict):
+    pass
+
+
+class ServeResult(Dict):
+    """rid -> list of generated token ids, plus throughput/stats fields
+    under the ``stats`` key (dict access, like GenerationResult)."""
     pass
 
 
@@ -38,6 +58,7 @@ class DecodeEngine:
         self._step = jax.jit(functools.partial(
             self._decode_step, sparse=sparse, sparse_impl=sparse_impl),
             donate_argnums=(1,))
+        self._paged_step = None     # built lazily on first serve()
 
     def _decode_step(self, params, state, token, *, sparse, sparse_impl):
         logits, state = self.api.decode_step(
@@ -69,6 +90,133 @@ class DecodeEngine:
             tokens=out, prefill_s=prefill_s, decode_s=decode_s,
             tok_per_s=(n_tokens - 1) * out.shape[0] / max(decode_s, 1e-9),
             final_len=state.cur_len)
+
+    # -- continuous batching over paged KV ---------------------------------
+
+    def serve(self, requests: Sequence[Dict[str, Any]], *,
+              n_slots: int = 4, num_pages: Optional[int] = None,
+              collect_logits: bool = False,
+              max_steps: Optional[int] = None) -> ServeResult:
+        """Continuous-batching decode over a paged KV cache.
+
+        requests: each ``{"tokens": 1-D int array, "max_new_tokens": int}``
+        (an optional ``"rid"`` overrides the default enumeration id).
+        Admission is FIFO; a request's full page budget is reserved
+        up-front so running requests never stall on an empty free list.
+
+        Returns ``ServeResult``: rid -> generated token ids (length
+        ``max_new_tokens``, greedy), ``res["stats"]`` has throughput and
+        scheduler telemetry, and ``res["logits"]`` (rid -> [n, V] fp32,
+        prefill token included) when ``collect_logits``.
+        """
+        cfg = self.cfg
+        if self.api.decode_step_paged is None:
+            raise NotImplementedError(
+                f"family {cfg.family}: no paged decode path")
+        ps = cfg.gate.block_size
+        reqs = [Request(rid=r.get("rid", i),
+                        prompt=np.asarray(r["tokens"], np.int32).reshape(-1),
+                        max_new_tokens=int(r["max_new_tokens"]))
+                for i, r in enumerate(requests)]
+        if not reqs:
+            return ServeResult(stats={})
+        rids = [r.rid for r in reqs]
+        if len(set(rids)) != len(rids):
+            raise ValueError(f"duplicate request ids: {sorted(rids)}")
+        clash = set(rids) & {"stats", "logits"}
+        if clash:
+            raise ValueError(f"request ids collide with reserved result "
+                             f"keys: {clash}")
+        npt = max(pages_needed(r.prompt_len, r.max_new_tokens, ps)
+                  for r in reqs)
+        if num_pages is None:
+            # enough for every slot to hold a worst-case sequence (+null)
+            num_pages = n_slots * npt + 1
+        sched = Scheduler(n_slots, num_pages, ps, npt)
+        for r in reqs:
+            sched.submit(r)
+
+        # layer count from the stacked params (leading dim of any leaf)
+        nl = jax.tree.leaves(self.params["blocks"])[0].shape[0]
+        pages = pg.init_pages(cfg, num_pages, nl)
+        if self._paged_step is None:   # one jit per engine: repeat serve()
+            self._paged_step = jax.jit(functools.partial(
+                self.api.decode_step_paged, cfg=cfg, sparse=self.sparse,
+                sparse_impl=self.sparse_impl), donate_argnums=(1,))
+        step = self._paged_step
+
+        token_buf = np.zeros((n_slots,), np.int32)
+        n_steps = 0
+        t0 = time.perf_counter()
+        limit = max_steps if max_steps is not None else sum(
+            r.max_new_tokens for r in reqs) + len(reqs) + 8
+        while sched.has_work():
+            for req in sched.admissions():
+                pages, first, lg = self._paged_prefill(pages, req, ps)
+                req.out_tokens.append(int(first))
+                if collect_logits:
+                    req.out_logits.append(lg)
+                token_buf[req.slot] = int(first)
+                sched.retire_if_done(req)
+            if not sched.active.any():
+                if sched.pending:       # pool too fragmented to admit
+                    raise RuntimeError(
+                        "scheduler stalled: pending requests but no active "
+                        "slots and admission failed")
+                break
+            logits, pages = step(self.params, pages,
+                                 jnp.asarray(token_buf),
+                                 jnp.asarray(sched.page_table),
+                                 jnp.asarray(sched.cur_len),
+                                 jnp.asarray(sched.active))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            lg_np = (np.asarray(logits, np.float32)
+                     if collect_logits else None)
+            sched.complete_step(nxt, lg_np)
+            token_buf = np.where(sched.active, nxt, 0).astype(np.int32)
+            n_steps += 1
+            if n_steps > limit:
+                raise RuntimeError("serve(): step limit exceeded")
+        wall = time.perf_counter() - t0
+
+        out = ServeResult()
+        for r in reqs:
+            out[r.rid] = r.out_tokens
+        if collect_logits:
+            out["logits"] = {r.rid: np.stack(r.out_logits)
+                             for r in reqs if r.out_logits}
+        gen_toks = sum(len(r.out_tokens) for r in reqs)
+        # slot_util over DECODE-step tokens only (each admission's first
+        # token comes from prefill, not from a decode slot)
+        decode_toks = gen_toks - sched.n_admitted
+        out["stats"] = {
+            "wall_s": wall, "decode_steps": n_steps,
+            "generated_tokens": gen_toks,
+            "tok_per_s": gen_toks / max(wall, 1e-9),
+            "slot_util": decode_toks / max(n_steps * n_slots, 1),
+            "admitted": sched.n_admitted, "retired": sched.n_retired,
+            "admission_stalls": sched.admission_stalls,
+            "num_pages": num_pages, "page_size": ps,
+        }
+        return out
+
+    def _paged_prefill(self, pages: pg.PagedPages, req: Request, ps: int):
+        """Contiguous prefill of one request, scattered into its pages.
+
+        max_len is the page-aligned prompt length so the cache slices
+        reshape into whole pages; the reservation's remaining pages only
+        receive their (zeroed) Kg rows here — their K/V fill during
+        decode."""
+        plen = req.prompt_len
+        n_prompt = -(-plen // ps)
+        logits, cstate = self.api.prefill(
+            self.params, {"tokens": jnp.asarray(req.prompt)[None]},
+            self.cfg, n_prompt * ps)
+        pages = pg.scatter_prefill(
+            pages, cstate.k_cache, cstate.v_cache, cstate.kg_cache, plen,
+            jnp.asarray(req.pages, jnp.int32), ps)
+        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
+        return pages, first, np.asarray(logits[0], np.float32)
 
     def sparsity_stats(self, state) -> Dict[str, float]:
         """Derived I/O economics of the current step (paper Fig. 6 model)."""

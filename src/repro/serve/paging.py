@@ -1,0 +1,193 @@
+"""Paged KV cache for continuous-batching sparse decode.
+
+Storage is a global pool of fixed-size pages shared by every sequence in
+flight; a per-slot page table maps logical KV block ids to physical pages.
+The page size EQUALS the gate block size — the core invariant of this
+subsystem: one page == one gate block, so the K-compression cache pages
+alongside the raw KV (``kg_pages`` has exactly one row per physical page)
+and admission/eviction can never desync the two. The gate's top-k still
+emits *logical* block ids; the logical->physical translation happens at
+gather time (pure-JAX path) or inside the kernel's scalar-prefetch
+index_map (repro.kernels.block_sparse_decode).
+
+Layout (``L`` = self-attn layers, ``P`` = pool pages, ``ps`` = page size):
+  k_pages / v_pages  [L, P, ps, Hkv, Dh]   post-rope keys / values
+  kg_pages           [L, P, Hkv, Dg]       gate K-compression twin
+  page_table         [n_slots, npt] int32  physical ids; NULL_PAGE = empty
+  cur_len / active   [n_slots]             per-slot ragged lengths
+
+Physical page 0 is reserved as the null/trash page: unallocated table
+entries point at it and writes for inactive slots are routed there, so the
+jitted decode step needs no host-side masking. The allocator never hands
+out page 0.
+
+Staleness contract (mirrors core.kcache): a page's ``kg_pages`` row is
+only valid once the page is FULL. Partially-filled trailing pages keep a
+zeroed row (freshly-admitted pages are zeroed explicitly — a recycled
+page still holds the previous tenant's entry) and the serving engine
+force-selects the trailing block, exactly like the contiguous engine.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import GateConfig, ModelConfig
+from repro.core.kcache import finalize_block_kg
+
+NULL_PAGE = 0
+
+
+class PagedPages(NamedTuple):
+    """Device-side page pools, stacked over self-attention layers."""
+    k_pages: jnp.ndarray                 # [L, P, ps, Hkv, Dh]
+    v_pages: jnp.ndarray                 # [L, P, ps, Hkv, Dh]
+    kg_pages: Optional[jnp.ndarray]      # [L, P, Hkv, Dg]
+
+
+def init_pages(cfg: ModelConfig, num_pages: int, n_layers: int,
+               dtype=None) -> PagedPages:
+    dt = dtype or jnp.dtype(cfg.dtype)
+    ps = cfg.gate.block_size
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    kg = (jnp.zeros((n_layers, num_pages, hkv, cfg.gate.d_gate), dt)
+          if cfg.gate.enabled else None)
+    return PagedPages(
+        k_pages=jnp.zeros((n_layers, num_pages, ps, hkv, dh), dt),
+        v_pages=jnp.zeros((n_layers, num_pages, ps, hkv, dh), dt),
+        kg_pages=kg)
+
+
+@functools.partial(jax.jit, static_argnames=("length", "block_size"),
+                   donate_argnums=(0,))
+def scatter_prefill(pages: PagedPages, k_cache: jnp.ndarray,
+                    v_cache: jnp.ndarray, kg_cache: Optional[jnp.ndarray],
+                    length: int, page_ids: jnp.ndarray,
+                    block_size: int) -> PagedPages:
+    """Copy one request's contiguous prefill caches into its pages.
+
+    k_cache/v_cache: [L, 1, S_max, Hkv, Dh] from ``lm_prefill`` with
+    S_max >= n_pages * block_size; ``page_ids`` [n_reserved] int32 covers
+    the request's FULL reservation (prompt pages + pages for future decode
+    tokens). kg rows beyond the ``length // block_size`` complete blocks
+    are zeroed — recycled pages may hold the previous tenant's entries.
+    """
+    n_res = page_ids.shape[0]
+    n_prompt = -(-length // block_size)
+    kl = k_cache[:, 0, : n_prompt * block_size]
+    vl = v_cache[:, 0, : n_prompt * block_size]
+    nl = kl.shape[0]
+    kl = kl.reshape(nl, n_prompt, block_size, *kl.shape[2:])
+    vl = vl.reshape(nl, n_prompt, block_size, *vl.shape[2:])
+    k_pages = pages.k_pages.at[:, page_ids[:n_prompt]].set(
+        kl.astype(pages.k_pages.dtype))
+    v_pages = pages.v_pages.at[:, page_ids[:n_prompt]].set(
+        vl.astype(pages.v_pages.dtype))
+    kg_pages = pages.kg_pages
+    if kg_pages is not None:
+        nbc = length // block_size
+        kg_new = jnp.zeros((nl, n_res) + kg_pages.shape[2:], kg_pages.dtype)
+        if nbc and kg_cache is not None:
+            kg_new = kg_new.at[:, :nbc].set(
+                kg_cache[:, 0, :nbc].astype(kg_pages.dtype))
+        kg_pages = kg_pages.at[:, page_ids].set(kg_new)
+    return PagedPages(k_pages, v_pages, kg_pages)
+
+
+def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                       kg_pages: Optional[jnp.ndarray],
+                       kr_new: jnp.ndarray, v_new: jnp.ndarray,
+                       page_table: jnp.ndarray, cur_len: jnp.ndarray,
+                       active: jnp.ndarray, gate_params: Optional[Dict],
+                       cfg: GateConfig, *, rope_theta: float = 10000.0
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                  Optional[jnp.ndarray]]:
+    """ONE layer's paged twin of the contiguous write + ``update_kcache``.
+
+    kr_new/v_new: [S, Hkv, Dh] the new token's post-rope K / V per slot.
+    Writes land at (page_table[slot, cur_len // ps], cur_len % ps); rows
+    with ``active == False`` are routed to the null page. When a slot's
+    page completes ((cur_len+1) % ps == 0) the page's keys are rotated
+    back to the pre-rope frame (same trick as kcache.update_kcache) and
+    pooled+projected into that page's ``kg_pages`` row.
+    """
+    ps = cfg.block_size
+    n_slots = cur_len.shape[0]
+    sidx = jnp.arange(n_slots)
+    logical = cur_len // ps
+    off = cur_len % ps
+    phys = page_table[sidx, logical]                       # [S]
+    phys = jnp.where(active, phys, NULL_PAGE)
+    k_pages = k_pages.at[phys, off].set(kr_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, off].set(v_new.astype(v_pages.dtype))
+
+    if kg_pages is None or gate_params is None:
+        return k_pages, v_pages, kg_pages
+
+    completed = active & (((cur_len + 1) % ps) == 0)       # [S]
+
+    def one_slot(page_k, lg):
+        # page_k [ps, Hkv, Dh] post-rope keys of the (now full) page
+        return finalize_block_kg(gate_params, page_k, lg * ps, lg, cfg,
+                                 is_roped=True, rope_theta=rope_theta)
+
+    kg_new = jax.vmap(one_slot)(k_pages[phys], logical)    # [S, Hkv, Dg]
+    phys_kg = jnp.where(completed, phys, NULL_PAGE)
+    kg_cur = kg_pages[phys_kg]
+    kg_write = jnp.where(completed[:, None, None],
+                         kg_new.astype(kg_pages.dtype), kg_cur)
+    kg_pages = kg_pages.at[phys_kg].set(kg_write)
+    return k_pages, v_pages, kg_pages
+
+
+def gather_kg(kg_pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """[P, Hkv, Dg] x [S, npt] -> per-slot logical Kg view [S, npt, Hkv, Dg]."""
+    return kg_pages[page_table]
+
+
+def gather_kv(pages_1l: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+    """[P, ps, Hkv, Dh] x [S, npt] -> contiguous view [S, npt*ps, Hkv, Dh].
+
+    Dense-attention fallback path (and debugging); the sparse path never
+    materialises this — it gathers selected pages only.
+    """
+    s, npt = page_table.shape
+    g = pages_1l[page_table]                 # [S, npt, ps, Hkv, Dh]
+    return g.reshape(s, npt * pages_1l.shape[1], *pages_1l.shape[2:])
+
+
+class PageAllocator:
+    """Host-side free-list allocator over the physical page pool.
+
+    Page 0 (NULL_PAGE) is reserved. Allocation is LIFO over the free list
+    so freshly-freed pages are reused first (cache-warm + makes free-list
+    reuse observable in tests).
+    """
+
+    def __init__(self, num_pages: int):
+        if num_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        self.num_pages = num_pages
+        self._free: List[int] = list(range(num_pages - 1, 0, -1))
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """n pages, or None if the pool can't satisfy the request."""
+        if n > len(self._free):
+            return None
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            if i == NULL_PAGE:
+                raise ValueError("page 0 is reserved")
+            if i in self._free:
+                raise ValueError(f"double free of page {i}")
+            self._free.append(int(i))

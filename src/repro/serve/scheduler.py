@@ -1,0 +1,171 @@
+"""Iteration-level continuous-batching scheduler (vLLM-style, simplified).
+
+Host-side bookkeeping for the paged decode engine: a fixed number of
+decode SLOTS (rows of the jitted batched step) and a page pool. Each
+engine iteration:
+
+  1. ``admissions()`` — pop pending requests FIFO into free slots while
+     the allocator can reserve their full page budget
+     (ceil((prompt + max_new) / page_size); upfront reservation means a
+     running request can never stall mid-stream on an empty free list —
+     admission control is the single backpressure point).
+  2. run the batched decode step over all slots (inactive rows are
+     masked inside the model via ``active``).
+  3. ``complete_step()`` — append sampled tokens, advance per-slot
+     lengths, retire finished requests and free their pages.
+
+The page table / cur_len / active arrays live here as host numpy and are
+shipped to the device each step; the jitted step never recompiles because
+their SHAPES are fixed by (n_slots, max_pages_per_seq).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.serve.paging import NULL_PAGE, PageAllocator
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # [prompt_len] int32
+    max_new_tokens: int
+    # filled in by the scheduler / engine
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    out_logits: List[np.ndarray] = dataclasses.field(default_factory=list)
+    slot: int = -1
+    pages: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.out_tokens) >= self.max_new_tokens
+
+
+def pages_needed(prompt_len: int, max_new_tokens: int, page_size: int) -> int:
+    """Full-lifetime page budget. The last generated token is sampled but
+    never written back, hence the ``- 1``."""
+    total = prompt_len + max(max_new_tokens - 1, 0)
+    return max(1, -(-total // page_size))
+
+
+class Scheduler:
+    def __init__(self, n_slots: int, num_pages: int, page_size: int,
+                 max_pages_per_seq: int):
+        self.n_slots = n_slots
+        self.page_size = page_size
+        self.max_pages_per_seq = max_pages_per_seq
+        self.allocator = PageAllocator(num_pages)
+        self.page_table = np.full((n_slots, max_pages_per_seq), NULL_PAGE,
+                                  np.int32)
+        self.cur_len = np.zeros((n_slots,), np.int32)
+        self.active = np.zeros((n_slots,), bool)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self.pending: Deque[Request] = deque()
+        self.finished: Dict[int, Request] = {}
+        # telemetry
+        self.n_admitted = 0
+        self.n_retired = 0
+        self.admission_stalls = 0          # steps a head-of-line req waited
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1 "
+                f"(got {req.max_new_tokens})")
+        if req.prompt_len < 1:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        need = pages_needed(req.prompt_len, req.max_new_tokens, self.page_size)
+        if need > self.max_pages_per_seq:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages > table width "
+                f"{self.max_pages_per_seq}")
+        if need > self.allocator.num_pages - 1:
+            raise ValueError(
+                f"request {req.rid} needs {need} pages but the pool only has "
+                f"{self.allocator.num_pages - 1} — it can never be admitted")
+        self.pending.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.pending) or bool(self.active.any())
+
+    # -- admission ----------------------------------------------------------
+
+    def admissions(self) -> List[Request]:
+        """Admit pending requests FIFO into free slots while pages last.
+
+        FIFO with head-of-line blocking: a stuck large request is not
+        overtaken by smaller ones (latency fairness, deterministic tests).
+        """
+        out: List[Request] = []
+        while self.pending:
+            slot = next((i for i in range(self.n_slots)
+                         if self.slots[i] is None), -1)
+            if slot < 0:
+                break
+            req = self.pending[0]
+            need = pages_needed(req.prompt_len, req.max_new_tokens,
+                                self.page_size)
+            ids = self.allocator.alloc(need)
+            if ids is None:
+                self.admission_stalls += 1
+                break
+            self.pending.popleft()
+            req.slot, req.pages = slot, ids
+            self.slots[slot] = req
+            self.page_table[slot] = NULL_PAGE
+            self.page_table[slot, :need] = np.asarray(ids, np.int32)
+            self.cur_len[slot] = req.prompt_len
+            self.active[slot] = True
+            self.n_admitted += 1
+            out.append(req)
+        return out
+
+    # -- step completion ----------------------------------------------------
+
+    def complete_step(self, next_tokens: np.ndarray,
+                      logits: Optional[np.ndarray] = None) -> List[Request]:
+        """Record one decode step's outputs; returns requests retired now.
+
+        next_tokens [n_slots] int; logits [n_slots, V] (optional, for
+        parity testing). Only slots active DURING the step are recorded.
+        """
+        retired: List[Request] = []
+        for slot in np.nonzero(self.active)[0]:
+            req = self.slots[slot]
+            req.out_tokens.append(int(next_tokens[slot]))
+            if logits is not None:
+                req.out_logits.append(np.asarray(logits[slot]))
+            self.cur_len[slot] += 1
+            if req.done:
+                retired.append(self._retire(int(slot)))
+        return retired
+
+    def retire_if_done(self, req: Request) -> bool:
+        """Retire a just-admitted request that needs no decode steps
+        (max_new_tokens == 1: the prefill already produced its token)."""
+        if req.done and self.slots[req.slot] is req:
+            self._retire(req.slot)
+            return True
+        return False
+
+    def _retire(self, slot: int) -> Request:
+        req = self.slots[slot]
+        self.allocator.free(req.pages)
+        req.pages = []
+        self.slots[slot] = None
+        self.active[slot] = False
+        self.cur_len[slot] = 0
+        self.page_table[slot] = NULL_PAGE
+        self.finished[req.rid] = req
+        self.n_retired += 1
+        return req

@@ -194,25 +194,28 @@ def sharded_sparse_decode(
         kg_ = jnp.take_along_axis(k_loc, idx_seq, axis=1)   # [B,c*bs,Hkv,Dh]
         vg_ = jnp.take_along_axis(v_loc, idx_seq, axis=1)
         sc = jnp.einsum("bhgd,bkhd->bhgk", qr.astype(jnp.float32),
-                        kg_.astype(jnp.float32)) / math.sqrt(dh)
+                        kg_.astype(jnp.float32)) * (1.0 / math.sqrt(dh))
         tok_valid = (tok0 + pos_l) < new_len[:, None, None, None]
         valid = mine[..., None] & tok_valid                 # [B,Hkv,c,bs]
         valid = valid.reshape(b, hkv, 1, c * bs)
         sc = jnp.where(valid, sc, NEG_INF)
-        m_i = jnp.max(sc, axis=-1, keepdims=True)           # [B,Hkv,G,1]
-        p = jnp.where(valid, jnp.exp(sc - m_i), 0.0)
-        l_i = jnp.sum(p, axis=-1, keepdims=True)
-        o_i = jnp.einsum("bhgk,bkhd->bhgd", p, vg_.astype(jnp.float32))
 
         # -- 6) flash-decoding combine across shards ----------------------
-        if nsh > 1:
-            m = jax.lax.pmax(m_i, seq)
-            alpha = jnp.exp(m_i - m)
-            l = jax.lax.psum(l_i * alpha, seq)
-            o = jax.lax.psum(o_i * alpha, seq)
-        else:
-            l, o = l_i, o_i
-        o = o / jnp.maximum(l, 1e-30)
+        # Two-pass form: resolve the GLOBAL max first (pmax is exact), then
+        # every shard exponentiates against it and normalises by the global
+        # psum'd mass before the PV product. Each per-element op is then
+        # bitwise identical to the single-device softmax reference — the
+        # one-pass exp(m_i-m) rescale drifts ~1e-5 per step, and a decode
+        # loop amplifies any bf16 rounding flip through the KV cache
+        # (observed 4e-2 logit divergence by step 4; see test_distributed).
+        m_i = jnp.max(sc, axis=-1, keepdims=True)           # [B,Hkv,G,1]
+        m = jax.lax.pmax(m_i, seq) if nsh > 1 else m_i
+        p = jnp.where(valid, jnp.exp(sc - m), 0.0)
+        l_i = jnp.sum(p, axis=-1, keepdims=True)
+        l = jax.lax.psum(l_i, seq) if nsh > 1 else l_i
+        pn = p / jnp.maximum(l, 1e-30)
+        o_i = jnp.einsum("bhgk,bkhd->bhgd", pn, vg_.astype(jnp.float32))
+        o = jax.lax.psum(o_i, seq) if nsh > 1 else o_i
         return o.astype(qr.dtype), k_loc, v_loc, kg_loc
 
     fn = shard_map(

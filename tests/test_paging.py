@@ -1,0 +1,317 @@
+"""Paged-KV continuous-batching subsystem tests.
+
+Parity contract: paged decode (pool + page table + logical->physical
+translation) must match the contiguous engine to <= 1e-3 logits — in
+practice the sparse ref path is bitwise identical, so the bound is slack
+for rounding on other paths. Parity cases run the reduced config in
+float32: the contract under test is indexing/scheduling equivalence, not
+bf16 reduction noise.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.config import GateConfig, reduced
+from repro.core import attngate as ag
+from repro.core import kcache as kc
+from repro.kernels import ops, ref
+from repro.models.common import apply_rope
+from repro.models.registry import get_api
+from repro.serve import paging as pg
+from repro.serve.engine import DecodeEngine
+from repro.serve.scheduler import Request, Scheduler, pages_needed
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# allocator / scheduler (host-side)
+# ---------------------------------------------------------------------------
+
+def test_page_allocator_free_list_reuse():
+    al = pg.PageAllocator(6)              # pages 1..5 usable, 0 reserved
+    a = al.alloc(3)
+    b = al.alloc(2)
+    assert al.alloc(1) is None            # exhausted
+    assert pg.NULL_PAGE not in a + b
+    assert len(set(a + b)) == 5
+    al.free(a)
+    c = al.alloc(3)
+    assert set(c) == set(a)               # LIFO reuse of freed pages
+    with pytest.raises(ValueError):
+        al.free([0])                      # null page is untouchable
+    with pytest.raises(ValueError):
+        al.free(c[:1] * 2)                # double free
+
+
+def test_scheduler_fifo_head_of_line():
+    sched = Scheduler(n_slots=2, num_pages=8, page_size=4,
+                      max_pages_per_seq=4)
+    big = Request(rid=0, prompt=np.zeros(12, np.int32), max_new_tokens=5)
+    small = Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+    tiny = Request(rid=2, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+    for r in (big, small, tiny):
+        sched.submit(r)
+    admitted = sched.admissions()
+    # big takes 4 pages, small takes 2 of the remaining 3; tiny has a slot
+    # shortage (2 slots), NOT a page shortage
+    assert [r.rid for r in admitted] == [0, 1]
+    assert sched.active.sum() == 2
+    # finish 'small' -> its pages and slot free -> tiny admitted FIFO
+    sched.complete_step(np.array([9, 9], np.int32))
+    sched.complete_step(np.array([9, 9], np.int32))
+    assert 1 in sched.finished
+    small_pages = set()  # freed pages are recycled below
+    admitted = sched.admissions()
+    assert [r.rid for r in admitted] == [2]
+
+
+def test_scheduler_rejects_impossible_request():
+    sched = Scheduler(n_slots=1, num_pages=4, page_size=4,
+                      max_pages_per_seq=16)
+    with pytest.raises(ValueError):
+        sched.submit(Request(rid=0, prompt=np.zeros(40, np.int32),
+                             max_new_tokens=4))
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity: paged gather == contiguous
+# ---------------------------------------------------------------------------
+
+def _paged_from_contiguous(k_cache, v_cache, nb, bs, perm):
+    """Scatter a contiguous [B,S,Hkv,Dh] cache into per-batch pools via a
+    permuted page table. Returns pooled arrays + table for batch-shared
+    pools (pages of all rows share one pool)."""
+    b, s, hkv, dh = k_cache.shape
+    npool = b * nb + 1                                  # + null page
+    k_pages = np.zeros((npool, bs, hkv, dh), k_cache.dtype)
+    v_pages = np.zeros((npool, bs, hkv, dh), v_cache.dtype)
+    table = np.zeros((b, nb), np.int32)
+    for bi in range(b):
+        for j in range(nb):
+            phys = 1 + perm[bi * nb + j]
+            table[bi, j] = phys
+            k_pages[phys] = k_cache[bi, j * bs:(j + 1) * bs]
+            v_pages[phys] = v_cache[bi, j * bs:(j + 1) * bs]
+    return (jnp.asarray(k_pages), jnp.asarray(v_pages), jnp.asarray(table))
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_paged_sparse_decode_matches_contiguous(impl):
+    b, hkv, g, dh, nb, bs, nsel = 2, 2, 4, 32, 6, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    q = jax.random.normal(ks[0], (b, hkv, g, dh), jnp.float32)
+    kc_ = jax.random.normal(ks[1], (b, nb * bs, hkv, dh), jnp.float32)
+    vc_ = jax.random.normal(ks[2], (b, nb * bs, hkv, dh), jnp.float32)
+    kv_len = jnp.array([nb * bs, nb * bs - 5])
+    rng = np.random.default_rng(3)
+    idx = np.full((b, hkv, nsel), -1, np.int32)
+    for bi in range(b):
+        for hi in range(hkv):
+            n = rng.integers(1, nsel + 1)
+            idx[bi, hi, :n] = rng.choice(nb, n, replace=False)
+        idx[bi, :, 0] = (int(kv_len[bi]) - 1) // bs      # last block forced
+    idx = jnp.asarray(idx)
+    o_ct = ops.sparse_decode(q, kc_, vc_, idx, kv_len, block_size=bs,
+                             impl="ref")
+    perm = rng.permutation(b * nb)                       # scrambled pages
+    k_pages, v_pages, table = _paged_from_contiguous(
+        np.asarray(kc_), np.asarray(vc_), nb, bs, perm)
+    o_pg = ops.paged_sparse_decode(q, k_pages, v_pages, idx, table, kv_len,
+                                   block_size=bs, impl=impl)
+    tol = 1e-6 if impl == "ref" else 1e-5
+    np.testing.assert_allclose(np.asarray(o_pg), np.asarray(o_ct),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# engine-level parity: continuous batching == per-request contiguous decode
+# ---------------------------------------------------------------------------
+
+def _tiny_cfg(method="budget"):
+    cfg = reduced(configs.get("qwen3_0_6b")).replace(dtype="float32")
+    return cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, token_budget=32, method=method,
+        threshold=2e-2))
+
+
+def _mk_requests(cfg, specs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"rid": i, "max_new_tokens": mn,
+             "tokens": rng.integers(0, cfg.vocab_size,
+                                    size=(pl,)).astype(np.int32)}
+            for i, (pl, mn) in enumerate(specs)]
+
+
+def _reference_rollout(eng, req):
+    """Per-request contiguous greedy decode; returns (tokens, logits)."""
+    params, cfg = eng.params, eng.cfg
+    logits, st = eng.api.prefill(
+        params, {"tokens": jnp.asarray(req["tokens"])[None]}, cfg,
+        eng.max_len)
+    lgs = [np.asarray(logits[0], np.float32)]
+    t = jnp.argmax(logits, -1).astype(jnp.int32)
+    toks = [int(t[0])]
+    for _ in range(req["max_new_tokens"] - 1):
+        t, lg, st = eng._step(params, st, t)
+        lgs.append(np.asarray(lg[0], np.float32))
+        toks.append(int(t[0]))
+    return toks, np.stack(lgs)
+
+
+def _assert_serve_parity(cfg, specs, *, n_slots, sparse=True,
+                         sparse_impl="ref", num_pages=None, seed=0):
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _mk_requests(cfg, specs, seed)
+    eng = DecodeEngine(cfg, params, max_len=128, sparse=sparse,
+                       sparse_impl=sparse_impl)
+    res = eng.serve(reqs, n_slots=n_slots, num_pages=num_pages,
+                    collect_logits=True)
+    assert res["stats"]["retired"] == len(reqs)
+    for r in reqs:
+        toks, lgs = _reference_rollout(eng, r)
+        assert res[r["rid"]] == toks, f"rid {r['rid']} token mismatch"
+        d = float(np.max(np.abs(res["logits"][r["rid"]] - lgs)))
+        assert d <= 1e-3, f"rid {r['rid']}: logit diff {d}"
+    return res
+
+
+def test_serve_ragged_midstream_parity():
+    """The acceptance case: ragged prompt lengths (block-unaligned), more
+    requests than slots -> mid-stream admission + retirement; paged decode
+    must match per-request contiguous decode to <= 1e-3 logits."""
+    cfg = _tiny_cfg()
+    specs = [(21, 8), (37, 5), (16, 11), (29, 7), (21, 4), (44, 6)]
+    res = _assert_serve_parity(cfg, specs, n_slots=3)
+    assert res["stats"]["admitted"] == 6
+    # with 3 slots and 6 requests, some admissions happened mid-stream
+    assert res["stats"]["decode_steps"] < sum(mn for _, mn in specs)
+
+
+def test_serve_dense_paged_parity():
+    cfg = _tiny_cfg()
+    specs = [(13, 6), (26, 4), (9, 8)]
+    _assert_serve_parity(cfg, specs, n_slots=2, sparse=False)
+
+
+@pytest.mark.slow
+def test_serve_parity_threshold_and_kernel():
+    """Extended sweep: threshold selection method and the Pallas interpret
+    kernel through the full serving stack."""
+    cfg = _tiny_cfg(method="threshold")
+    _assert_serve_parity(cfg, [(17, 6), (25, 5), (40, 7)], n_slots=2)
+    cfg = _tiny_cfg()
+    _assert_serve_parity(cfg, [(21, 6), (34, 5)], n_slots=2,
+                         sparse_impl="pallas_interpret")
+
+
+def test_serve_page_exhaustion_queueing_and_reuse():
+    """A pool sized for ~one sequence forces serialized admission: requests
+    queue on page exhaustion, finish, and freed pages are recycled."""
+    cfg = _tiny_cfg()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    specs = [(24, 6), (24, 6), (24, 6)]
+    reqs = _mk_requests(cfg, specs, seed=2)
+    need = pages_needed(24, 6, cfg.gate.block_size)
+    eng = DecodeEngine(cfg, params, max_len=64, sparse=True)
+    # room for one reservation + null page only
+    res = eng.serve(reqs, n_slots=3, num_pages=need + 1, collect_logits=True)
+    assert res["stats"]["retired"] == 3
+    assert res["stats"]["admission_stalls"] > 0          # exhaustion hit
+    # page-for-page serialized execution still yields correct outputs
+    for r in reqs:
+        toks, lgs = _reference_rollout(eng, r)
+        assert res[r["rid"]] == toks
+        assert float(np.max(np.abs(res["logits"][r["rid"]] - lgs))) <= 1e-3
+
+
+def test_serve_max_new_one_and_single_token_prompt():
+    """Edge raggedness: a request satisfied by prefill alone (max_new=1)
+    and a one-token prompt, mixed with a normal request."""
+    cfg = _tiny_cfg()
+    _assert_serve_parity(cfg, [(10, 1), (1, 5), (18, 4)], n_slots=2)
+
+
+# ---------------------------------------------------------------------------
+# paged K-compression cache: incremental update == prefill recomputation
+# ---------------------------------------------------------------------------
+
+def _kg_fixture(seed, n_pages_seq=3):
+    ps, hkv, dh, dg = 4, 2, 8, 8
+    gcfg = GateConfig(block_size=ps, d_gate=dg)
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    gate = ag.init_attngate(k1, n_kv_heads=hkv, group=2, head_dim=dh,
+                            cfg=gcfg, dtype="float32")
+    t_total = n_pages_seq * ps
+    k_nope = jax.random.normal(k2, (1, t_total, hkv, dh), jnp.float32)
+    return gcfg, gate, k_nope, ps, hkv, dh, dg
+
+
+def _run_paged_appends(gcfg, gate, k_nope, ps, hkv, dh, dg, t_total):
+    """Token-by-token append into paged storage (single slot, scrambled
+    physical pages); returns (kg_pages, page_table)."""
+    n_pages = t_total // ps
+    npool = n_pages + 2
+    k_pages = jnp.zeros((npool, ps, hkv, dh), jnp.float32)
+    v_pages = jnp.zeros((npool, ps, hkv, dh), jnp.float32)
+    kg_pages = jnp.zeros((npool, hkv, dg), jnp.float32)
+    # physical ids deliberately not in logical order
+    table = np.zeros((1, n_pages), np.int32)
+    table[0] = 1 + np.roll(np.arange(n_pages), 1)
+    table_j = jnp.asarray(table)
+    active = jnp.ones((1,), bool)
+    rope_theta = 10000.0
+    for t in range(t_total):
+        pos = jnp.full((1, 1), t, jnp.int32)
+        kr = apply_rope(k_nope[:, t:t + 1], pos, rope_theta)[:, 0]
+        k_pages, v_pages, kg_pages = pg.append_token_paged(
+            k_pages, v_pages, kg_pages, kr, kr, table_j,
+            jnp.full((1,), t, jnp.int32), active, gate, gcfg,
+            rope_theta=rope_theta)
+    return kg_pages, table
+
+
+def test_paged_kg_matches_prefill_recompute():
+    gcfg, gate, k_nope, ps, hkv, dh, dg = _kg_fixture(0)
+    t_total = k_nope.shape[1]
+    kg_pages, table = _run_paged_appends(gcfg, gate, k_nope, ps, hkv, dh,
+                                         dg, t_total)
+    n_pages = t_total // ps
+    cache = kc.init_kcache(1, n_pages, hkv, dg, jnp.float32)
+    cache = kc.prefill_kcache(cache, gate, k_nope, gcfg)
+    for j in range(n_pages):
+        got = np.asarray(kg_pages[table[0, j]])
+        want = np.asarray(cache.kg[0, j])
+        np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**16), n_pages_seq=st.integers(1, 4))
+    def test_property_paged_kg_prefill_equivalence(seed, n_pages_seq):
+        """At every block boundary, the paged incremental Kg update (write
+        post-rope, un-rope, pool, project) must equal bulk prefill_kcache
+        recomputation on the pre-rope prefix — the invariant that keeps
+        the paged gate cache trustworthy under arbitrary page layouts."""
+        gcfg, gate, k_nope, ps, hkv, dh, dg = _kg_fixture(seed, n_pages_seq)
+        t_total = n_pages_seq * ps
+        kg_pages, table = _run_paged_appends(gcfg, gate, k_nope, ps, hkv,
+                                             dh, dg, t_total)
+        cache = kc.init_kcache(1, n_pages_seq, hkv, dg, jnp.float32)
+        cache = kc.prefill_kcache(cache, gate, k_nope, gcfg)
+        for j in range(n_pages_seq):
+            np.testing.assert_allclose(
+                np.asarray(kg_pages[table[0, j]]),
+                np.asarray(cache.kg[0, j]), atol=2e-5, rtol=2e-5)
+except ImportError:  # pragma: no cover - hypothesis is optional (dev dep)
+    pass

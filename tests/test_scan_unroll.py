@@ -22,7 +22,10 @@ def test_unroll_matches_scan(arch):
     l1, _ = api.forward(params, batch, cfg, mode="pretrain")
     cfg2 = cfg.replace(scan_layers=False)
     l2, _ = get_api(cfg2).forward(params, batch, cfg2, mode="pretrain")
-    assert abs(float(l1) - float(l2)) < 5e-3   # bf16 reduction-order noise
+    # relative bound: bf16 reduction-order noise scales with the loss
+    # magnitude (the MoE family sits near ln(V)~6 at init and exceeds an
+    # absolute 5e-3), so compare relative to the scanned loss
+    assert abs(float(l1) - float(l2)) < 2e-3 * max(1.0, abs(float(l1)))
 
 
 def test_unroll_matches_scan_distill():
