@@ -13,11 +13,15 @@ released checkpoints + GPUs; DESIGN.md §7 records the mapping):
   tab2   distillation training cost                (paper Tab. 2)
   serve  continuous-batching paged-KV engine vs pad-to-max contiguous
          batching on ragged traffic (--engine paged|contiguous|both)
+  decode per-step decode latency of the hot path (sparse ref / Pallas
+         interpret / dense) — the perf-trajectory payload of --json
   roofline  print the dry-run roofline table       (EXPERIMENTS.md source)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6] [--fast]
-            [--engine paged]
-Output: CSV-ish lines `section,key,value` plus human-readable summaries.
+            [--engine paged] [--json BENCH_decode.json]
+Output: CSV-ish lines `section,key,value` plus human-readable summaries;
+        --json also persists every emitted metric (and prints a comparison
+        against the previous JSON at the same path, when present).
 """
 from __future__ import annotations
 
@@ -44,9 +48,21 @@ from repro.train import loop as train_loop
 
 FAST = bool(int(os.environ.get("REPRO_BENCH_FAST", "0")))
 
+# every emit() is also recorded here so --json can persist the run as a
+# machine-readable perf-trajectory point (BENCH_decode.json)
+RESULTS: Dict[str, Dict[str, object]] = {}
+
+
+def _maybe_num(value):
+    try:
+        return float(value)
+    except (TypeError, ValueError):
+        return str(value)
+
 
 def emit(section: str, key: str, value) -> None:
     print(f"{section},{key},{value}")
+    RESULTS.setdefault(section, {})[key] = _maybe_num(value)
 
 
 # ---------------------------------------------------------------------------
@@ -231,13 +247,13 @@ def bench_fig6():
     speedup model over (seqlen, bs, sparsity) — decode is memory-bound, so
     speedup -> 1/(1-rho) (paper Fig. 6), (c) CPU wall-clock sanity."""
     print("\n== fig6: block-sparse flash decode kernel ==")
-    # (a) numerics: pallas interpret vs jnp oracle
+    # (a) numerics: pallas interpret vs jnp oracle (head-major caches)
     key = jax.random.PRNGKey(0)
     b, hkv, g, dh, bs, s = 2, 2, 4, 64, 64, 1024
     ks = jax.random.split(key, 4)
     q = jax.random.normal(ks[0], (b, hkv, g, dh), jnp.float32)
-    kc = jax.random.normal(ks[1], (b, s, hkv, dh), jnp.float32)
-    vc = jax.random.normal(ks[2], (b, s, hkv, dh), jnp.float32)
+    kc = jax.random.normal(ks[1], (b, hkv, s, dh), jnp.float32)
+    vc = jax.random.normal(ks[2], (b, hkv, s, dh), jnp.float32)
     kv_len = jnp.array([s, s - 17])
     nsel = 6
     idx = jax.random.permutation(ks[3], s // bs)[None, None, :nsel]
@@ -262,8 +278,8 @@ def bench_fig6():
 
     # (c) CPU wall-clock: sparse vs dense decode step (jnp paths)
     s2, nsel2 = 8192, 13                                      # 90% sparse
-    kc2 = jax.random.normal(ks[1], (2, s2, 4, 64), jnp.bfloat16)
-    vc2 = jax.random.normal(ks[2], (2, s2, 4, 64), jnp.bfloat16)
+    kc2 = jax.random.normal(ks[1], (2, 4, s2, 64), jnp.bfloat16)
+    vc2 = jax.random.normal(ks[2], (2, 4, s2, 64), jnp.bfloat16)
     q2 = jax.random.normal(ks[0], (2, 4, 4, 64), jnp.bfloat16)
     kvl = jnp.array([s2, s2])
     idx2 = jnp.broadcast_to(jnp.arange(nsel2)[None, None] * 9, (2, 4, nsel2)
@@ -487,6 +503,90 @@ def bench_serve():
              f"{pad_tok / (pad_tok + useful):.3f}")
 
 
+def bench_decode():
+    """Per-step decode latency of the hot path (ISSUE 2 tentpole metric).
+
+    Full tiny-model decode steps — prefill, then timed single-token steps —
+    for the sparse jnp path, the Pallas kernels in interpret mode (the CPU
+    stand-in for the TPU path: same code, same layout discipline) and the
+    dense baseline. CPU numbers track *layout regressions* (a reintroduced
+    cache-sized copy shows up as a step-latency jump in the JSON history),
+    not absolute TPU performance."""
+    print("\n== decode: per-step decode latency (hot path) ==")
+    # budget 64 = 4 blocks: keeps real sparsity (nsel < nb) even at the
+    # --fast prefill length, so the sparse paths exercise true selection
+    cfg = tiny_cfg(16, num_layers=2, budget=64)
+    params = tf.init_lm(jax.random.PRNGKey(0), cfg)
+    prefill_len = 128 if FAST else 256
+    n_steps = 8 if FAST else 24
+    max_len = prefill_len + n_steps + 8
+    batch = {"tokens": make_batch(cfg, BATCH, prefill_len,
+                                  DataState(3, 0))["tokens"]}
+    prefill = jax.jit(functools.partial(tf.lm_prefill, cfg=cfg,
+                                        max_len=max_len))
+    logits, st0 = prefill(params, batch)
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    nb = -(-prefill_len // cfg.gate.block_size)
+    nsel = min(max(1, cfg.gate.token_budget // cfg.gate.block_size), nb)
+    emit("decode", "prefill_len", prefill_len)
+    emit("decode", "batch", BATCH)
+    emit("decode", "n_steps", n_steps)
+    emit("decode", "sparsity", f"{1.0 - nsel / nb:.3f}")
+    for name, kw in (("sparse_ref", dict(sparse=True, sparse_impl="ref")),
+                     ("sparse_interpret",
+                      dict(sparse=True, sparse_impl="pallas_interpret")),
+                     ("dense", dict(sparse=False))):
+        step = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg, **kw))
+        st, tok = st0, tok0
+        for _ in range(2):                                  # warm compile
+            lg, st = step(params, st, tok)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        jax.block_until_ready(lg)
+        t0 = time.perf_counter()
+        for _ in range(n_steps):
+            lg, st = step(params, st, tok)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        jax.block_until_ready(lg)
+        dt = time.perf_counter() - t0
+        emit("decode", f"{name}_step_ms", f"{dt / n_steps * 1e3:.3f}")
+        emit("decode", f"{name}_tok_per_s",
+             f"{BATCH * n_steps / max(dt, 1e-9):.1f}")
+
+
+def _write_json(path: str) -> None:
+    """Persist this run's emitted metrics; print a before/after comparison
+    against a previous JSON at the same path (the perf trajectory)."""
+    prev = None
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prev = json.load(f)
+        except (OSError, ValueError):
+            prev = None
+    if prev and isinstance(prev.get("sections"), dict):
+        if prev.get("fast") != FAST:
+            # a --fast run measures a smaller workload (prefill/steps):
+            # a latency ratio against a full run would be pure noise
+            print(f"\ncompare,skipped,previous {path} used "
+                  f"fast={prev.get('fast')} vs fast={FAST} (workloads "
+                  "differ; no apples-to-apples latency comparison)")
+        else:
+            print(f"\n== comparison vs previous {path} ==")
+            for sec, keys in RESULTS.items():
+                old_sec = prev["sections"].get(sec, {})
+                for k, new in keys.items():
+                    old = old_sec.get(k)
+                    if isinstance(old, (int, float)) \
+                            and isinstance(new, float) and old:
+                        print(f"compare,{sec}.{k},{old:g}->{new:g},"
+                              f"x{new / old:.2f}")
+    out = {"generated_by": "benchmarks.run", "fast": FAST,
+           "sections": RESULTS}
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+    print(f"\nwrote {path}")
+
+
 def bench_roofline():
     """Pretty-print the dry-run roofline table (EXPERIMENTS.md source)."""
     print("\n== roofline: dry-run derived terms (single-pod) ==")
@@ -514,7 +614,7 @@ SECTIONS = {
     "fig4": bench_fig4, "fig5": bench_fig5, "fig6": bench_fig6,
     "fig7": bench_fig7, "fig8": bench_fig8, "fig9": bench_fig9,
     "tab1": bench_tab1, "tab2": bench_tab2, "serve": bench_serve,
-    "roofline": bench_roofline,
+    "decode": bench_decode, "roofline": bench_roofline,
 }
 
 
@@ -529,17 +629,25 @@ def main() -> None:
                     help="serving engine(s) for the `serve` section; "
                          "--engine paged implies --only serve unless "
                          "--only is given")
+    ap.add_argument("--json", default=None, metavar="PATH", dest="json_path",
+                    help="write the emitted metrics to PATH (e.g. "
+                         "BENCH_decode.json) and print a before/after "
+                         "comparison when a previous file exists there")
     args = ap.parse_args()
     if args.fast:
         FAST = True
     ENGINE = args.engine
     if args.engine != "both" and args.only is None:
         args.only = "serve"
+    if args.json_path and args.only is None:
+        args.only = "decode"          # the perf-trajectory default payload
     names = args.only.split(",") if args.only else list(SECTIONS)
     t0 = time.perf_counter()
     for n in names:
         SECTIONS[n]()
     print(f"\nall sections done in {time.perf_counter() - t0:.1f}s")
+    if args.json_path:
+        _write_json(args.json_path)
 
 
 if __name__ == "__main__":

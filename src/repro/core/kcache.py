@@ -20,26 +20,30 @@ from repro.core.attngate import gate_k
 
 
 class KCompressionCache(NamedTuple):
-    kg: jnp.ndarray            # [B, nb_max, Hkv, Dg]
+    kg: jnp.ndarray            # [B, Hkv, nb_max, Dg]  (HEAD-MAJOR)
     n_complete: jnp.ndarray    # [B] int32: number of finalized block entries
 
 
 def init_kcache(batch: int, max_blocks: int, n_kv_heads: int, d_gate: int,
                 dtype=jnp.bfloat16) -> KCompressionCache:
     return KCompressionCache(
-        kg=jnp.zeros((batch, max_blocks, n_kv_heads, d_gate), dtype),
+        kg=jnp.zeros((batch, n_kv_heads, max_blocks, d_gate), dtype),
         n_complete=jnp.zeros((batch,), jnp.int32))
 
 
 def prefill_kcache(cache: KCompressionCache, gate_params: Dict[str, Any],
                    k_nope: jnp.ndarray, cfg: GateConfig) -> KCompressionCache:
-    """Bulk-populate from a prefill of S tokens (only complete blocks)."""
+    """Bulk-populate from a prefill of S tokens (only complete blocks).
+    k_nope is seq-major [B, S, Hkv, Dh] (the natural prefill activation
+    layout); the one-time transpose into the head-major cache happens here
+    — prefill owns the layout conversion, decode never does."""
     b, s, hkv, dh = k_nope.shape
     nb = s // cfg.block_size
     if nb == 0:
         return cache
     kg = gate_k(gate_params, k_nope[:, : nb * cfg.block_size], cfg)
-    new = cache.kg.at[:, :nb].set(kg.astype(cache.kg.dtype))
+    new = cache.kg.at[:, :, :nb].set(
+        jnp.swapaxes(kg, 1, 2).astype(cache.kg.dtype))
     return KCompressionCache(new, jnp.full((b,), nb, jnp.int32))
 
 
@@ -70,11 +74,12 @@ def update_kcache(cache: KCompressionCache, gate_params: Dict[str, Any],
                   rope_theta: float = 10000.0) -> KCompressionCache:
     """Decode-time incremental update.
 
-    k_cache_raw: [B, S_max, Hkv, Dh] key cache. If ``cache_is_roped`` the
-    stored keys are post-RoPE (the standard layout) and are rotated *back*
-    to the pre-rope frame before pooling (RoPE is an orthogonal rotation, so
-    inversion = apply with negated positions) — this avoids keeping a second
-    pre-rope K cache (2x memory) just for the gate.
+    k_cache_raw: [B, Hkv, S_max, Dh] HEAD-MAJOR key cache. If
+    ``cache_is_roped`` the stored keys are post-RoPE (the standard layout)
+    and are rotated *back* to the pre-rope frame before pooling (RoPE is an
+    orthogonal rotation, so inversion = apply with negated positions) —
+    this avoids keeping a second pre-rope K cache (2x memory) just for the
+    gate. Only ONE block-size slice of the cache is ever touched per step.
     cur_len: [B] sequence length *after* appending the newest token.
 
     When ``cur_len`` crosses a block boundary, the just-completed block of
@@ -88,15 +93,18 @@ def update_kcache(cache: KCompressionCache, gate_params: Dict[str, Any],
     start = blk_idx * bs
 
     def one_row(k_raw, st, bi):
-        blk = jax.lax.dynamic_slice_in_dim(k_raw, st, bs, axis=0)  # [bs,Hkv,Dh]
-        return finalize_block_kg(gate_params, blk, st, bi, cfg,
-                                 is_roped=cache_is_roped,
+        # k_raw [Hkv, S, Dh]: slice the completed block, flip the tiny
+        # [Hkv, bs] corner to the seq-major frame finalize expects
+        blk = jax.lax.dynamic_slice_in_dim(k_raw, st, bs, axis=1)
+        return finalize_block_kg(gate_params, jnp.swapaxes(blk, 0, 1), st,
+                                 bi, cfg, is_roped=cache_is_roped,
                                  rope_theta=rope_theta)    # [Hkv, Dg]
 
     kg_new = jax.vmap(one_row)(k_cache_raw, start, blk_idx)   # [B,Hkv,Dg]
-    cur = jax.vmap(lambda c, i: c[i])(cache.kg, blk_idx)      # current content
+    cur = jax.vmap(lambda c, i: c[:, i])(cache.kg, blk_idx)   # current content
     kg_write = jnp.where(completed[:, None, None], kg_new.astype(cache.kg.dtype), cur)
-    new_kg = jax.vmap(lambda c, i, v: c.at[i].set(v))(cache.kg, blk_idx, kg_write)
+    new_kg = jax.vmap(lambda c, i, v: c.at[:, i].set(v))(cache.kg, blk_idx,
+                                                         kg_write)
     new_n = jnp.where(completed, blk_idx + 1, cache.n_complete)
     return KCompressionCache(new_kg, new_n.astype(jnp.int32))
 

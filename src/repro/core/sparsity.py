@@ -22,6 +22,22 @@ from repro.config import GateConfig
 from repro.models.common import NEG_INF
 
 
+def resolve_max_selected(cfg: GateConfig,
+                         max_selected: Optional[int] = None) -> int:
+    """Selected-list width BEFORE the per-method floor/cap: the explicit
+    cap when given, else the config token budget in blocks. The single
+    source of truth for the cap rule — shared by budget_select,
+    select_blocks and the fused gate-select kernel so the three can never
+    drift. An explicit zero/negative cap is a caller error, never a
+    silent fallback to the config budget."""
+    if max_selected is not None:
+        if max_selected <= 0:
+            raise ValueError(
+                f"max_selected must be positive, got {max_selected}")
+        return max_selected
+    return max(1, cfg.token_budget // cfg.block_size)
+
+
 def _force_blocks(scores: jnp.ndarray, n_valid_blocks: jnp.ndarray,
                   cfg: GateConfig) -> jnp.ndarray:
     """Pin the trailing (possibly partial) block and optionally block 0."""
@@ -46,7 +62,7 @@ def budget_select(scores: jnp.ndarray, n_valid_blocks: jnp.ndarray,
     Returns (block_indices [B, Hkv, k] int32 with -1 padding, mask [B,Hkv,nb]).
     """
     nb = scores.shape[-1]
-    k = max_selected or max(1, cfg.token_budget // cfg.block_size)
+    k = resolve_max_selected(cfg, max_selected)
     # the budget can never exclude the force-selected blocks (first/last)
     min_k = int(cfg.always_last_block) + int(cfg.always_first_block)
     k = min(max(k, min_k), nb)
@@ -91,7 +107,7 @@ def select_blocks(scores_or_probs: jnp.ndarray, n_valid_blocks: jnp.ndarray,
     if cfg.method == "budget":
         return budget_select(scores_or_probs, n_valid_blocks, cfg, max_selected)
     if cfg.method == "threshold":
-        ms = max_selected or max(1, cfg.token_budget // cfg.block_size)
+        ms = resolve_max_selected(cfg, max_selected)
         return threshold_select(scores_or_probs, n_valid_blocks, cfg, ms)
     raise ValueError(cfg.method)
 

@@ -188,11 +188,14 @@ def train_batch_pspecs(batch: Any, mesh: Mesh, ep_major: bool = False) -> Any:
 def decode_state_pspecs(state: Any, batch_size: int, mesh: Mesh) -> Any:
     """Specs for DecodeState-like pytrees.
 
-    Convention by leaf ndim (stacked layer dim first):
-      [L,B,S,H,D] KV caches      -> (None, dp|None, seq_axes, None, None)
-      [L,B,nb,H,Dg] Kg cache     -> same
-      [L,B,...] ssm states       -> (None, dp|None, model on widest dim)
-      [B] / [L,B] lengths        -> replicated
+    Convention (stacked layer dim first; caches are HEAD-MAJOR so the
+    sharded seq dim sits at axis 3). KV/Kg/cross caches are recognised by
+    FIELD NAME (NamedTuple keypath), not by rank — the hybrid SSM state
+    ``h`` is also 5-D and must fall through to the ssm rule:
+      k_cache/v_cache [L,B,H,S,D]  -> (None, dp|None, None, seq_axes, None)
+      kg_cache [L,B,H,nb,Dg] and cross_k/v -> same
+      other [L,B,...] ssm states   -> (None, dp|None, model on widest dim)
+      [B] / [L,B] lengths          -> replicated
     When batch is unshardable (long_500k B=1) the KV seq dim takes the DP
     axes too: context parallelism across the full mesh.
     """
@@ -201,17 +204,20 @@ def decode_state_pspecs(state: Any, batch_size: int, mesh: Mesh) -> Any:
     bspec = (dp if len(dp) > 1 else dp[0]) if b_shardable else None
     seq_axes: Any = MODEL if b_shardable else tuple(dp) + (MODEL,)
     n_model = mesh.shape[MODEL]
+    cache_names = {"k_cache", "v_cache", "kg_cache", "cross_k", "cross_v"}
 
-    def one(leaf):
-        if leaf.ndim >= 5:                          # [L,B,S,H,D] caches
-            spec = P(None, bspec, seq_axes, None, None)
-        elif leaf.ndim == 4:
-            # [L,B,*,*] ssm/conv states: put MODEL on the widest trailing
-            # dim the mesh divides (conv state is [L,B,conv_w,d_inner]).
+    def one(kp, leaf):
+        name = getattr(kp[-1], "name", "") if kp else ""
+        if name in cache_names and leaf.ndim == 5:  # [L,B,H,S,D] caches
+            spec = P(None, bspec, None, seq_axes, None)
+        elif leaf.ndim >= 4:
+            # [L,B,*,...] ssm/conv states: put MODEL on the widest trailing
+            # dim the mesh divides (conv state is [L,B,conv_w,d_inner];
+            # mamba2 h is [L,B,nh,hd,n]).
             dims = leaf.shape[2:]
             cand = [i for i, d in enumerate(dims) if d % n_model == 0]
             best = (2 + max(cand, key=lambda i: dims[i])) if cand else None
-            parts = [None, bspec, None, None]
+            parts = [None, bspec] + [None] * len(dims)
             if best is not None:
                 parts[best] = MODEL
             spec = P(*parts)
@@ -220,7 +226,7 @@ def decode_state_pspecs(state: Any, batch_size: int, mesh: Mesh) -> Any:
         else:
             spec = P(*((None,) * leaf.ndim))
         return sanitize_spec(spec, leaf.shape, mesh)
-    return jax.tree.map(one, state)
+    return jax.tree_util.tree_map_with_path(one, state)
 
 
 def logical_pspec(name: str, mesh: Mesh, ep_major: bool = False) -> P:

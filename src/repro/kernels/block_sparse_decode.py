@@ -11,17 +11,28 @@ TPU adaptation (see DESIGN.md §2):
     gather. Only selected blocks ever leave HBM.
   * the GQA query group is padded to the sublane tile (>=16 rows for bf16)
     — the analog of the paper padding query-head groups to 64 for wgmma.
-  * grid = (batch, heads_kv, max_selected_blocks); TPU grid iteration is
+  * grid = (batch, heads_kv, ceil(nsel / C)); TPU grid iteration is
     sequential per core, so the online-softmax state (m, l, acc) lives in
     VMEM scratch across the block loop. Cross-chip split-K (the analog of
     the paper's num_split load balancing) is done one level up via
     sequence-sharded shard_map (repro.serve.sharded).
-  * Mosaic double-buffers the HBM->VMEM streams, so the K/V fetch of block
-    j+1 overlaps the MXU dots of block j (warp-specialization analog).
+  * Mosaic double-buffers the HBM->VMEM streams, so the K/V fetch of the
+    next grid step overlaps the MXU dots of the current one
+    (warp-specialization analog).
 
-Layouts:
+Multi-block grid steps (ISSUE 2): each grid step folds ``C =
+blocks_per_step`` selected blocks — C KV tiles ([C*bs, Dh] of KV bytes per
+step) are streamed and folded into ONE online-softmax state update, so the
+padded query tile amortizes over C-x larger KV reads and the grid / DMA
+bookkeeping overhead drops ~C-x. ``nsel`` is padded to a multiple of C
+with -1 (ignored) entries.
+
+Layouts (NATIVE head-major — the decode-path invariant: no cache-sized
+transpose or copy between token-in and logits-out; prefill does the
+one-time layout conversion):
   q             [B, Hkv, G_pad, Dh]
-  k_cache/v_...  [B, Hkv, nb*bs, Dh]   (head-major for contiguous block reads)
+  k_cache/v_...  [B, Hkv, S, Dh]     (S = nb * bs; contiguous block reads)
+  k_pages/v_...  [P, Hkv, ps, Dh]    (paged pools, ps == block_size)
   block_indices [B, Hkv, nsel] int32 (-1 padding)
   kv_len        [B] int32
   out           [B, Hkv, G_pad, Dh]
@@ -40,11 +51,13 @@ NEG_INF = -1e30
 LANES = 128
 
 
-def _flash_step(blk, b, j, len_ref, q_ref, k_ref, v_ref, o_ref,
-                m_ref, l_ref, acc_ref, *, block_size: int, nsel: int,
-                scale: float):
-    """Shared online-softmax body: init scratch, fold one selected block
-    (skipped on ``blk < 0`` padding), finalize on the last grid step."""
+def _flash_group(idxs, b, j, n_groups, len_ref, q_ref, k_refs, v_refs,
+                 o_ref, m_ref, l_ref, acc_ref, *, block_size: int,
+                 scale: float):
+    """Shared online-softmax body: init scratch, fold ``C`` selected blocks
+    in one state update (individual -1 padding blocks are masked out; a
+    fully-padded group is skipped), finalize on the last grid step."""
+    C = len(k_refs)
 
     @pl.when(j == 0)
     def _init():
@@ -52,62 +65,80 @@ def _flash_step(blk, b, j, len_ref, q_ref, k_ref, v_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(blk >= 0)
+    gmax = idxs[0]
+    for blk in idxs[1:]:
+        gmax = jnp.maximum(gmax, blk)
+
+    @pl.when(gmax >= 0)
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32)                    # [G_pad, Dh]
-        k = k_ref[0, 0].astype(jnp.float32)                    # [bs, Dh]
-        v = v_ref[0, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        pos = blk * block_size + jax.lax.broadcasted_iota(
-            jnp.int32, s.shape, 1)
-        s = jnp.where(pos < len_ref[b], s, NEG_INF)            # partial block
+        scores = []
+        for i in range(C):
+            k = k_refs[i][0, 0].astype(jnp.float32)            # [bs, Dh]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32) * scale
+            pos = idxs[i] * block_size + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            # mask -1 padding blocks AND the partial trailing block
+            s = jnp.where((idxs[i] >= 0) & (pos < len_ref[b]), s, NEG_INF)
+            scores.append(s)
         m_prev = jnp.max(m_ref[...], axis=1, keepdims=True)    # [G_pad, 1]
         l_prev = jnp.max(l_ref[...], axis=1, keepdims=True)
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        p = jnp.exp(s - m_new)                                 # [G_pad, bs]
+        m_new = m_prev
+        for s in scores:
+            m_new = jnp.maximum(m_new, jnp.max(s, axis=1, keepdims=True))
         alpha = jnp.exp(m_prev - m_new)
-        l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
-        pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
-                                 preferred_element_type=jnp.float32)
-        acc_ref[...] = acc_ref[...] * alpha + pv
+        l_new = alpha * l_prev
+        acc = acc_ref[...] * alpha
+        for i in range(C):
+            # guard: a fully-masked block would give exp(NEG_INF-NEG_INF)=1
+            p = jnp.where(scores[i] > NEG_INF / 2,
+                          jnp.exp(scores[i] - m_new), 0.0)     # [G_pad, bs]
+            l_new = l_new + jnp.sum(p, axis=1, keepdims=True)
+            v = v_refs[i][0, 0].astype(jnp.float32)
+            acc = acc + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+        acc_ref[...] = acc
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
-    @pl.when(j == nsel - 1)
+    @pl.when(j == n_groups - 1)
     def _finalize():
         l = jnp.max(l_ref[...], axis=1, keepdims=True)
         o_ref[0, 0] = (acc_ref[...] / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
-def _kernel(idx_ref, len_ref,              # scalar prefetch
-            q_ref, k_ref, v_ref,           # VMEM in
-            o_ref,                          # VMEM out
-            m_ref, l_ref, acc_ref,          # VMEM scratch
-            *, block_size: int, nsel: int, scale: float):
+def _kernel_body(idx_ref, len_ref, refs, *, block_size: int, n_groups: int,
+                 blocks_per_step: int, scale: float):
+    """Unpack the (q, k*C, v*C, o, scratch) ref layout and run one group."""
+    C = blocks_per_step
+    q_ref = refs[0]
+    k_refs = refs[1:1 + C]
+    v_refs = refs[1 + C:1 + 2 * C]
+    o_ref = refs[1 + 2 * C]
+    m_ref, l_ref, acc_ref = refs[2 + 2 * C:5 + 2 * C]
     b = pl.program_id(0)
     h = pl.program_id(1)
     j = pl.program_id(2)
-    _flash_step(idx_ref[b, h, j], b, j, len_ref, q_ref, k_ref, v_ref,
-                o_ref, m_ref, l_ref, acc_ref, block_size=block_size,
-                nsel=nsel, scale=scale)
+    idxs = [idx_ref[b, h, j * C + i] for i in range(C)]
+    _flash_group(idxs, b, j, n_groups, len_ref, q_ref, k_refs, v_refs,
+                 o_ref, m_ref, l_ref, acc_ref, block_size=block_size,
+                 scale=scale)
+
+
+def _kernel(idx_ref, len_ref,              # scalar prefetch
+            *refs, **kw):
+    _kernel_body(idx_ref, len_ref, refs, **kw)
 
 
 def _kernel_paged(idx_ref, pt_ref, len_ref,  # scalar prefetch (+page table)
-                  q_ref, k_ref, v_ref,       # VMEM in (k/v blocks are PAGES)
-                  o_ref,                      # VMEM out
-                  m_ref, l_ref, acc_ref,      # VMEM scratch
-                  *, block_size: int, nsel: int, scale: float):
+                  *refs, **kw):
     # identical math to _kernel — the logical->physical translation lives
     # entirely in the BlockSpec index_map (pt_ref is consumed there); the
     # in-kernel masking stays in LOGICAL positions so kv_len semantics match
     # the contiguous kernel exactly.
-    b = pl.program_id(0)
-    h = pl.program_id(1)
-    j = pl.program_id(2)
-    _flash_step(idx_ref[b, h, j], b, j, len_ref, q_ref, k_ref, v_ref,
-                o_ref, m_ref, l_ref, acc_ref, block_size=block_size,
-                nsel=nsel, scale=scale)
+    _kernel_body(idx_ref, len_ref, refs, **kw)
 
 
 def _pad_group(g: int, dtype) -> int:
@@ -115,39 +146,55 @@ def _pad_group(g: int, dtype) -> int:
     return max(base, -(-g // base) * base)
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+def _pad_indices(block_indices: jnp.ndarray, nsel: int, blocks_per_step: int):
+    """(C, n_groups, padded indices): nsel padded up to a multiple of C."""
+    c = max(1, min(blocks_per_step, nsel))
+    n_groups = -(-nsel // c)
+    pad = n_groups * c - nsel
+    if pad:
+        b, hkv = block_indices.shape[:2]
+        block_indices = jnp.concatenate(
+            [block_indices,
+             jnp.full((b, hkv, pad), -1, block_indices.dtype)], axis=-1)
+    return c, n_groups, block_indices
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "blocks_per_step",
+                                             "interpret"))
 def block_sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
                         v_cache: jnp.ndarray, block_indices: jnp.ndarray,
                         kv_len: jnp.ndarray, *, block_size: int,
+                        blocks_per_step: int = 4,
                         interpret: bool = False) -> jnp.ndarray:
-    """q [B,Hkv,G,Dh]; caches [B,S,Hkv,Dh]; indices [B,Hkv,nsel]; kv_len [B]."""
+    """q [B,Hkv,G,Dh]; caches [B,Hkv,S,Dh] HEAD-MAJOR; indices [B,Hkv,nsel];
+    kv_len [B]. The caches are consumed natively — no transpose."""
     bsz, hkv, g, dh = q.shape
-    s = k_cache.shape[1]
-    nb = s // block_size
     nsel = block_indices.shape[-1]
+    c, n_groups, idx = _pad_indices(block_indices, nsel, blocks_per_step)
     g_pad = _pad_group(g, q.dtype)
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
-    kh = jnp.moveaxis(k_cache, 2, 1)                 # [B,Hkv,S,Dh]
-    vh = jnp.moveaxis(v_cache, 2, 1)
     scale = 1.0 / math.sqrt(dh)
 
     def q_map(b, h, j, idx_ref, len_ref):
         return (b, h, 0, 0)
 
-    def kv_map(b, h, j, idx_ref, len_ref):
-        return (b, h, jnp.maximum(idx_ref[b, h, j], 0), 0)
+    def kv_map(i):
+        def f(b, h, j, idx_ref, len_ref):
+            return (b, h, jnp.maximum(idx_ref[b, h, j * c + i], 0), 0)
+        return f
 
     def o_map(b, h, j, idx_ref, len_ref):
         return (b, h, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(bsz, hkv, nsel),
-        in_specs=[
-            pl.BlockSpec((1, 1, g_pad, dh), q_map),
-            pl.BlockSpec((1, 1, block_size, dh), kv_map),
-            pl.BlockSpec((1, 1, block_size, dh), kv_map),
-        ],
+        grid=(bsz, hkv, n_groups),
+        in_specs=(
+            [pl.BlockSpec((1, 1, g_pad, dh), q_map)]
+            + [pl.BlockSpec((1, 1, block_size, dh), kv_map(i))
+               for i in range(c)]
+            + [pl.BlockSpec((1, 1, block_size, dh), kv_map(i))
+               for i in range(c)]),
         out_specs=pl.BlockSpec((1, 1, g_pad, dh), o_map),
         scratch_shapes=[
             pltpu.VMEM((g_pad, LANES), jnp.float32),   # m
@@ -156,61 +203,63 @@ def block_sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel, block_size=block_size, nsel=nsel,
-                          scale=scale),
+        functools.partial(_kernel, block_size=block_size, n_groups=n_groups,
+                          blocks_per_step=c, scale=scale),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g_pad, dh), q.dtype),
         interpret=interpret,
-    )(block_indices.astype(jnp.int32), kv_len.astype(jnp.int32), qp, kh, vh)
+    )(idx.astype(jnp.int32), kv_len.astype(jnp.int32), qp,
+      *([k_cache] * c), *([v_cache] * c))
     return out[:, :, :g]
 
 
-@functools.partial(jax.jit, static_argnames=("block_size", "interpret"))
+@functools.partial(jax.jit, static_argnames=("block_size", "blocks_per_step",
+                                             "interpret"))
 def block_sparse_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
                               v_pages: jnp.ndarray,
                               block_indices: jnp.ndarray,
                               page_table: jnp.ndarray, kv_len: jnp.ndarray,
-                              *, block_size: int,
+                              *, block_size: int, blocks_per_step: int = 4,
                               interpret: bool = False) -> jnp.ndarray:
-    """Paged variant: q [B,Hkv,G,Dh]; k_pages/v_pages [P, ps, Hkv, Dh]
-    global pools (ps == block_size); block_indices [B,Hkv,nsel] LOGICAL
-    block ids (-1 padding); page_table [B, npt] logical->physical.
+    """Paged variant: q [B,Hkv,G,Dh]; k_pages/v_pages [P, Hkv, ps, Dh]
+    HEAD-MAJOR global pools (ps == block_size); block_indices [B,Hkv,nsel]
+    LOGICAL block ids (-1 padding); page_table [B, npt] logical->physical.
 
     The page table rides the same scalar-prefetch path as the selected
     indices, so the logical->physical indirection happens inside the
-    ``BlockSpec.index_map``: grid step (b, h, j) streams physical page
-    ``page_table[b, block_indices[b,h,j]]`` HBM->VMEM. Non-selected pages
-    never leave HBM — paging adds zero extra KV I/O.
+    ``BlockSpec.index_map``: grid step (b, h, j) streams physical pages
+    ``page_table[b, block_indices[b,h,j*C+i]]`` HBM->VMEM. Non-selected
+    pages never leave HBM — paging adds zero extra KV I/O.
     """
     bsz, hkv, g, dh = q.shape
-    ps = k_pages.shape[1]
+    ps = k_pages.shape[2]
     assert ps == block_size, (ps, block_size)
     nsel = block_indices.shape[-1]
+    c, n_groups, idx = _pad_indices(block_indices, nsel, blocks_per_step)
     g_pad = _pad_group(g, q.dtype)
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
-    kh = jnp.moveaxis(k_pages, 2, 1)                 # [P, Hkv, ps, Dh]
-    vh = jnp.moveaxis(v_pages, 2, 1)
     scale = 1.0 / math.sqrt(dh)
 
     def q_map(b, h, j, idx_ref, pt_ref, len_ref):
         return (b, h, 0, 0)
 
-    def kv_map(b, h, j, idx_ref, pt_ref, len_ref):
-        log = jnp.maximum(idx_ref[b, h, j], 0)
-        phys = pt_ref[b, log]
-        return (jnp.maximum(phys, 0), h, 0, 0)
+    def kv_map(i):
+        def f(b, h, j, idx_ref, pt_ref, len_ref):
+            log = jnp.maximum(idx_ref[b, h, j * c + i], 0)
+            phys = pt_ref[b, log]
+            return (jnp.maximum(phys, 0), h, 0, 0)
+        return f
 
     def o_map(b, h, j, idx_ref, pt_ref, len_ref):
         return (b, h, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,
-        grid=(bsz, hkv, nsel),
-        in_specs=[
-            pl.BlockSpec((1, 1, g_pad, dh), q_map),
-            pl.BlockSpec((1, 1, ps, dh), kv_map),
-            pl.BlockSpec((1, 1, ps, dh), kv_map),
-        ],
+        grid=(bsz, hkv, n_groups),
+        in_specs=(
+            [pl.BlockSpec((1, 1, g_pad, dh), q_map)]
+            + [pl.BlockSpec((1, 1, ps, dh), kv_map(i)) for i in range(c)]
+            + [pl.BlockSpec((1, 1, ps, dh), kv_map(i)) for i in range(c)]),
         out_specs=pl.BlockSpec((1, 1, g_pad, dh), o_map),
         scratch_shapes=[
             pltpu.VMEM((g_pad, LANES), jnp.float32),   # m
@@ -219,11 +268,11 @@ def block_sparse_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
         ],
     )
     out = pl.pallas_call(
-        functools.partial(_kernel_paged, block_size=block_size, nsel=nsel,
-                          scale=scale),
+        functools.partial(_kernel_paged, block_size=block_size,
+                          n_groups=n_groups, blocks_per_step=c, scale=scale),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g_pad, dh), q.dtype),
         interpret=interpret,
-    )(block_indices.astype(jnp.int32), page_table.astype(jnp.int32),
-      kv_len.astype(jnp.int32), qp, kh, vh)
+    )(idx.astype(jnp.int32), page_table.astype(jnp.int32),
+      kv_len.astype(jnp.int32), qp, *([k_pages] * c), *([v_pages] * c))
     return out[:, :, :g]

@@ -1,0 +1,160 @@
+"""Fused gate-score + block-selection — Pallas TPU kernel (ISSUE 2).
+
+Replaces the decode-time XLA chain ``gate_logits (fp32 dense einsum) ->
+visibility mask -> [softmax] -> force first/last -> jax.lax.top_k`` of
+``transformer._gate_select`` with ONE kernel that reads the head-major
+K-compression cache and emits the selected block index list directly:
+
+  qg       [B, Hkv, Dg]      post-rope gate query of the new token
+  kg       [B, Hkv, nb, Dg]  head-major Kg cache (contiguous or a paged
+                             per-slot gather)
+  n_valid  [B] int32         number of currently visible blocks
+  -> idx   [B, Hkv, k] int32 selected LOGICAL block ids, -1 padding
+
+Selection semantics are EXACTLY ``core.sparsity.select_blocks`` (both the
+``budget`` top-k and the ``threshold`` softmax methods, including the
+force-first/last pinning and -1 invalid padding): the jnp twin below is
+bit-compatible with the pre-fusion chain, and the kernel reproduces
+``jax.lax.top_k`` ordering (descending value, ties broken by lower index)
+via iterative argmax — k is small (token_budget / block_size), so the
+selection cost stays O(k * nb) per (batch, kv-head) and sublinear in
+context, per the Sparse-Frontier selection-overhead discipline.
+
+Grid = (B, Hkv); each step streams one [nb, Dg] Kg row HBM->VMEM, does the
+[1, Dg] x [Dg, nb] score dot on-chip and never materialises the fp32
+score tensor in HBM.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.config import GateConfig
+from repro.core import sparsity as sp
+from repro.models.common import NEG_INF
+
+
+def n_selected(cfg: GateConfig, nb: int,
+               max_selected: Optional[int] = None) -> int:
+    """Static selected-list width — ``sparsity.resolve_max_selected``
+    (the shared cap rule) plus select_blocks' per-method floor/cap
+    (budget floor for forced blocks, cap at nb)."""
+    k = sp.resolve_max_selected(cfg, max_selected)
+    if cfg.method == "budget":
+        k = max(k, int(cfg.always_last_block) + int(cfg.always_first_block))
+    elif cfg.method != "threshold":
+        raise ValueError(cfg.method)
+    return min(k, nb)
+
+
+def gate_select_ref(qg: jnp.ndarray, kg: jnp.ndarray, n_valid: jnp.ndarray,
+                    cfg: GateConfig, max_selected: Optional[int] = None
+                    ) -> jnp.ndarray:
+    """jnp twin: head-major gate scoring + ``select_blocks`` (the decode
+    ground truth; also the CPU execution path)."""
+    dg = qg.shape[-1]
+    scores = jnp.einsum("bhd,bhnd->bhn", qg.astype(jnp.float32),
+                        kg.astype(jnp.float32)) / math.sqrt(dg)
+    nb = scores.shape[-1]
+    vmask = jnp.arange(nb)[None, None] < n_valid[:, None, None]
+    scores = jnp.where(vmask, scores, NEG_INF)
+    if cfg.method == "threshold":
+        scores = jax.nn.softmax(scores, axis=-1)
+    idx, _ = sp.select_blocks(scores, n_valid, cfg, max_selected)
+    return idx
+
+
+def _select_kernel(nv_ref,                  # scalar prefetch
+                   qg_ref, kg_ref,          # VMEM in
+                   o_ref,                   # VMEM out [1,1,k]
+                   *, nb: int, k_sel: int, method: str, threshold: float,
+                   force_first: bool, force_last: bool, scale: float):
+    b = pl.program_id(0)
+    nv = nv_ref[b]
+    q = qg_ref[0, 0].reshape(1, -1).astype(jnp.float32)        # [1, Dg]
+    kg = kg_ref[0, 0].astype(jnp.float32)                      # [nb, Dg]
+    s = jax.lax.dot_general(q, kg, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)      # [1, nb]
+    s = jnp.where(col < nv, s, NEG_INF)                        # visibility
+    big = jnp.float32(1e30)
+
+    if method == "threshold":
+        # softmax over the UNFORCED masked logits (jax.nn.softmax form),
+        # then threshold_select: invisible -> -1, force, admit > tau.
+        m = jnp.max(s, axis=1, keepdims=True)
+        e = jnp.exp(s - m)
+        probs = e / jnp.sum(e, axis=1, keepdims=True)
+        ranked = jnp.where(col < nv, probs, -1.0)
+        if force_last:
+            ranked = jnp.where(col == nv - 1, big, ranked)
+        if force_first:
+            ranked = jnp.where(col == 0, big, ranked)
+        ranked = jnp.where(ranked > threshold, ranked, -1.0)
+        cutoff = jnp.float32(0.0)
+        drop = jnp.float32(-2.0)
+    else:                                   # budget: top-k on raw logits
+        ranked = s
+        if force_last:
+            ranked = jnp.where(col == nv - 1, big, ranked)
+        if force_first:
+            ranked = jnp.where(col == 0, big, ranked)
+        cutoff = jnp.float32(NEG_INF / 2)
+        drop = jnp.float32(2 * NEG_INF)
+
+    # iterative exact top-k with lax.top_k tie-breaking (lower index first)
+    sel = []
+    for _ in range(k_sel):
+        m = jnp.max(ranked)
+        pick = jnp.min(jnp.where(ranked == m, col, nb)).astype(jnp.int32)
+        sel.append(jnp.where(m > cutoff, pick, -1).astype(jnp.int32))
+        ranked = jnp.where(col == pick, drop, ranked)
+    o_ref[0, 0] = jnp.stack(sel)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_selected",
+                                             "interpret"))
+def fused_gate_select(qg: jnp.ndarray, kg: jnp.ndarray, n_valid: jnp.ndarray,
+                      cfg: GateConfig, max_selected: Optional[int] = None,
+                      interpret: bool = False) -> jnp.ndarray:
+    """qg [B,Hkv,Dg]; kg [B,Hkv,nb,Dg] head-major; n_valid [B] int32
+    -> block ids [B,Hkv,k] int32 (-1 padding), identical to the jnp twin."""
+    b, hkv, dg = qg.shape
+    nb = kg.shape[2]
+    k_sel = n_selected(cfg, nb, max_selected)
+    scale = 1.0 / math.sqrt(dg)
+
+    def qg_map(bi, h, nv_ref):
+        return (bi, h, 0)
+
+    def kg_map(bi, h, nv_ref):
+        return (bi, h, 0, 0)
+
+    def o_map(bi, h, nv_ref):
+        return (bi, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b, hkv),
+        in_specs=[
+            pl.BlockSpec((1, 1, dg), qg_map),
+            pl.BlockSpec((1, 1, nb, dg), kg_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, k_sel), o_map),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _select_kernel, nb=nb, k_sel=k_sel, method=cfg.method,
+            threshold=float(cfg.threshold),
+            force_first=bool(cfg.always_first_block),
+            force_last=bool(cfg.always_last_block), scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, k_sel), jnp.int32),
+        interpret=interpret,
+    )(n_valid.astype(jnp.int32), qg, kg)

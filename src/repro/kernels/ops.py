@@ -16,12 +16,16 @@ from repro.kernels.block_sparse_decode import (
     block_sparse_decode as _bsd_pallas,
     block_sparse_decode_paged as _bsd_paged_pallas)
 from repro.kernels.gate_gt_fwd import gate_gt_flash_fwd as _gt_pallas
+from repro.kernels.gate_select import (fused_gate_select as _gs_pallas,
+                                       gate_select_ref as _gs_ref)
 
 
 def sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                   block_indices: jnp.ndarray, kv_len: jnp.ndarray, *,
                   block_size: int, impl: str = "ref") -> jnp.ndarray:
-    """impl: 'ref' (jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check)."""
+    """impl: 'ref' (jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check).
+    Caches are HEAD-MAJOR [B, Hkv, S, Dh] — consumed natively, no
+    transpose on the decode path."""
     if impl == "ref":
         return _ref.sparse_decode_ref(q, k_cache, v_cache, block_indices,
                                       kv_len, block_size=block_size)
@@ -34,13 +38,32 @@ def sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
     raise ValueError(impl)
 
 
+def gate_select(qg: jnp.ndarray, kg: jnp.ndarray, n_valid: jnp.ndarray,
+                cfg, max_selected: Optional[int] = None, *,
+                impl: str = "ref") -> jnp.ndarray:
+    """Fused gate scoring + discrete block selection for ONE decode step.
+
+    qg [B,Hkv,Dg] post-rope gate queries; kg [B,Hkv,nb,Dg] HEAD-MAJOR
+    K-compression cache (contiguous or paged per-slot gather); n_valid [B]
+    visible blocks. Returns logical block ids [B,Hkv,k] int32 with -1
+    padding — identical across impls (the kernel reproduces
+    ``sparsity.select_blocks`` exactly, including top-k tie-breaking)."""
+    if impl == "ref":
+        return _gs_ref(qg, kg, n_valid, cfg, max_selected)
+    if impl == "pallas":
+        return _gs_pallas(qg, kg, n_valid, cfg, max_selected)
+    if impl == "pallas_interpret":
+        return _gs_pallas(qg, kg, n_valid, cfg, max_selected, interpret=True)
+    raise ValueError(impl)
+
+
 def paged_sparse_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray, block_indices: jnp.ndarray,
                         page_table: jnp.ndarray, kv_len: jnp.ndarray, *,
                         block_size: int, impl: str = "ref") -> jnp.ndarray:
     """Paged-KV twin of ``sparse_decode``: block_indices are LOGICAL block
-    ids, translated through ``page_table`` [B, npt]. Pools are
-    [P, page_size, Hkv, Dh] with page_size == block_size."""
+    ids, translated through ``page_table`` [B, npt]. Pools are HEAD-MAJOR
+    [P, Hkv, page_size, Dh] with page_size == block_size."""
     if impl == "ref":
         return _ref.paged_sparse_decode_ref(
             q, k_pages, v_pages, block_indices, page_table, kv_len,

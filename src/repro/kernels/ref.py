@@ -3,12 +3,14 @@
 These are the correctness ground truth (kernels assert_allclose against
 them) AND the CPU/dry-run execution path (`use_pallas=False`).
 
-Contracts
+Contracts (HEAD-MAJOR decode layouts — the decode-path invariant: no
+cache-sized transpose or copy; every decode-time access below is a
+selected-blocks-only gather off the native layout)
 ---------
 sparse_decode_ref:
   q             [B, Hkv, G, Dh]   one new query token, grouped per kv head
-  k_cache       [B, S, Hkv, Dh]   post-rope keys (S = nb * block_size)
-  v_cache       [B, S, Hkv, Dh]
+  k_cache       [B, Hkv, S, Dh]   post-rope keys (S = nb * block_size)
+  v_cache       [B, Hkv, S, Dh]
   block_indices [B, Hkv, nsel]    int32 selected block ids, -1 = padding
   kv_len        [B]               valid lengths (masks the partial last block)
   -> o          [B, Hkv, G, Dh]
@@ -32,19 +34,16 @@ def sparse_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
                       v_cache: jnp.ndarray, block_indices: jnp.ndarray,
                       kv_len: jnp.ndarray, *, block_size: int) -> jnp.ndarray:
     b, hkv, g, dh = q.shape
-    s = k_cache.shape[1]
     nsel = block_indices.shape[-1]
     scale = 1.0 / math.sqrt(dh)
 
     idx = jnp.maximum(block_indices, 0)                          # [B,Hkv,nsel]
     # token positions of gathered blocks: [B,Hkv,nsel,bs]
     pos = idx[..., None] * block_size + jnp.arange(block_size)
-    # gather keys/values: k_cache [B,S,Hkv,Dh] -> [B,Hkv,nsel,bs,Dh]
-    kh = jnp.moveaxis(k_cache, 2, 1)                             # [B,Hkv,S,Dh]
-    vh = jnp.moveaxis(v_cache, 2, 1)
+    # gather selected keys/values straight off the head-major cache
     gpos = pos.reshape(b, hkv, nsel * block_size)
-    kg = jnp.take_along_axis(kh, gpos[..., None], axis=2)        # [B,Hkv,n*bs,Dh]
-    vg = jnp.take_along_axis(vh, gpos[..., None], axis=2)
+    kg = jnp.take_along_axis(k_cache, gpos[..., None], axis=2)   # [B,Hkv,n*bs,Dh]
+    vg = jnp.take_along_axis(v_cache, gpos[..., None], axis=2)
 
     sc = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
                     kg.astype(jnp.float32)) * scale
@@ -64,16 +63,17 @@ def paged_sparse_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                             block_size: int) -> jnp.ndarray:
     """Paged twin of ``sparse_decode_ref``.
 
-    k_pages/v_pages: [P, ps, Hkv, Dh] global page pools (ps == block_size);
-    page_table: [B, npt] int32 logical block -> physical page;
-    block_indices carry LOGICAL block ids (the gate's view) — the
-    logical->physical indirection happens here, mirroring the kernel's
-    scalar-prefetch index_map. After the page gather the math is kept
-    identical to the contiguous reference so paged == contiguous holds to
-    rounding.
+    k_pages/v_pages: [P, Hkv, ps, Dh] head-major global pools
+    (ps == block_size); page_table: [B, npt] int32 logical block ->
+    physical page; block_indices carry LOGICAL block ids (the gate's view)
+    — the logical->physical indirection happens here, mirroring the
+    kernel's scalar-prefetch index_map. The selected pages are gathered
+    directly off the native pool layout (no pool-sized transpose); after
+    the gather the math is kept identical to the contiguous reference so
+    paged == contiguous holds to rounding.
     """
     b, hkv, g, dh = q.shape
-    ps = k_pages.shape[1]
+    ps = k_pages.shape[2]
     assert ps == block_size, (ps, block_size)
     nsel = block_indices.shape[-1]
     scale = 1.0 / math.sqrt(dh)
@@ -82,11 +82,9 @@ def paged_sparse_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     pt = jnp.broadcast_to(page_table[:, None, :],
                           (b, hkv, page_table.shape[1]))
     phys = jnp.take_along_axis(pt, idx, axis=2)                  # [B,Hkv,nsel]
-    kh = jnp.moveaxis(k_pages, 2, 0)                             # [Hkv,P,ps,Dh]
-    vh = jnp.moveaxis(v_pages, 2, 0)
     har = jnp.arange(hkv)[None, :, None]
-    kg = kh[har, phys].reshape(b, hkv, nsel * ps, dh)            # [B,Hkv,n*ps,Dh]
-    vg = vh[har, phys].reshape(b, hkv, nsel * ps, dh)
+    kg = k_pages[phys, har].reshape(b, hkv, nsel * ps, dh)       # [B,Hkv,n*ps,Dh]
+    vg = v_pages[phys, har].reshape(b, hkv, nsel * ps, dh)
 
     # token positions are LOGICAL (masking against kv_len)
     pos = idx[..., None] * ps + jnp.arange(ps)                   # [B,Hkv,nsel,ps]
@@ -103,17 +101,16 @@ def paged_sparse_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
 
 def dense_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      kv_len: jnp.ndarray) -> jnp.ndarray:
-    """Dense counterpart with the same [B,Hkv,G,Dh] layout (baseline)."""
+    """Dense counterpart with the same head-major layout (baseline).
+    q [B,Hkv,G,Dh]; caches [B,Hkv,S,Dh]."""
     b, hkv, g, dh = q.shape
-    s = k_cache.shape[1]
-    kh = jnp.moveaxis(k_cache, 2, 1)
-    vh = jnp.moveaxis(v_cache, 2, 1)
+    s = k_cache.shape[2]
     sc = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
-                    kh.astype(jnp.float32)) / math.sqrt(dh)
+                    k_cache.astype(jnp.float32)) / math.sqrt(dh)
     valid = (jnp.arange(s)[None, :] < kv_len[:, None])[:, None, None, :]
     sc = jnp.where(valid, sc, NEG_INF)
     p = jax.nn.softmax(sc, axis=-1)
-    o = jnp.einsum("bhgk,bhkd->bhgd", p, vh.astype(jnp.float32))
+    o = jnp.einsum("bhgk,bhkd->bhgd", p, v_cache.astype(jnp.float32))
     return o.astype(q.dtype)
 
 

@@ -242,19 +242,20 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      ) -> jnp.ndarray:
     """Single-token dense decode attention.
 
-    q: [B, 1, H, D]; caches: [B, S, Hkv, D]; kv_len: [B] valid lengths.
+    q: [B, 1, H, D]; caches: [B, Hkv, S, D] HEAD-MAJOR (the native decode
+    layout — consumed directly, no transpose); kv_len: [B] valid lengths.
     """
     b, _, h, d = q.shape
-    s_max, hkv = k_cache.shape[1], k_cache.shape[2]
+    hkv, s_max = k_cache.shape[1], k_cache.shape[2]
     group = h // hkv
     qg = q[:, 0].reshape(b, hkv, group, d)                      # [B,Hkv,g,D]
-    s = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+    s = jnp.einsum("bhgd,bhsd->bhgs", qg.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) / math.sqrt(d)
     s = _softcap(s, logit_softcap)
     valid = jnp.arange(s_max)[None, :] < kv_len[:, None]        # [B,S]
     s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    o = jnp.einsum("bhgs,bhsd->bhgd", p, v_cache.astype(jnp.float32))
     return o.reshape(b, 1, h, d).astype(q.dtype)
 
 

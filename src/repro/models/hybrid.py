@@ -32,9 +32,9 @@ def _plan(cfg: ModelConfig) -> Tuple[int, int, int]:
 class HybridDecodeState(NamedTuple):
     conv: jnp.ndarray          # [L_m, B, K-1, di+2n]
     h: jnp.ndarray             # [L_m, B, nh, hd, n]
-    k_cache: jnp.ndarray       # [n_units, B, S, Hkv, Dh]
+    k_cache: jnp.ndarray       # [n_units, B, Hkv, S, Dh]  (head-major)
     v_cache: jnp.ndarray
-    kg_cache: Optional[jnp.ndarray]
+    kg_cache: Optional[jnp.ndarray]   # [n_units, B, Hkv, nb, Dg]
     kg_n: Optional[jnp.ndarray]
     cur_len: jnp.ndarray
 
@@ -128,9 +128,9 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int
     return HybridDecodeState(
         conv=jnp.zeros((lm, batch, cfg.ssm.conv_dim - 1, di + 2 * n), dt),
         h=jnp.zeros((lm, batch, nh, hd, n), jnp.float32),
-        k_cache=jnp.zeros((n_units, batch, max_len, hkv, dh), dt),
-        v_cache=jnp.zeros((n_units, batch, max_len, hkv, dh), dt),
-        kg_cache=(jnp.zeros((n_units, batch, nb_max, hkv, cfg.gate.d_gate), dt)
+        k_cache=jnp.zeros((n_units, batch, hkv, max_len, dh), dt),
+        v_cache=jnp.zeros((n_units, batch, hkv, max_len, dh), dt),
+        kg_cache=(jnp.zeros((n_units, batch, hkv, nb_max, cfg.gate.d_gate), dt)
                   if gate_on else None),
         kg_n=(jnp.zeros((n_units, batch), jnp.int32) if gate_on else None),
         cur_len=jnp.zeros((batch,), jnp.int32))
@@ -163,14 +163,18 @@ def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int,
 
     kr, v, kg = caches                     # [n_units, B, S, Hkv, Dh]
     pad = max_len - l
-    k_cache = jnp.pad(kr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-    v_cache = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    # one-time seq-major -> head-major conversion (same as transformer)
+    k_cache = jnp.pad(jnp.moveaxis(kr, 3, 2),
+                      ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    v_cache = jnp.pad(jnp.moveaxis(v, 3, 2),
+                      ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
     kg_cache = kg_n = None
     if kg is not None:
         nb_max = max_len // cfg.gate.block_size
         nb = kg.shape[2]
-        kg_cache = jnp.pad(kg, ((0, 0), (0, 0), (0, nb_max - nb), (0, 0),
-                                (0, 0))).astype(jnp.dtype(cfg.dtype))
+        kg_cache = jnp.pad(jnp.moveaxis(kg, 3, 2),
+                           ((0, 0), (0, 0), (0, 0), (0, nb_max - nb),
+                            (0, 0))).astype(jnp.dtype(cfg.dtype))
         kg_n = jnp.full((n_units, b), nb, jnp.int32)
 
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)

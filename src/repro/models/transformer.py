@@ -23,7 +23,6 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.core import attngate as ag
 from repro.core import kcache as kc
-from repro.core import sparsity as sp
 from repro.core.distill import gate_kl_loss, ground_truth_from_blockmax
 from repro.kernels import ops
 from repro.models import moe as moe_mod
@@ -325,12 +324,15 @@ def _n_gate_layers(cfg: ModelConfig) -> int:
 # ---------------------------------------------------------------------------
 
 class DecodeState(NamedTuple):
-    k_cache: jnp.ndarray          # [L, B, S_max, Hkv, Dh]  (post-rope)
-    v_cache: jnp.ndarray          # [L, B, S_max, Hkv, Dh]
-    kg_cache: Optional[jnp.ndarray]     # [L, B, nb_max, Hkv, Dg]
+    """All caches are HEAD-MAJOR (ISSUE 2 invariant: the decode hot path
+    never transposes or copies a cache-sized array — prefill does the one
+    layout conversion, decode reads/writes the native layout)."""
+    k_cache: jnp.ndarray          # [L, B, Hkv, S_max, Dh]  (post-rope)
+    v_cache: jnp.ndarray          # [L, B, Hkv, S_max, Dh]
+    kg_cache: Optional[jnp.ndarray]     # [L, B, Hkv, nb_max, Dg]
     kg_n: Optional[jnp.ndarray]         # [L, B]
     cur_len: jnp.ndarray          # [B]
-    cross_k: Optional[jnp.ndarray] = None   # [Lc, B, n_img, Hkv, Dh]
+    cross_k: Optional[jnp.ndarray] = None   # [Lc, B, Hkv, n_img, Dh]
     cross_v: Optional[jnp.ndarray] = None
 
 
@@ -347,46 +349,50 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     nl = n_self_layers(cfg)
     nb_max = max_len // cfg.gate.block_size
     gate_on = cfg.gate.enabled
-    kg = (jnp.zeros((nl, batch, nb_max, hkv, cfg.gate.d_gate), dt)
+    kg = (jnp.zeros((nl, batch, hkv, nb_max, cfg.gate.d_gate), dt)
           if gate_on else None)
     kg_n = jnp.zeros((nl, batch), jnp.int32) if gate_on else None
     cross = None
     if cfg.cross_attn_period:
         n_units = cfg.num_layers // cfg.cross_attn_period
-        cross = jnp.zeros((n_units, batch, cfg.n_image_tokens, hkv, dh), dt)
+        cross = jnp.zeros((n_units, batch, hkv, cfg.n_image_tokens, dh), dt)
     return DecodeState(
-        k_cache=jnp.zeros((nl, batch, max_len, hkv, dh), dt),
-        v_cache=jnp.zeros((nl, batch, max_len, hkv, dh), dt),
+        k_cache=jnp.zeros((nl, batch, hkv, max_len, dh), dt),
+        v_cache=jnp.zeros((nl, batch, hkv, max_len, dh), dt),
         kg_cache=kg, kg_n=kg_n,
         cur_len=jnp.zeros((batch,), jnp.int32),
         cross_k=cross, cross_v=cross)
 
 
+def _select_impl(sparse_impl: str) -> str:
+    """Map the attention-kernel impl to the fused gate-select impl: the
+    Pallas paths run selection in-kernel too; everything else (ref,
+    sharded) uses the jnp twin."""
+    return sparse_impl if sparse_impl in ("pallas", "pallas_interpret") \
+        else "ref"
+
+
 def _gate_select(gate_p: Params, q_nope: jnp.ndarray, pos: jnp.ndarray,
-                 kg: jnp.ndarray, new_len: jnp.ndarray, cfg: ModelConfig):
+                 kg: jnp.ndarray, new_len: jnp.ndarray, cfg: ModelConfig,
+                 impl: str = "ref"):
     """Gate scoring + discrete block selection for ONE decode step.
 
-    kg: the logical per-row Kg view [B, nb, Hkv, Dg] — contiguous cache or
-    paged gather. Shared by both decode paths; parity-critical (a change
-    here changes contiguous and paged selection together, by construction).
+    kg: the logical per-row Kg view, HEAD-MAJOR [B, Hkv, nb, Dg] —
+    contiguous cache or paged gather. Shared by both decode paths;
+    parity-critical (a change here changes contiguous and paged selection
+    together, by construction). Scoring + masking + force-pinning + top-k
+    are fused in ``ops.gate_select`` (kernels/gate_select.py).
     Returns logical block indices [B, Hkv, nsel].
     """
-    qg = ag.gate_q(gate_p, q_nope, pos, cfg.gate)          # [B,1,Hkv,Dg]
-    scores = ag.gate_logits(qg, kg)[:, :, 0]               # [B,Hkv,nb]
+    qg = ag.gate_q(gate_p, q_nope, pos, cfg.gate)[:, 0]    # [B,Hkv,Dg]
     n_valid = kc.visible_blocks(jnp.maximum(new_len, 1), cfg.gate.block_size)
-    nb = scores.shape[-1]
-    vmask = jnp.arange(nb)[None, None] < n_valid[:, None, None]
-    scores = jnp.where(vmask, scores, NEG_INF)
-    if cfg.gate.method == "threshold":
-        scores = jax.nn.softmax(scores, axis=-1)
-    idx, _ = sp.select_blocks(scores, n_valid, cfg.gate)
-    return idx
+    return ops.gate_select(qg, kg, n_valid, cfg.gate, impl=impl)
 
 
 def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                      k_cache, v_cache, kg_cache, kg_n, cur_len,
                      sparse: bool, sparse_impl: str, shard=None):
-    """One token. x1 [B,1,d]; caches for ONE layer [B,S,Hkv,Dh].
+    """One token. x1 [B,1,d]; caches for ONE layer HEAD-MAJOR [B,Hkv,S,Dh].
 
     sparse_impl='sharded' takes the sequence-parallel shard_map path
     (repro.serve.sharded): explicit split-K collectives instead of GSPMD
@@ -420,15 +426,16 @@ def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         return out, (k_cache, v_cache, kg_cache, kg_n)
 
     bidx = jnp.arange(b)
-    k_cache = k_cache.at[bidx, cur_len].set(kr[:, 0])
-    v_cache = v_cache.at[bidx, cur_len].set(v[:, 0])
+    k_cache = k_cache.at[bidx, :, cur_len].set(kr[:, 0])
+    v_cache = v_cache.at[bidx, :, cur_len].set(v[:, 0])
     new_len = cur_len + 1
 
     if sparse and "gate" in p:
         cache = kc.KCompressionCache(kg_cache, kg_n)
         cache = kc.update_kcache(cache, p["gate"], k_cache, new_len, cfg.gate,
                                  cache_is_roped=True, rope_theta=cfg.rope_theta)
-        idx = _gate_select(p["gate"], q_nope, pos, cache.kg, new_len, cfg)
+        idx = _gate_select(p["gate"], q_nope, pos, cache.kg, new_len, cfg,
+                           impl=_select_impl(sparse_impl))
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
         o = ops.sparse_decode(qgrp, k_cache, v_cache, idx, new_len,
                               block_size=cfg.gate.block_size,
@@ -470,7 +477,7 @@ def cross_block_decode(p: Params, x1, cfg: ModelConfig, ck, cv):
     q = linear(p["attn"]["wq"], h).reshape(b, 1, cfg.n_heads, dh)
     if cfg.qk_norm:
         q = rms_norm(p["attn"]["q_norm"], q, cfg.norm_eps)
-    n_img = ck.shape[1]
+    n_img = ck.shape[2]                  # ck head-major [B, Hkv, n_img, Dh]
     o = decode_attention(q, ck, cv, jnp.full((b,), n_img, jnp.int32))
     x1 = x1 + linear(p["attn"]["wo"], o.reshape(b, 1, -1))
     h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
@@ -539,8 +546,8 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
 def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                            k_pages, v_pages, kg_pages, page_table, cur_len,
                            active, sparse: bool, sparse_impl: str):
-    """One token over paged KV. x1 [S,1,d]; pools for ONE layer
-    [P, ps, Hkv, Dh]; page_table [S, npt]; cur_len/active [S] per-slot.
+    """One token over paged KV. x1 [S,1,d]; pools for ONE layer HEAD-MAJOR
+    [P, Hkv, ps, Dh]; page_table [S, npt]; cur_len/active [S] per-slot.
 
     The gate path is identical to the contiguous ``attention_decode`` —
     same selection, same force-select of the trailing partial block — but
@@ -563,14 +570,15 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
     new_len = cur_len + active.astype(jnp.int32)
 
     if sparse and "gate" in p:
-        kg_slot = pg.gather_kg(kg_pages, page_table)       # [S,npt,Hkv,Dg]
-        idx = _gate_select(p["gate"], q_nope, pos, kg_slot, new_len, cfg)
+        kg_slot = pg.gather_kg(kg_pages, page_table)       # [S,Hkv,npt,Dg]
+        idx = _gate_select(p["gate"], q_nope, pos, kg_slot, new_len, cfg,
+                           impl=_select_impl(sparse_impl))
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
         o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx, page_table,
                                     new_len, block_size=ps, impl=sparse_impl)
         o = o.reshape(b, 1, hkv * g, dh)
     else:
-        k_ct = pg.gather_kv(k_pages, page_table)           # [S,npt*ps,Hkv,Dh]
+        k_ct = pg.gather_kv(k_pages, page_table)           # [S,Hkv,npt*ps,Dh]
         v_ct = pg.gather_kv(v_pages, page_table)
         o = decode_attention(qr, k_ct, v_ct, new_len,
                              logit_softcap=cfg.attn_logit_softcap)
@@ -649,14 +657,20 @@ def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],
     kr, v, kg = caches                       # [L, B, S, Hkv, Dh] stacked
     nl = kr.shape[0]
     pad = max_len - l
-    k_cache = jnp.pad(kr, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-    v_cache = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    # the ONE-TIME layout conversion: prefill activations are seq-major,
+    # the decode caches are head-major [L, B, Hkv, S, Dh] (ISSUE 2: no
+    # cache-sized transpose ever happens after this point)
+    k_cache = jnp.pad(jnp.moveaxis(kr, 3, 2),
+                      ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    v_cache = jnp.pad(jnp.moveaxis(v, 3, 2),
+                      ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
     kg_cache = kg_n = None
     if kg is not None:
         nb_max = max_len // cfg.gate.block_size
         nb = kg.shape[2]
-        kg_cache = jnp.pad(kg, ((0, 0), (0, 0), (0, nb_max - nb),
-                                (0, 0), (0, 0))).astype(jnp.dtype(cfg.dtype))
+        kg_cache = jnp.pad(jnp.moveaxis(kg, 3, 2),
+                           ((0, 0), (0, 0), (0, 0), (0, nb_max - nb),
+                            (0, 0))).astype(jnp.dtype(cfg.dtype))
         kg_n = jnp.full((nl, b), nb, jnp.int32)
 
     cross_k = cross_v = None
@@ -669,7 +683,8 @@ def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],
                 b, -1, cfg.n_kv_heads, dh)
             if cfg.qk_norm:
                 ck = rms_norm(cp["attn"]["k_norm"], ck, cfg.norm_eps)
-            return ck, cv
+            # head-major, matching decode_attention's native layout
+            return jnp.swapaxes(ck, 1, 2), jnp.swapaxes(cv, 1, 2)
         cross_k, cross_v = jax.vmap(cross_kv)(params["cross_blocks"])
 
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)

@@ -51,26 +51,25 @@ def offload_step_model(cfg: ModelConfig, seq_len: int, *,
 
 class OffloadedKV(NamedTuple):
     """Functional simulator: 'host' arrays + on-chip Kg cache. fetch()
-    returns only the selected blocks — the serving engine contract."""
-    host_k: jnp.ndarray    # [B, S, Hkv, Dh]  (host-resident stand-in)
+    returns only the selected blocks — the serving engine contract.
+    HEAD-MAJOR layouts throughout (matching the on-chip decode caches, so
+    a fetched block lands transpose-free in the kernel's native frame)."""
+    host_k: jnp.ndarray    # [B, Hkv, S, Dh]  (host-resident stand-in)
     host_v: jnp.ndarray
-    kg: jnp.ndarray        # [B, nb, Hkv, Dg] (HBM-resident)
+    kg: jnp.ndarray        # [B, Hkv, nb, Dg] (HBM-resident)
     block_size: int
     fetched_blocks: int = 0
 
     def fetch(self, block_indices: jnp.ndarray):
         """block_indices [B, Hkv, nsel] -> (k_sel, v_sel) gathered blocks
         [B, Hkv, nsel*b, Dh] (the only KV bytes that cross PCIe)."""
-        b, s, hkv, dh = self.host_k.shape
+        b, hkv, s, dh = self.host_k.shape
         bs = self.block_size
         idx = jnp.maximum(block_indices, 0)
         pos = (idx[..., None] * bs + jnp.arange(bs)).reshape(
             b, hkv, -1)                                   # [B,Hkv,nsel*bs]
-        idx_seq = jnp.swapaxes(pos, 1, 2)[..., None]
-        k_sel = jnp.take_along_axis(self.host_k, idx_seq, axis=1)
-        v_sel = jnp.take_along_axis(self.host_v, idx_seq, axis=1)
-        k_sel = jnp.swapaxes(k_sel, 1, 2)
-        v_sel = jnp.swapaxes(v_sel, 1, 2)
+        k_sel = jnp.take_along_axis(self.host_k, pos[..., None], axis=2)
+        v_sel = jnp.take_along_axis(self.host_v, pos[..., None], axis=2)
         n = int(block_indices.shape[-1])
         return k_sel, v_sel, self._replace(
             fetched_blocks=self.fetched_blocks + n)

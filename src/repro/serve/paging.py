@@ -10,8 +10,10 @@ emits *logical* block ids; the logical->physical translation happens at
 gather time (pure-JAX path) or inside the kernel's scalar-prefetch
 index_map (repro.kernels.block_sparse_decode).
 
-Layout (``L`` = self-attn layers, ``P`` = pool pages, ``ps`` = page size):
-  k_pages / v_pages  [L, P, ps, Hkv, Dh]   post-rope keys / values
+Layout (``L`` = self-attn layers, ``P`` = pool pages, ``ps`` = page size;
+HEAD-MAJOR — ISSUE 2 invariant: decode consumes the pools natively, no
+page-pool-sized transpose anywhere on the hot path):
+  k_pages / v_pages  [L, P, Hkv, ps, Dh]   post-rope keys / values
   kg_pages           [L, P, Hkv, Dg]       gate K-compression twin
   page_table         [n_slots, npt] int32  physical ids; NULL_PAGE = empty
   cur_len / active   [n_slots]             per-slot ragged lengths
@@ -43,8 +45,8 @@ NULL_PAGE = 0
 
 class PagedPages(NamedTuple):
     """Device-side page pools, stacked over self-attention layers."""
-    k_pages: jnp.ndarray                 # [L, P, ps, Hkv, Dh]
-    v_pages: jnp.ndarray                 # [L, P, ps, Hkv, Dh]
+    k_pages: jnp.ndarray                 # [L, P, Hkv, ps, Dh]  (head-major)
+    v_pages: jnp.ndarray                 # [L, P, Hkv, ps, Dh]
     kg_pages: Optional[jnp.ndarray]      # [L, P, Hkv, Dg]
 
 
@@ -56,8 +58,8 @@ def init_pages(cfg: ModelConfig, num_pages: int, n_layers: int,
     kg = (jnp.zeros((n_layers, num_pages, hkv, cfg.gate.d_gate), dt)
           if cfg.gate.enabled else None)
     return PagedPages(
-        k_pages=jnp.zeros((n_layers, num_pages, ps, hkv, dh), dt),
-        v_pages=jnp.zeros((n_layers, num_pages, ps, hkv, dh), dt),
+        k_pages=jnp.zeros((n_layers, num_pages, hkv, ps, dh), dt),
+        v_pages=jnp.zeros((n_layers, num_pages, hkv, ps, dh), dt),
         kg_pages=kg)
 
 
@@ -69,19 +71,21 @@ def scatter_prefill(pages: PagedPages, k_cache: jnp.ndarray,
                     block_size: int) -> PagedPages:
     """Copy one request's contiguous prefill caches into its pages.
 
-    k_cache/v_cache: [L, 1, S_max, Hkv, Dh] from ``lm_prefill`` with
-    S_max >= n_pages * block_size; ``page_ids`` [n_reserved] int32 covers
-    the request's FULL reservation (prompt pages + pages for future decode
-    tokens). kg rows beyond the ``length // block_size`` complete blocks
-    are zeroed — recycled pages may hold the previous tenant's entries.
+    k_cache/v_cache: HEAD-MAJOR [L, 1, Hkv, S_max, Dh] from ``lm_prefill``
+    with S_max >= n_pages * block_size; ``page_ids`` [n_reserved] int32
+    covers the request's FULL reservation (prompt pages + pages for future
+    decode tokens). kg rows beyond the ``length // block_size`` complete
+    blocks are zeroed — recycled pages may hold the previous tenant's
+    entries. (This scatter is prefill-time, so the page-major regrouping
+    here is the allowed one-time conversion.)
     """
     n_res = page_ids.shape[0]
     n_prompt = -(-length // block_size)
-    kl = k_cache[:, 0, : n_prompt * block_size]
-    vl = v_cache[:, 0, : n_prompt * block_size]
-    nl = kl.shape[0]
-    kl = kl.reshape(nl, n_prompt, block_size, *kl.shape[2:])
-    vl = vl.reshape(nl, n_prompt, block_size, *vl.shape[2:])
+    kl = k_cache[:, 0, :, : n_prompt * block_size]      # [L, Hkv, T, Dh]
+    vl = v_cache[:, 0, :, : n_prompt * block_size]
+    nl, hkv, _, dh = kl.shape
+    kl = jnp.swapaxes(kl.reshape(nl, hkv, n_prompt, block_size, dh), 1, 2)
+    vl = jnp.swapaxes(vl.reshape(nl, hkv, n_prompt, block_size, dh), 1, 2)
     k_pages = pages.k_pages.at[:, page_ids[:n_prompt]].set(
         kl.astype(pages.k_pages.dtype))
     v_pages = pages.v_pages.at[:, page_ids[:n_prompt]].set(
@@ -91,8 +95,10 @@ def scatter_prefill(pages: PagedPages, k_cache: jnp.ndarray,
         nbc = length // block_size
         kg_new = jnp.zeros((nl, n_res) + kg_pages.shape[2:], kg_pages.dtype)
         if nbc and kg_cache is not None:
+            # kg_cache head-major [L, 1, Hkv, nb, Dg] -> per-page rows
             kg_new = kg_new.at[:, :nbc].set(
-                kg_cache[:, 0, :nbc].astype(kg_pages.dtype))
+                jnp.swapaxes(kg_cache[:, 0, :, :nbc], 1, 2)
+                .astype(kg_pages.dtype))
         kg_pages = kg_pages.at[:, page_ids].set(kg_new)
     return PagedPages(k_pages, v_pages, kg_pages)
 
@@ -108,7 +114,7 @@ def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     """ONE layer's paged twin of the contiguous write + ``update_kcache``.
 
     kr_new/v_new: [S, Hkv, Dh] the new token's post-rope K / V per slot.
-    Writes land at (page_table[slot, cur_len // ps], cur_len % ps); rows
+    Writes land at (page_table[slot, cur_len // ps], :, cur_len % ps); rows
     with ``active == False`` are routed to the null page. When a slot's
     page completes ((cur_len+1) % ps == 0) the page's keys are rotated
     back to the pre-rope frame (same trick as kcache.update_kcache) and
@@ -121,8 +127,8 @@ def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     off = cur_len % ps
     phys = page_table[sidx, logical]                       # [S]
     phys = jnp.where(active, phys, NULL_PAGE)
-    k_pages = k_pages.at[phys, off].set(kr_new.astype(k_pages.dtype))
-    v_pages = v_pages.at[phys, off].set(v_new.astype(v_pages.dtype))
+    k_pages = k_pages.at[phys, :, off].set(kr_new.astype(k_pages.dtype))
+    v_pages = v_pages.at[phys, :, off].set(v_new.astype(v_pages.dtype))
 
     if kg_pages is None or gate_params is None:
         return k_pages, v_pages, kg_pages
@@ -130,8 +136,10 @@ def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     completed = active & (((cur_len + 1) % ps) == 0)       # [S]
 
     def one_slot(page_k, lg):
-        # page_k [ps, Hkv, Dh] post-rope keys of the (now full) page
-        return finalize_block_kg(gate_params, page_k, lg * ps, lg, cfg,
+        # page_k [Hkv, ps, Dh] post-rope keys of the (now full) page;
+        # flip the tiny page corner to the seq-major frame finalize expects
+        return finalize_block_kg(gate_params, jnp.swapaxes(page_k, 0, 1),
+                                 lg * ps, lg, cfg,
                                  is_roped=True, rope_theta=rope_theta)
 
     kg_new = jax.vmap(one_slot)(k_pages[phys], logical)    # [S, Hkv, Dg]
@@ -144,19 +152,24 @@ def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
 
 
 def gather_kg(kg_pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
-    """[P, Hkv, Dg] x [S, npt] -> per-slot logical Kg view [S, npt, Hkv, Dg]."""
-    return kg_pages[page_table]
+    """[P, Hkv, Dg] x [S, npt] -> per-slot HEAD-MAJOR logical Kg view
+    [S, Hkv, npt, Dg] (feeds the fused gate-select kernel directly)."""
+    return jnp.swapaxes(kg_pages[page_table], 1, 2)
 
 
 def gather_kv(pages_1l: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
-    """[P, ps, Hkv, Dh] x [S, npt] -> contiguous view [S, npt*ps, Hkv, Dh].
+    """[P, Hkv, ps, Dh] x [S, npt] -> head-major contiguous view
+    [S, Hkv, npt*ps, Dh].
 
-    Dense-attention fallback path (and debugging); the sparse path never
-    materialises this — it gathers selected pages only.
+    Dense-attention fallback path (and debugging) ONLY — this materialises
+    a cache-sized copy by construction (dense reads the whole cache); the
+    sparse hot path never calls it, it gathers selected pages only.
     """
     s, npt = page_table.shape
-    g = pages_1l[page_table]                 # [S, npt, ps, Hkv, Dh]
-    return g.reshape(s, npt * pages_1l.shape[1], *pages_1l.shape[2:])
+    g = pages_1l[page_table]                 # [S, npt, Hkv, ps, Dh]
+    g = jnp.swapaxes(g, 1, 2)                # [S, Hkv, npt, ps, Dh]
+    return g.reshape(s, pages_1l.shape[1], npt * pages_1l.shape[2],
+                     pages_1l.shape[3])
 
 
 class PageAllocator:

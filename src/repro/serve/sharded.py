@@ -62,9 +62,9 @@ def sharded_sparse_decode(
         qr: jnp.ndarray,          # [B, Hkv, G, Dh] attention query (post-rope)
         kr_new: jnp.ndarray,      # [B, Hkv, Dh]    new key (post-rope)
         v_new: jnp.ndarray,       # [B, Hkv, Dh]
-        k_cache: jnp.ndarray,     # [B, S, Hkv, Dh] seq-sharded
+        k_cache: jnp.ndarray,     # [B, Hkv, S, Dh] head-major, seq-sharded
         v_cache: jnp.ndarray,
-        kg_cache: jnp.ndarray,    # [B, nb, Hkv, Dg] seq-sharded
+        kg_cache: jnp.ndarray,    # [B, Hkv, nb, Dg] head-major, seq-sharded
         cur_len: jnp.ndarray,     # [B] length BEFORE this token
         gate_wk: jnp.ndarray,     # [Hkv, 3*Dh, Dg]
         *,
@@ -84,19 +84,19 @@ def sharded_sparse_decode(
     bs = cfg.block_size
     k_budget = max(1, cfg.token_budget // bs)
     cap = max(1, min(int(math.ceil(k_budget / nsh * cfg.local_cap_factor)),
-                     k_cache.shape[1] // (bs * nsh)))
+                     k_cache.shape[2] // (bs * nsh)))
 
     bspec = batch_spec
     seq = tuple(seq_axes) if len(seq_axes) > 1 else seq_axes[0]
     spec_q = P(bspec, None, None, None)       # qr [B,Hkv,G,Dh]
     spec_qg = P(bspec, None, None)
-    spec_kv = P(bspec, seq, None, None)
+    spec_kv = P(bspec, None, seq, None)       # head-major: seq is axis 2
     spec_len = P(bspec)
     spec_w = P(None, None, None)
 
     def local(qg, qr, kr_new, v_new, k_loc, v_loc, kg_loc, cur_len, wk):
-        b, s_loc, hkv, dh = k_loc.shape
-        nb_loc = kg_loc.shape[1]
+        b, hkv, s_loc, dh = k_loc.shape
+        nb_loc = kg_loc.shape[2]
         g = qr.shape[2]
         dg = qg.shape[-1]
         ax = _flat_axis_index(seq_axes, sizes)
@@ -108,11 +108,11 @@ def sharded_sparse_decode(
         # -- 1) KV write by the owning shard ------------------------------
         own_tok = (cur_len >= tok0) & (cur_len < tok0 + s_loc)
         lpos = jnp.clip(cur_len - tok0, 0, s_loc - 1)
-        cur_k = k_loc[bidx, lpos]
-        cur_v = v_loc[bidx, lpos]
-        k_loc = k_loc.at[bidx, lpos].set(
+        cur_k = k_loc[bidx, :, lpos]
+        cur_v = v_loc[bidx, :, lpos]
+        k_loc = k_loc.at[bidx, :, lpos].set(
             jnp.where(own_tok[:, None, None], kr_new, cur_k))
-        v_loc = v_loc.at[bidx, lpos].set(
+        v_loc = v_loc.at[bidx, :, lpos].set(
             jnp.where(own_tok[:, None, None], v_new, cur_v))
 
         # -- 2) Kg write when a block completes ---------------------------
@@ -123,7 +123,10 @@ def sharded_sparse_decode(
         lstart = lblk * bs
 
         def kg_row(k_row, st, gb):
-            blk = jax.lax.dynamic_slice_in_dim(k_row, st, bs, axis=0)
+            # k_row head-major [Hkv, s_loc, Dh]: slice the block, flip the
+            # tiny [Hkv, bs] corner to seq-major for pooling
+            blk = jax.lax.dynamic_slice_in_dim(k_row, st, bs, axis=1)
+            blk = jnp.swapaxes(blk, 0, 1)                  # [bs, Hkv, Dh]
             pos = -(tok0 + st + jnp.arange(bs))            # un-rope
             blk = apply_rope(blk[None], pos[None], rope_theta)[0]
             pooled = jnp.concatenate(
@@ -136,15 +139,15 @@ def sharded_sparse_decode(
             return kg
 
         kg_new = jax.vmap(kg_row)(k_loc, lstart, gblk)     # [B,Hkv,Dg]
-        cur_kg = kg_loc[bidx, lblk]
-        kg_loc = kg_loc.at[bidx, lblk].set(
+        cur_kg = kg_loc[bidx, :, lblk]
+        kg_loc = kg_loc.at[bidx, :, lblk].set(
             jnp.where(own_blk[:, None, None],
                       kg_new.astype(kg_loc.dtype), cur_kg))
 
         # -- 3) local gate scores + candidates ----------------------------
         gid = blk0 + jnp.arange(nb_loc)                    # global block ids
         n_valid = -(-new_len // bs)                        # [B]
-        s_gate = jnp.einsum("bhd,bnhd->bhn", qg.astype(jnp.float32),
+        s_gate = jnp.einsum("bhd,bhnd->bhn", qg.astype(jnp.float32),
                             kg_loc.astype(jnp.float32)) / math.sqrt(dg)
         vis = gid[None, None, :] < n_valid[:, None, None]
         s_raw = jnp.where(vis, s_gate, NEG_INF)            # unforced scores
@@ -184,16 +187,14 @@ def sharded_sparse_decode(
             mine = (cand_v >= thr) & (cand_v > NEG_INF / 2)  # [B,Hkv,c]
 
         # -- 5) local block-sparse attention ------------------------------
-        # gather straight off the [B,S,Hkv,Dh] layout (a moveaxis here
-        # would materialise a transposed copy of the WHOLE cache shard
-        # every step — §Perf P1 iteration 2)
+        # gather straight off the native head-major [B,Hkv,S,Dh] layout:
+        # the selected blocks are the ONLY cache bytes touched this step
         lsel = cand_i                                       # local block ids
         pos_l = lsel[..., None] * bs + jnp.arange(bs)       # [B,Hkv,c,bs]
         gpos = pos_l.reshape(b, hkv, c * bs)
-        idx_seq = jnp.swapaxes(gpos, 1, 2)[..., None]       # [B,c*bs,Hkv,1]
-        kg_ = jnp.take_along_axis(k_loc, idx_seq, axis=1)   # [B,c*bs,Hkv,Dh]
-        vg_ = jnp.take_along_axis(v_loc, idx_seq, axis=1)
-        sc = jnp.einsum("bhgd,bkhd->bhgk", qr.astype(jnp.float32),
+        kg_ = jnp.take_along_axis(k_loc, gpos[..., None], axis=2)
+        vg_ = jnp.take_along_axis(v_loc, gpos[..., None], axis=2)
+        sc = jnp.einsum("bhgd,bhkd->bhgk", qr.astype(jnp.float32),
                         kg_.astype(jnp.float32)) * (1.0 / math.sqrt(dh))
         tok_valid = (tok0 + pos_l) < new_len[:, None, None, None]
         valid = mine[..., None] & tok_valid                 # [B,Hkv,c,bs]
@@ -214,7 +215,7 @@ def sharded_sparse_decode(
         l_i = jnp.sum(p, axis=-1, keepdims=True)
         l = jax.lax.psum(l_i, seq) if nsh > 1 else l_i
         pn = p / jnp.maximum(l, 1e-30)
-        o_i = jnp.einsum("bhgk,bkhd->bhgd", pn, vg_.astype(jnp.float32))
+        o_i = jnp.einsum("bhgk,bhkd->bhgd", pn, vg_.astype(jnp.float32))
         o = jax.lax.psum(o_i, seq) if nsh > 1 else o_i
         return o.astype(qr.dtype), k_loc, v_loc, kg_loc
 

@@ -119,15 +119,16 @@ def test_kcache_update_at_block_boundary():
     bs = GCFG.block_size
     b, smax, hkv, dh = 2, 4 * bs, 1, 16
     k_raw = jax.random.normal(key, (b, smax, hkv, dh))
+    k_hm = jnp.swapaxes(k_raw, 1, 2)            # head-major decode cache
     cache = kc.init_kcache(b, 4, hkv, GCFG.d_gate, jnp.float32)
     # mid-block: no update
-    c1 = kc.update_kcache(cache, p, k_raw, jnp.array([bs - 1, bs - 1]), GCFG)
+    c1 = kc.update_kcache(cache, p, k_hm, jnp.array([bs - 1, bs - 1]), GCFG)
     assert np.all(np.asarray(c1.n_complete) == 0)
     # boundary: block 0 finalised
-    c2 = kc.update_kcache(cache, p, k_raw, jnp.array([bs, bs]), GCFG)
+    c2 = kc.update_kcache(cache, p, k_hm, jnp.array([bs, bs]), GCFG)
     assert np.all(np.asarray(c2.n_complete) == 1)
     expect = ag.gate_k(p, k_raw[:, :bs], GCFG)[:, 0]
-    np.testing.assert_allclose(np.asarray(c2.kg[:, 0]), np.asarray(expect),
+    np.testing.assert_allclose(np.asarray(c2.kg[:, :, 0]), np.asarray(expect),
                                atol=1e-5)
 
 
@@ -142,11 +143,11 @@ def test_kcache_derope_matches_pre_rope():
     k_rope = apply_rope(k_nope, pos, 10000.0)
     cache = kc.init_kcache(1, 2, 1, GCFG.d_gate, jnp.float32)
     cur = jnp.array([2 * bs])
-    c_a = kc.update_kcache(cache, p, k_nope, cur, GCFG)
-    c_b = kc.update_kcache(cache, p, k_rope, cur, GCFG,
+    c_a = kc.update_kcache(cache, p, jnp.swapaxes(k_nope, 1, 2), cur, GCFG)
+    c_b = kc.update_kcache(cache, p, jnp.swapaxes(k_rope, 1, 2), cur, GCFG,
                            cache_is_roped=True, rope_theta=10000.0)
-    np.testing.assert_allclose(np.asarray(c_a.kg[:, 1]),
-                               np.asarray(c_b.kg[:, 1]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(c_a.kg[:, :, 1]),
+                               np.asarray(c_b.kg[:, :, 1]), atol=1e-4)
 
 
 def test_oracle_beats_random_recall():

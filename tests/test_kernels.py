@@ -34,11 +34,12 @@ jax.config.update("jax_platform_name", "cpu")
 
 
 def _mk_sparse_inputs(key, b, hkv, g, dh, nb, bs, nsel, dtype):
+    """Head-major caches [B, Hkv, S, Dh] — the native decode layout."""
     ks = jax.random.split(key, 4)
     s = nb * bs
     q = jax.random.normal(ks[0], (b, hkv, g, dh), jnp.float32).astype(dtype)
-    k = jax.random.normal(ks[1], (b, s, hkv, dh), jnp.float32).astype(dtype)
-    v = jax.random.normal(ks[2], (b, s, hkv, dh), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, hkv, s, dh), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, hkv, s, dh), jnp.float32).astype(dtype)
     rng = np.random.default_rng(0)
     idx = np.full((b, hkv, nsel), -1, np.int32)
     for bi in range(b):
@@ -87,6 +88,21 @@ def test_sparse_decode_full_selection_equals_dense():
     o_dense = ref.dense_decode_ref(q, k, v, kv_len)
     np.testing.assert_allclose(np.asarray(o_sparse), np.asarray(o_dense),
                                atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("c", [1, 2, 3, 8])
+def test_block_sparse_decode_multiblock_fold(c):
+    """Folding C selected blocks per grid step (incl. non-divisible nsel
+    and C > nsel) must not change the result vs the jnp oracle."""
+    from repro.kernels.block_sparse_decode import block_sparse_decode
+    b, hkv, g, dh, nb, bs, nsel = 2, 2, 4, 64, 8, 16, 5
+    q, k, v, idx, kv_len = _mk_sparse_inputs(
+        jax.random.PRNGKey(11), b, hkv, g, dh, nb, bs, nsel, jnp.float32)
+    o_ref = ref.sparse_decode_ref(q, k, v, idx, kv_len, block_size=bs)
+    o_pal = block_sparse_decode(q, k, v, idx, kv_len, block_size=bs,
+                                blocks_per_step=c, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_pal), np.asarray(o_ref),
+                               atol=2e-5, rtol=2e-5)
 
 
 GT_SWEEP = [

@@ -27,9 +27,10 @@ def test_offload_model_paper_numbers():
 def test_offload_fetch_matches_direct_gather():
     rng = np.random.default_rng(0)
     b, s, hkv, dh, bs = 2, 256, 2, 16, 16
-    k = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
-    v = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
-    kg = jnp.zeros((b, s // bs, hkv, 8))
+    # head-major host store [B, Hkv, S, Dh] (matches the decode caches)
+    k = jnp.asarray(rng.normal(size=(b, hkv, s, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(b, hkv, s, dh)).astype(np.float32))
+    kg = jnp.zeros((b, hkv, s // bs, 8))
     store = OffloadedKV(k, v, kg, bs)
     idx = jnp.asarray(rng.integers(0, s // bs, size=(b, hkv, 3)), jnp.int32)
     k_sel, v_sel, store2 = store.fetch(idx)
@@ -40,4 +41,4 @@ def test_offload_fetch_matches_direct_gather():
             blk = int(idx[bi, h, 0])
             np.testing.assert_array_equal(
                 np.asarray(k_sel[bi, h, :bs]),
-                np.asarray(k[bi, blk * bs:(blk + 1) * bs, h]))
+                np.asarray(k[bi, h, blk * bs:(blk + 1) * bs]))

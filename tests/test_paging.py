@@ -84,20 +84,20 @@ def test_scheduler_rejects_impossible_request():
 # ---------------------------------------------------------------------------
 
 def _paged_from_contiguous(k_cache, v_cache, nb, bs, perm):
-    """Scatter a contiguous [B,S,Hkv,Dh] cache into per-batch pools via a
-    permuted page table. Returns pooled arrays + table for batch-shared
-    pools (pages of all rows share one pool)."""
-    b, s, hkv, dh = k_cache.shape
+    """Scatter a contiguous head-major [B,Hkv,S,Dh] cache into pools
+    [P,Hkv,ps,Dh] via a permuted page table. Returns pooled arrays + table
+    for batch-shared pools (pages of all rows share one pool)."""
+    b, hkv, s, dh = k_cache.shape
     npool = b * nb + 1                                  # + null page
-    k_pages = np.zeros((npool, bs, hkv, dh), k_cache.dtype)
-    v_pages = np.zeros((npool, bs, hkv, dh), v_cache.dtype)
+    k_pages = np.zeros((npool, hkv, bs, dh), k_cache.dtype)
+    v_pages = np.zeros((npool, hkv, bs, dh), v_cache.dtype)
     table = np.zeros((b, nb), np.int32)
     for bi in range(b):
         for j in range(nb):
             phys = 1 + perm[bi * nb + j]
             table[bi, j] = phys
-            k_pages[phys] = k_cache[bi, j * bs:(j + 1) * bs]
-            v_pages[phys] = v_cache[bi, j * bs:(j + 1) * bs]
+            k_pages[phys] = k_cache[bi, :, j * bs:(j + 1) * bs]
+            v_pages[phys] = v_cache[bi, :, j * bs:(j + 1) * bs]
     return (jnp.asarray(k_pages), jnp.asarray(v_pages), jnp.asarray(table))
 
 
@@ -106,8 +106,8 @@ def test_paged_sparse_decode_matches_contiguous(impl):
     b, hkv, g, dh, nb, bs, nsel = 2, 2, 4, 32, 6, 8, 4
     ks = jax.random.split(jax.random.PRNGKey(0), 4)
     q = jax.random.normal(ks[0], (b, hkv, g, dh), jnp.float32)
-    kc_ = jax.random.normal(ks[1], (b, nb * bs, hkv, dh), jnp.float32)
-    vc_ = jax.random.normal(ks[2], (b, nb * bs, hkv, dh), jnp.float32)
+    kc_ = jax.random.normal(ks[1], (b, hkv, nb * bs, dh), jnp.float32)
+    vc_ = jax.random.normal(ks[2], (b, hkv, nb * bs, dh), jnp.float32)
     kv_len = jnp.array([nb * bs, nb * bs - 5])
     rng = np.random.default_rng(3)
     idx = np.full((b, hkv, nsel), -1, np.int32)
@@ -260,8 +260,8 @@ def _run_paged_appends(gcfg, gate, k_nope, ps, hkv, dh, dg, t_total):
     physical pages); returns (kg_pages, page_table)."""
     n_pages = t_total // ps
     npool = n_pages + 2
-    k_pages = jnp.zeros((npool, ps, hkv, dh), jnp.float32)
-    v_pages = jnp.zeros((npool, ps, hkv, dh), jnp.float32)
+    k_pages = jnp.zeros((npool, hkv, ps, dh), jnp.float32)
+    v_pages = jnp.zeros((npool, hkv, ps, dh), jnp.float32)
     kg_pages = jnp.zeros((npool, hkv, dg), jnp.float32)
     # physical ids deliberately not in logical order
     table = np.zeros((1, n_pages), np.int32)
@@ -289,7 +289,7 @@ def test_paged_kg_matches_prefill_recompute():
     cache = kc.prefill_kcache(cache, gate, k_nope, gcfg)
     for j in range(n_pages):
         got = np.asarray(kg_pages[table[0, j]])
-        want = np.asarray(cache.kg[0, j])
+        want = np.asarray(cache.kg[0, :, j])         # kg head-major
         np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)
 
 
@@ -312,6 +312,6 @@ try:
         for j in range(n_pages_seq):
             np.testing.assert_allclose(
                 np.asarray(kg_pages[table[0, j]]),
-                np.asarray(cache.kg[0, j]), atol=2e-5, rtol=2e-5)
+                np.asarray(cache.kg[0, :, j]), atol=2e-5, rtol=2e-5)
 except ImportError:  # pragma: no cover - hypothesis is optional (dev dep)
     pass

@@ -100,8 +100,8 @@ def test_sparse_decode_full_selection_equals_dense(b, hkv, g, bs, nb, seed):
     s = nb * bs
     dh = 16
     q = jnp.asarray(rng.normal(size=(b, hkv, g, dh)).astype(np.float32))
-    kc = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
-    vc = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    kc = jnp.asarray(rng.normal(size=(b, hkv, s, dh)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(size=(b, hkv, s, dh)).astype(np.float32))
     kv_len = jnp.asarray(rng.integers(1, s + 1, size=(b,)).astype(np.int32))
     idx = jnp.broadcast_to(jnp.arange(nb), (b, hkv, nb)).astype(jnp.int32)
     from repro.kernels.ref import dense_decode_ref
@@ -120,8 +120,8 @@ def test_sparse_decode_permutation_invariant(b, hkv, nsel, seed):
     bs, nb, dh, g = 8, 6, 16, 2
     s = nb * bs
     q = jnp.asarray(rng.normal(size=(b, hkv, g, dh)).astype(np.float32))
-    kc = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
-    vc = jnp.asarray(rng.normal(size=(b, s, hkv, dh)).astype(np.float32))
+    kc = jnp.asarray(rng.normal(size=(b, hkv, s, dh)).astype(np.float32))
+    vc = jnp.asarray(rng.normal(size=(b, hkv, s, dh)).astype(np.float32))
     kv_len = jnp.full((b,), s, jnp.int32)
     base = rng.choice(nb, size=nsel, replace=False)
     i1 = jnp.broadcast_to(jnp.asarray(base, jnp.int32), (b, hkv, nsel))
