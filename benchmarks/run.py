@@ -15,6 +15,10 @@ released checkpoints + GPUs; DESIGN.md §7 records the mapping):
          batching on ragged traffic (--engine paged|contiguous|both)
   decode per-step decode latency of the hot path (sparse ref / Pallas
          interpret / dense) — the perf-trajectory payload of --json
+  policies  pluggable selection-policy sweep (gate / quest / oracle /
+         sliding-window / dense via DecodeOptions) at equal block budget:
+         per-policy decode latency, measured achieved sparsity, dense
+         agreement — also part of the --json payload
   roofline  print the dry-run roofline table       (EXPERIMENTS.md source)
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig5,fig6] [--fast]
@@ -40,6 +44,7 @@ import numpy as np
 import repro.configs as configs
 from repro.config import GateConfig, TrainConfig, OptimConfig, reduced
 from repro.core import sparsity as sp
+from repro.core.policy import DecodeOptions, DensePolicy, get_policy
 from repro.data.pipeline import DataState, make_batch
 from repro.kernels import ops
 from repro.models import transformer as tf
@@ -384,9 +389,10 @@ def bench_tab1():
         c = cfg.replace(gate=dataclasses.replace(
             cfg.gate, token_budget=budget_blocks * cfg.gate.block_size))
         step_sp = jax.jit(functools.partial(
-            tf.lm_decode_step, cfg=c, sparse=True, sparse_impl="ref"))
+            tf.lm_decode_step, cfg=c, options=DecodeOptions()))
         step_dn = jax.jit(functools.partial(
-            tf.lm_decode_step, cfg=c, sparse=False))
+            tf.lm_decode_step, cfg=c,
+            options=DecodeOptions(policy=DensePolicy())))
         logits, st0 = jax.jit(functools.partial(
             tf.lm_prefill, cfg=c, max_len=max_len))(params, batch)
         tok = jnp.argmax(logits, -1).astype(jnp.int32)
@@ -394,8 +400,8 @@ def bench_tab1():
         tok_sp = tok_dn = tok
         agree, dvg = [], []
         for _ in range(n_steps):
-            lg_sp, st_sp = step_sp(params, st_sp, tok_sp)
-            lg_dn, st_dn = step_dn(params, st_dn, tok_dn)
+            lg_sp, st_sp, _ = step_sp(params, st_sp, tok_sp)
+            lg_dn, st_dn, _ = step_dn(params, st_dn, tok_dn)
             agree.append(float(jnp.mean(
                 (jnp.argmax(lg_sp, -1) == jnp.argmax(lg_dn, -1)))))
             p_dn = jax.nn.log_softmax(lg_dn.astype(jnp.float32))
@@ -463,8 +469,7 @@ def bench_serve():
     emit("serve", "n_requests", n_req)
     emit("serve", "useful_tokens", useful)
 
-    eng = DecodeEngine(cfg, params, max_len=max_plen + max_new + 16,
-                       sparse=True, sparse_impl="ref")
+    eng = DecodeEngine(cfg, params, max_len=max_plen + max_new + 16)
     if ENGINE in ("paged", "both"):
         res = eng.serve(reqs, n_slots=n_slots)          # warm compile
         t0 = time.perf_counter()
@@ -532,25 +537,85 @@ def bench_decode():
     emit("decode", "batch", BATCH)
     emit("decode", "n_steps", n_steps)
     emit("decode", "sparsity", f"{1.0 - nsel / nb:.3f}")
-    for name, kw in (("sparse_ref", dict(sparse=True, sparse_impl="ref")),
-                     ("sparse_interpret",
-                      dict(sparse=True, sparse_impl="pallas_interpret")),
-                     ("dense", dict(sparse=False))):
-        step = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg, **kw))
+    # measure_sparsity=False: this section is the HOT-PATH latency
+    # tripwire — selection telemetry is compiled out so step_ms tracks
+    # only the decode data path (bench_policies measures aux-on cost)
+    for name, opts in (
+            ("sparse_ref", DecodeOptions(measure_sparsity=False)),
+            ("sparse_interpret",
+             DecodeOptions(kernel_impl="pallas_interpret",
+                           measure_sparsity=False)),
+            ("dense", DecodeOptions(policy=DensePolicy(),
+                                    measure_sparsity=False))):
+        step = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg,
+                                         options=opts))
         st, tok = st0, tok0
         for _ in range(2):                                  # warm compile
-            lg, st = step(params, st, tok)
+            lg, st, _ = step(params, st, tok)
             tok = jnp.argmax(lg, -1).astype(jnp.int32)
         jax.block_until_ready(lg)
         t0 = time.perf_counter()
         for _ in range(n_steps):
-            lg, st = step(params, st, tok)
+            lg, st, _ = step(params, st, tok)
             tok = jnp.argmax(lg, -1).astype(jnp.int32)
         jax.block_until_ready(lg)
         dt = time.perf_counter() - t0
         emit("decode", f"{name}_step_ms", f"{dt / n_steps * 1e3:.3f}")
         emit("decode", f"{name}_tok_per_s",
              f"{BATCH * n_steps / max(dt, 1e-9):.1f}")
+
+
+def bench_policies():
+    """Selection-policy sweep (ISSUE 3 tentpole metric): every pluggable
+    policy decodes the same distilled tiny model at the SAME block budget
+    — per-step latency, MEASURED achieved sparsity (from the actual
+    selected block masks, averaged over the rollout) and top-1 agreement
+    with the dense rollout. One-line policy swaps are the point of the
+    DecodeOptions API; this section is the comparative harness ("The
+    Sparse Frontier": budget vs. method at equal cost)."""
+    print("\n== policies: selection-policy sweep at equal budget ==")
+    cfg, state, _, _ = distilled_fixture(16)
+    params = state.params
+    prefill_len = 128 if FAST else 256
+    n_steps = 8 if FAST else 24
+    max_len = prefill_len + n_steps + 8
+    batch = {"tokens": make_batch(cfg, BATCH, prefill_len,
+                                  DataState(3, 0))["tokens"]}
+    prefill = jax.jit(functools.partial(tf.lm_prefill, cfg=cfg,
+                                        max_len=max_len))
+    logits, st0 = prefill(params, batch)
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    emit("policies", "budget_tokens", cfg.gate.token_budget)
+    emit("policies", "prefill_len", prefill_len)
+
+    dense_toks = None
+    for name in ("dense", "gate", "oracle", "quest", "sliding_window"):
+        opts = DecodeOptions(policy=get_policy(name))
+        step = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg,
+                                         options=opts))
+        st, tok = st0, tok0
+        for _ in range(2):                                  # warm compile
+            lg, st, aux = step(params, st, tok)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+        jax.block_until_ready(lg)
+        st, tok = st0, tok0
+        toks, rho = [], []
+        t0 = time.perf_counter()
+        for _ in range(n_steps):
+            lg, st, aux = step(params, st, tok)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            toks.append(tok)
+            rho.append(aux["sparsity"])
+        jax.block_until_ready(lg)
+        dt = time.perf_counter() - t0
+        toks = np.asarray(jnp.stack(toks))
+        if name == "dense":
+            dense_toks = toks
+        emit("policies", f"{name}_step_ms", f"{dt / n_steps * 1e3:.3f}")
+        emit("policies", f"{name}_sparsity",
+             f"{float(np.mean(np.asarray(jnp.stack(rho)))):.3f}")
+        emit("policies", f"{name}_top1_agree_dense",
+             f"{float(np.mean(toks == dense_toks)):.4f}")
 
 
 def _write_json(path: str) -> None:
@@ -614,7 +679,8 @@ SECTIONS = {
     "fig4": bench_fig4, "fig5": bench_fig5, "fig6": bench_fig6,
     "fig7": bench_fig7, "fig8": bench_fig8, "fig9": bench_fig9,
     "tab1": bench_tab1, "tab2": bench_tab2, "serve": bench_serve,
-    "decode": bench_decode, "roofline": bench_roofline,
+    "decode": bench_decode, "policies": bench_policies,
+    "roofline": bench_roofline,
 }
 
 
@@ -640,7 +706,7 @@ def main() -> None:
     if args.engine != "both" and args.only is None:
         args.only = "serve"
     if args.json_path and args.only is None:
-        args.only = "decode"          # the perf-trajectory default payload
+        args.only = "decode,policies"  # the perf-trajectory default payload
     names = args.only.split(",") if args.only else list(SECTIONS)
     t0 = time.perf_counter()
     for n in names:

@@ -19,9 +19,11 @@ import jax.numpy as jnp
 
 import repro.configs as configs
 from repro.config import OptimConfig, TrainConfig, reduced
+from repro.core.policy import DecodeOptions, DensePolicy
 from repro.data.pipeline import DataState, make_batch
 from repro.optim import adamw
 from repro.serve.engine import DecodeEngine
+from repro.serve.sampling import SamplingParams
 from repro.train import loop as train_loop
 
 
@@ -63,20 +65,35 @@ def main():
         hist.append({k: float(v) for k, v in m.items()})
     print(f"distill KL: {hist[0]['kl']:.4f} -> {hist[-1]['kl']:.4f}")
 
-    # 3. serve: prefill 256 tokens, decode 32 more, sparse vs dense
+    # 3. serve: prefill 256 tokens, decode 32 more, sparse vs dense.
+    # DecodeOptions is the one static decode-config object: the default is
+    # the paper's learned gate; DensePolicy() is the full-attention A/B.
     batch = {"tokens": make_batch(cfg, 2, 256, DataState(9, 0))["tokens"]}
     n_new = 32
-    eng_sp = DecodeEngine(cfg, state.params, max_len=512, sparse=True)
-    eng_dn = DecodeEngine(cfg, state.params, max_len=512, sparse=False)
+    eng_sp = DecodeEngine(cfg, state.params, max_len=512)   # GatePolicy
+    eng_dn = DecodeEngine(cfg, state.params, max_len=512,
+                          options=DecodeOptions(policy=DensePolicy()))
     out_sp = eng_sp.generate(batch, n_new)
     out_dn = eng_dn.generate(batch, n_new)
     agree = float(jnp.mean(out_sp["tokens"] == out_dn["tokens"]))
     print(f"sparse vs dense token agreement over {n_new} steps: {agree:.3f}")
-    _, st = eng_sp.prefill(batch)
-    print("sparsity stats:", eng_sp.sparsity_stats(st))
+    stats = eng_sp.sparsity_stats()        # MEASURED over the decode above
+    print(f"measured sparsity {stats['sparsity']:.3f} "
+          f"(io_speedup {stats['io_speedup']:.2f}x, "
+          f"mean selected blocks {stats['sel_blocks']:.1f})")
     if agree < 0.5:
         print("(low agreement = budget too tight for this tiny model; "
               "try a larger --budget)")
+
+    # 4. stochastic sampling (new serve/sampling.py): nucleus sampling
+    # rides in the same options object; a fixed key reproduces exactly.
+    eng_hot = DecodeEngine(
+        cfg, state.params, max_len=512,
+        options=DecodeOptions(sampling=SamplingParams(temperature=0.8,
+                                                      top_p=0.95)))
+    out_hot = eng_hot.generate(batch, n_new, key=jax.random.PRNGKey(7))
+    div = float(jnp.mean(out_hot["tokens"] != out_sp["tokens"]))
+    print(f"top-p sampled decode differs from greedy on {div:.0%} of tokens")
 
 
 if __name__ == "__main__":

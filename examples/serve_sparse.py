@@ -4,16 +4,21 @@ models) end to end.
 
     PYTHONPATH=src python examples/serve_sparse.py [--arch qwen3_0_6b]
         [--budget 128] [--method budget|threshold] [--batch 4] [--new 64]
-        [--paged]
+        [--policy gate|quest|oracle|sliding_window] [--temperature 0]
+        [--top-p 1.0] [--paged]
 
 Default: one uniform batch through ``DecodeEngine.generate``. With
 ``--paged``, ragged requests (mixed prompt lengths and decode budgets) go
 through the continuous-batching paged-KV path (``DecodeEngine.serve``):
 iteration-level admission into decode slots, per-request page tables over
 a shared page pool, and the gate's K-compression cache paged alongside
-the raw KV. Either way the trailing partial block is force-selected
-(K-compression-cache semantics) and the engine reports achieved sparsity
-+ derived I/O economics.
+the raw KV — plus PER-REQUEST overrides (one request gets a halved token
+budget, applied as a runtime mask). Decode behavior is one
+``DecodeOptions`` object: ``--policy`` swaps the selection strategy and
+``--temperature``/``--top-p`` switch greedy to stochastic sampling.
+Either way the trailing partial block is force-selected
+(K-compression-cache semantics) and the engine reports MEASURED achieved
+sparsity + derived I/O economics.
 """
 import argparse
 import dataclasses
@@ -25,9 +30,11 @@ import numpy as np
 
 import repro.configs as configs
 from repro.config import reduced
+from repro.core.policy import DecodeOptions, get_policy
 from repro.data.pipeline import DataState, make_batch
 from repro.models.registry import get_api
 from repro.serve.engine import DecodeEngine
+from repro.serve.sampling import SamplingParams
 
 
 def main():
@@ -40,6 +47,12 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prefill", type=int, default=256)
     ap.add_argument("--new", type=int, default=64)
+    ap.add_argument("--policy", default="gate",
+                    choices=["gate", "quest", "oracle", "sliding_window"],
+                    help="block-selection policy (core.policy)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; >0 enables stochastic sampling")
+    ap.add_argument("--top-p", type=float, default=1.0, dest="top_p")
     ap.add_argument("--paged", action="store_true",
                     help="ragged requests through the continuous-batching "
                          "paged-KV engine (serve) instead of one uniform "
@@ -56,6 +69,10 @@ def main():
 
     params = get_api(cfg).init_params(jax.random.PRNGKey(0), cfg)
     max_len = args.prefill + args.new + 16
+    opts = DecodeOptions(
+        policy=get_policy(args.policy),
+        sampling=SamplingParams(temperature=args.temperature,
+                                top_p=args.top_p))
 
     if args.paged:
         rng = np.random.default_rng(3)
@@ -67,17 +84,24 @@ def main():
             reqs.append({"rid": i, "max_new_tokens": mn,
                          "tokens": rng.integers(
                              0, cfg.vocab_size, size=(plen,)).astype(np.int32)})
-        eng = DecodeEngine(cfg, params, max_len=max_len, sparse=True)
+        # per-request overrides ride in the request dict: request 0 runs at
+        # HALF the token budget (runtime mask — same compiled step)
+        reqs[0]["budget"] = max(cfg.gate.block_size, args.budget // 2)
+        eng = DecodeEngine(cfg, params, max_len=max_len, options=opts)
         t0 = time.perf_counter()
         res = eng.serve(reqs, n_slots=max(2, args.batch // 2))
         wall = time.perf_counter() - t0
         st = res["stats"]
-        print(f"arch={cfg.arch_id} paged serve: {len(reqs)} ragged requests, "
+        print(f"arch={cfg.arch_id} policy={args.policy} paged serve: "
+              f"{len(reqs)} ragged requests, "
               f"{st['generated_tokens']} tokens in {st['decode_steps']} steps "
               f"({st['tok_per_s']:.1f} tok/s, wall {wall:.2f}s)")
         print(f"slot utilisation {st['slot_util']:.2f}, "
               f"page pool {st['num_pages']} x {st['page_size']} tokens, "
               f"admission stalls {st['admission_stalls']}")
+        print("measured sparsity by request (req 0 at half budget): "
+              + ", ".join(f"{rid}: {rho:.3f}" for rid, rho in
+                          sorted(st["sparsity_by_rid"].items())))
         for r in reqs[:2]:
             print(f"req{r['rid']} ({len(r['tokens'])} prompt tok): "
                   f"{res[r['rid']][:12]}")
@@ -87,15 +111,14 @@ def main():
     batch = {"tokens": make_batch(cfg, args.batch, args.prefill,
                                   DataState(3, 0))["tokens"]}
 
-    eng = DecodeEngine(cfg, params, max_len=max_len, sparse=True)
+    eng = DecodeEngine(cfg, params, max_len=max_len, options=opts)
     t0 = time.perf_counter()
     res = eng.generate(batch, args.new)
     wall = time.perf_counter() - t0
-    _, st = eng.prefill(batch)
-    stats = eng.sparsity_stats(st)
+    stats = eng.sparsity_stats()           # measured over the decode above
 
-    print(f"arch={cfg.arch_id} method={args.method} budget={args.budget} "
-          f"batch={args.batch}")
+    print(f"arch={cfg.arch_id} policy={args.policy} method={args.method} "
+          f"budget={args.budget} batch={args.batch}")
     print(f"prefill {args.prefill} tok: {res['prefill_s'] * 1e3:.1f} ms; "
           f"decode {args.new} steps: {res['decode_s'] * 1e3:.1f} ms "
           f"({res['tok_per_s']:.1f} tok/s, wall {wall:.2f}s)")

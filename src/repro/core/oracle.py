@@ -39,3 +39,27 @@ def oracle_select(q, k_cache, kv_len, cfg: GateConfig, max_selected=None):
     scores = oracle_scores_decode(q, k_cache, kv_len, cfg.block_size)
     n_valid = -(-kv_len // cfg.block_size)
     return select_blocks(scores, n_valid, cfg, max_selected)
+
+
+def oracle_scores_headmajor(qgrp: jnp.ndarray, k_cache: jnp.ndarray,
+                            kv_len: jnp.ndarray, block_size: int
+                            ) -> jnp.ndarray:
+    """Head-major twin for the decode path (core.policy.OraclePolicy).
+
+    qgrp: [B, Hkv, g, Dh] post-rope regrouped queries; k_cache:
+    [B, Hkv, S, Dh] (contiguous cache or paged gather). Returns
+    [B, Hkv, nb] group-max block row-max logits, NEG_INF on invisible
+    blocks. A non-block-aligned S is floored to whole blocks, matching
+    the gate's Kg-cache truncation.
+    """
+    from repro.models.common import NEG_INF
+    b, hkv, g, dh = qgrp.shape
+    nb = k_cache.shape[2] // block_size
+    s_max = nb * block_size
+    s = jnp.einsum("bhgd,bhsd->bhgs", qgrp.astype(jnp.float32),
+                   k_cache[:, :, :s_max].astype(jnp.float32)) \
+        / jnp.sqrt(jnp.float32(dh))
+    valid = jnp.arange(s_max)[None, :] < kv_len[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    s = jnp.max(s.reshape(b, hkv, g, nb, block_size), axis=-1)
+    return jnp.max(s, axis=2)

@@ -1,0 +1,338 @@
+"""Pluggable block-selection policies + the ``DecodeOptions`` decode API.
+
+SeerAttention-R's learned gate is one point in a family of block-selection
+strategies ("The Sparse Frontier": the interesting questions are
+comparative — budget vs. method vs. context length). This module makes the
+strategy a first-class, swappable object instead of a hardwired code path:
+
+  GatePolicy            the paper's learned gate (kernels/gate_select.py;
+                        bitwise-identical to the pre-policy decode path)
+  QuestPolicy           training-free query-aware selection from per-block
+                        key min/max metadata (core/quest.py, Tang et al.)
+  OraclePolicy          exact top-k over the true attention block scores
+                        (core/oracle.py) — the quality ceiling
+  DensePolicy           no selection; full dense decode attention
+  SlidingWindowPolicy   sink blocks + trailing local window, no extra state
+
+Every policy is a frozen (hashable) dataclass, so it is jit-STATIC: it
+rides inside ``DecodeOptions`` which the engines close over per compiled
+step. ``DecodeOptions`` replaces the old ``sparse: bool, sparse_impl: str``
+kwarg threading through engine -> ModelApi -> model -> ops:
+
+    old                                   new
+    ------------------------------------  ---------------------------------
+    sparse=True (gate selection)          DecodeOptions()  # GatePolicy
+    sparse=False                          DecodeOptions(policy=DensePolicy())
+    sparse_impl="pallas"                  DecodeOptions(kernel_impl="pallas")
+    sparse_impl="sharded"                 DecodeOptions(kernel_impl="sharded")
+    greedy=True                           DecodeOptions(sampling=GREEDY)
+    (unavailable)                         sampling=SamplingParams(...)
+    (unavailable)                         budget_override=<tokens>
+    (unavailable)                         policy=QuestPolicy()/OraclePolicy()/...
+
+A policy consumes ``SelectionInputs`` — the per-step view the attention
+layer already has in hand (queries, the Kg cache or its paged twin, the
+raw K cache, lengths) — and returns selected LOGICAL block ids
+``[B, Hkv, k]`` int32 with -1 padding, the contract of the block-sparse
+decode kernels. Policies other than the gate rank with plain top-k
+(``sparsity.budget_select``): their scores are bounds/maxima, not
+calibrated probabilities, so the threshold method does not apply to them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.core import kcache as kc
+from repro.core import sparsity as sp
+from repro.serve.sampling import GREEDY, SamplingParams
+
+KERNEL_IMPLS = ("ref", "pallas", "pallas_interpret", "sharded")
+
+
+def select_impl(kernel_impl: str) -> str:
+    """Map the attention-kernel impl to the gate-select impl: the Pallas
+    paths run selection in-kernel too; everything else (ref, sharded) uses
+    the jnp twin."""
+    return kernel_impl if kernel_impl in ("pallas", "pallas_interpret") \
+        else "ref"
+
+
+class SelectionInputs(NamedTuple):
+    """Everything a selection policy may consume for ONE decode step.
+
+    Built by the model's attention layer; contiguous and paged decode fill
+    different cache views (the unused ones stay None). All cache views are
+    HEAD-MAJOR (the decode-path layout invariant).
+    """
+    q_nope: jnp.ndarray                 # [B, 1, H, Dh] pre-rope queries
+    qr: jnp.ndarray                     # [B, 1, H, Dh] post-rope queries
+    pos: jnp.ndarray                    # [B, 1] query positions
+    new_len: jnp.ndarray                # [B] kv length incl. the new token
+    gate_params: Optional[Dict[str, Any]] = None   # per-layer gate or None
+    # contiguous views
+    kg: Optional[jnp.ndarray] = None           # [B, Hkv, nb, Dg]
+    k_cache: Optional[jnp.ndarray] = None      # [B, Hkv, S, Dh] post-rope
+    # paged views
+    kg_pages: Optional[jnp.ndarray] = None     # [P, Hkv, Dg]
+    k_pages: Optional[jnp.ndarray] = None      # [P, Hkv, ps, Dh] post-rope
+    page_table: Optional[jnp.ndarray] = None   # [B, npt] int32
+
+    @property
+    def n_kv_heads(self) -> int:
+        """Hkv from whichever cache view is present (all are head-major
+        with heads on axis 1) — the single derivation every policy uses."""
+        for view in (self.kg, self.kg_pages, self.k_cache, self.k_pages):
+            if view is not None:
+                return view.shape[1]
+        raise ValueError("SelectionInputs carries no cache view")
+
+    def n_blocks(self, block_size: int) -> int:
+        """Static logical-block count of this step's view."""
+        if self.kg is not None:
+            return self.kg.shape[2]
+        if self.page_table is not None:
+            return self.page_table.shape[1]
+        return self.k_cache.shape[2] // block_size
+
+
+@runtime_checkable
+class SelectionPolicy(Protocol):
+    """Hashable, jit-static block-selection strategy.
+
+    ``dense``: the attention layer skips selection and runs dense decode.
+    ``needs_gate``: requires trained gate params (layers without a gate
+    fall back to dense, preserving the old ``sparse=True`` semantics).
+    """
+    dense: bool
+    needs_gate: bool
+
+    def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
+               impl: str = "ref",
+               max_selected: Optional[int] = None) -> jnp.ndarray:
+        """-> selected logical block ids [B, Hkv, k] int32, -1 padding."""
+        ...
+
+
+def _gathered_k(inp: SelectionInputs) -> jnp.ndarray:
+    """Per-row head-major K view for metadata policies (Quest/Oracle):
+    the contiguous cache as-is, or the paged gather. The paged gather is a
+    cache-sized copy — acceptable for these reference/ceiling policies;
+    the gate hot path never takes it."""
+    if inp.k_cache is not None:
+        return inp.k_cache
+    from repro.serve import paging as pg
+    return pg.gather_kv(inp.k_pages, inp.page_table)
+
+
+def _grouped_q(inp: SelectionInputs) -> jnp.ndarray:
+    """Post-rope query regrouped [B, Hkv, g, Dh] (GQA-shared selection)."""
+    b, _, h, dh = inp.qr.shape
+    hkv = inp.n_kv_heads
+    return inp.qr[:, 0].reshape(b, hkv, h // hkv, dh)
+
+
+@dataclasses.dataclass(frozen=True)
+class GatePolicy:
+    """The paper's learned AttnGate (default). Contiguous decode scores the
+    Kg cache through the fused gate-select kernel; paged decode scores
+    straight off ``kg_pages`` through the page table (no per-slot Kg
+    gather on the Pallas paths)."""
+    dense = False
+    needs_gate = True
+
+    def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
+               impl: str = "ref",
+               max_selected: Optional[int] = None) -> jnp.ndarray:
+        from repro.core import attngate as ag
+        from repro.kernels import ops
+        qg = ag.gate_q(inp.gate_params, inp.q_nope, inp.pos, cfg.gate)[:, 0]
+        n_valid = kc.visible_blocks(jnp.maximum(inp.new_len, 1),
+                                    cfg.gate.block_size)
+        if inp.kg is not None:
+            return ops.gate_select(qg, inp.kg, n_valid, cfg.gate,
+                                   max_selected, impl=impl)
+        return ops.gate_select_paged(qg, inp.kg_pages, inp.page_table,
+                                     n_valid, cfg.gate, max_selected,
+                                     impl=impl)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuestPolicy:
+    """Training-free Quest selection (Tang et al., 2024): rank blocks by
+    the q·k upper bound from per-block key min/max. Metadata is derived
+    from the (post-rope) K cache each step — a correctness-first wiring of
+    ``core.quest``; an incremental metadata cache is a perf follow-up.
+    Selection is GQA-group-shared (max-pooled bound) so it can drive the
+    shared-sparsity block-sparse kernel."""
+    dense = False
+    needs_gate = False
+
+    def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
+               impl: str = "ref",
+               max_selected: Optional[int] = None) -> jnp.ndarray:
+        from repro.core import quest
+        bs = cfg.gate.block_size
+        k_view = _gathered_k(inp)
+        kmin, kmax = quest.quest_meta_decode(k_view, inp.new_len, bs)
+        n_valid = kc.visible_blocks(jnp.maximum(inp.new_len, 1), bs)
+        scores = quest.quest_scores_grouped(_grouped_q(inp), kmin, kmax,
+                                            n_valid)
+        idx, _ = sp.budget_select(scores, n_valid, cfg.gate, max_selected)
+        return idx
+
+
+@dataclasses.dataclass(frozen=True)
+class OraclePolicy:
+    """Exact top-k over the true block row-max attention scores
+    (core.oracle, paper §4.2): compute attention scores twice — once dense
+    for ranking, once block-sparse. The accuracy ceiling of any selector
+    (and at full budget, exactly dense attention's token set)."""
+    dense = False
+    needs_gate = False
+
+    def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
+               impl: str = "ref",
+               max_selected: Optional[int] = None) -> jnp.ndarray:
+        from repro.core import oracle
+        bs = cfg.gate.block_size
+        scores = oracle.oracle_scores_headmajor(
+            _grouped_q(inp), _gathered_k(inp), inp.new_len, bs)
+        n_valid = kc.visible_blocks(jnp.maximum(inp.new_len, 1), bs)
+        idx, _ = sp.budget_select(scores, n_valid, cfg.gate, max_selected)
+        return idx
+
+
+@dataclasses.dataclass(frozen=True)
+class DensePolicy:
+    """No selection: full dense decode attention (the old ``sparse=False``)."""
+    dense = True
+    needs_gate = False
+
+    def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
+               impl: str = "ref",
+               max_selected: Optional[int] = None) -> jnp.ndarray:
+        raise NotImplementedError("DensePolicy performs no block selection")
+
+
+@dataclasses.dataclass(frozen=True)
+class SlidingWindowPolicy:
+    """StreamingLM-style static pattern: ``sink_blocks`` leading blocks
+    plus the trailing local window, no scoring and no extra state. The
+    window width is the selection budget minus the sinks, so every policy
+    compares at an equal block budget.
+
+    Slot ORDER matters: the trailing (current-token) block comes FIRST,
+    then the sinks, then the rest of the window — so a runtime budget
+    mask (serve()'s per-request override truncates the list tail) can
+    never drop the force-selected trailing block, mirroring the
+    scored policies where forced blocks rank ahead of everything."""
+    sink_blocks: int = 1
+    dense = False
+    needs_gate = False
+
+    def __post_init__(self):
+        if self.sink_blocks < 0:
+            raise ValueError(f"sink_blocks must be >= 0: {self.sink_blocks}")
+
+    def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
+               impl: str = "ref",
+               max_selected: Optional[int] = None) -> jnp.ndarray:
+        bs = cfg.gate.block_size
+        nb = inp.n_blocks(bs)
+        k = min(sp.resolve_max_selected(cfg.gate, max_selected), nb)
+        n_valid = kc.visible_blocks(jnp.maximum(inp.new_len, 1), bs)  # [B]
+        sink = min(self.sink_blocks, max(k - 1, 0))
+        ar = jnp.arange(k)[None, :]                               # [1, k]
+        last = n_valid[:, None] - 1
+        # slot 0: trailing block; slots [1, 1+sink]: sink blocks; rest:
+        # the window continuing backwards from last-1
+        idx = jnp.where(ar == 0, last,
+                        jnp.where(ar <= sink, ar - 1, last - (ar - sink)))
+        valid = (idx >= 0) & (idx < n_valid[:, None])
+        # duplicates: a sink slot that IS the trailing block (tiny
+        # context), and window entries falling into the sink region
+        valid &= ~((ar >= 1) & (ar <= sink) & (idx == last))
+        valid &= ~((ar > sink) & (idx < sink))
+        idx = jnp.where(valid, idx, -1).astype(jnp.int32)
+        return jnp.broadcast_to(idx[:, None, :],
+                                (idx.shape[0], inp.n_kv_heads, k))
+
+
+POLICIES: Dict[str, Any] = {
+    "gate": GatePolicy,
+    "quest": QuestPolicy,
+    "oracle": OraclePolicy,
+    "dense": DensePolicy,
+    "sliding_window": SlidingWindowPolicy,
+}
+
+
+def get_policy(name: str, **kw) -> SelectionPolicy:
+    """Policy by registry name (benchmark sweeps / CLI flags)."""
+    try:
+        return POLICIES[name](**kw)
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {name!r}; have {sorted(POLICIES)}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeOptions:
+    """Frozen (hashable, jit-static) decode-time options: the single object
+    threaded engine -> ModelApi -> model -> kernels.
+
+    policy:          block-selection strategy (see module docstring)
+    kernel_impl:     attention/selection execution path — "ref" (jnp),
+                     "pallas" (TPU), "pallas_interpret" (CPU kernel check),
+                     "sharded" (sequence-parallel shard_map; GatePolicy or
+                     DensePolicy only, needs a mesh-aware ``shard``)
+    sampling:        SamplingParams (default greedy — bitwise argmax)
+    budget_override: token budget replacing ``cfg.gate.token_budget`` for
+                     this options object (None = config budget); engines
+                     additionally take cheaper PER-REQUEST budgets at serve
+                     time (runtime-masked, no recompilation)
+    measure_sparsity: compute measured selection telemetry (aux) inside
+                     the decode step. Tiny per-layer reductions; set False
+                     to compile them out of a throughput-critical loop
+                     (the engine then reports ``measured=False``)
+    """
+    policy: SelectionPolicy = GatePolicy()
+    kernel_impl: str = "ref"
+    sampling: SamplingParams = GREEDY
+    budget_override: Optional[int] = None
+    measure_sparsity: bool = True
+
+    def __post_init__(self):
+        if self.kernel_impl not in KERNEL_IMPLS:
+            raise ValueError(f"kernel_impl {self.kernel_impl!r} not in "
+                             f"{KERNEL_IMPLS}")
+        if self.budget_override is not None and self.budget_override <= 0:
+            raise ValueError(
+                f"budget_override must be positive: {self.budget_override}")
+        if self.kernel_impl == "sharded" and not isinstance(
+                self.policy, (GatePolicy, DensePolicy)):
+            raise ValueError("kernel_impl='sharded' supports GatePolicy "
+                             "(distributed gate top-k) or DensePolicy only")
+
+    def max_selected(self, cfg: ModelConfig) -> Optional[int]:
+        """Selected-list width override in BLOCKS (None = config budget)."""
+        if self.budget_override is None:
+            return None
+        return max(1, self.budget_override // cfg.gate.block_size)
+
+    def replace(self, **kw) -> "DecodeOptions":
+        return dataclasses.replace(self, **kw)
+
+
+def default_options(cfg: ModelConfig) -> DecodeOptions:
+    """GatePolicy when the config carries a gate, dense otherwise — the
+    old ``sparse=cfg.gate.enabled`` default."""
+    gate_on = cfg.gate.enabled and cfg.has_attention and cfg.is_decoder
+    return DecodeOptions(policy=GatePolicy() if gate_on else DensePolicy())
+
+
+DENSE_OPTIONS = DecodeOptions(policy=DensePolicy())

@@ -67,3 +67,50 @@ def quest_select(q: jnp.ndarray, meta: QuestMeta, cfg: GateConfig,
                  max_selected=None, share_group: bool = True):
     scores = quest_scores(q, meta, share_group=share_group)
     return select_blocks(scores, meta.n_blocks, cfg, max_selected)
+
+
+# ---------------------------------------------------------------------------
+# head-major decode path (core.policy.QuestPolicy)
+# ---------------------------------------------------------------------------
+
+def quest_meta_decode(k_cache: jnp.ndarray, kv_len: jnp.ndarray,
+                      block_size: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-block key min/max off the HEAD-MAJOR decode cache.
+
+    k_cache: [B, Hkv, S, Dh] (contiguous cache or paged gather);
+    kv_len: [B] valid lengths. Returns (kmin, kmax) [B, Hkv, nb, Dh] with
+    out-of-range tokens excluded (empty blocks collapse to 0). A
+    non-block-aligned S is floored to whole blocks (nb = S // block_size)
+    — the same truncation the gate's Kg cache applies.
+    """
+    b, hkv, s, dh = k_cache.shape
+    nb = s // block_size
+    s = nb * block_size
+    kb = k_cache[:, :, :s].reshape(b, hkv, nb, block_size, dh) \
+        .astype(jnp.float32)
+    pos = jnp.arange(s).reshape(nb, block_size)
+    valid = pos[None, None, :, :, None] < kv_len[:, None, None, None, None]
+    kmin = jnp.min(jnp.where(valid, kb, jnp.inf), axis=3)
+    kmax = jnp.max(jnp.where(valid, kb, -jnp.inf), axis=3)
+    kmin = jnp.where(jnp.isfinite(kmin), kmin, 0.0)
+    kmax = jnp.where(jnp.isfinite(kmax), kmax, 0.0)
+    return kmin, kmax
+
+
+def quest_scores_grouped(qgrp: jnp.ndarray, kmin: jnp.ndarray,
+                         kmax: jnp.ndarray, n_blocks: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """GQA-group-shared Quest upper bounds, head-major.
+
+    qgrp: [B, Hkv, g, Dh] (post-rope, regrouped); kmin/kmax from
+    ``quest_meta_decode``. Returns [B, Hkv, nb] max-pooled over each group
+    (the shared-sparsity form the block-sparse kernel consumes),
+    NEG_INF on invisible blocks.
+    """
+    qf = qgrp.astype(jnp.float32)
+    ub = jnp.einsum("bhgd,bhnd->bhgn", jnp.maximum(qf, 0), kmax) + \
+         jnp.einsum("bhgd,bhnd->bhgn", jnp.minimum(qf, 0), kmin)
+    ub = jnp.max(ub, axis=2)                                  # [B,Hkv,nb]
+    nb = ub.shape[-1]
+    valid = jnp.arange(nb)[None, None, :] < n_blocks[:, None, None]
+    return jnp.where(valid, ub, NEG_INF)

@@ -70,19 +70,11 @@ def gate_select_ref(qg: jnp.ndarray, kg: jnp.ndarray, n_valid: jnp.ndarray,
     return idx
 
 
-def _select_kernel(nv_ref,                  # scalar prefetch
-                   qg_ref, kg_ref,          # VMEM in
-                   o_ref,                   # VMEM out [1,1,k]
-                   *, nb: int, k_sel: int, method: str, threshold: float,
-                   force_first: bool, force_last: bool, scale: float):
-    b = pl.program_id(0)
-    nv = nv_ref[b]
-    q = qg_ref[0, 0].reshape(1, -1).astype(jnp.float32)        # [1, Dg]
-    kg = kg_ref[0, 0].astype(jnp.float32)                      # [nb, Dg]
-    s = jax.lax.dot_general(q, kg, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)      # [1, nb]
-    s = jnp.where(col < nv, s, NEG_INF)                        # visibility
+def _rank_and_pick(s, col, nv, *, nb: int, k_sel: int, method: str,
+                   threshold: float, force_first: bool, force_last: bool):
+    """Shared selection core of both kernels: visibility-masked scores
+    ``s [1, nb]`` -> selected block ids ``[k_sel]`` (-1 padding), with
+    ``select_blocks`` semantics (force pinning, lax.top_k tie-breaking)."""
     big = jnp.float32(1e30)
 
     if method == "threshold":
@@ -115,7 +107,25 @@ def _select_kernel(nv_ref,                  # scalar prefetch
         pick = jnp.min(jnp.where(ranked == m, col, nb)).astype(jnp.int32)
         sel.append(jnp.where(m > cutoff, pick, -1).astype(jnp.int32))
         ranked = jnp.where(col == pick, drop, ranked)
-    o_ref[0, 0] = jnp.stack(sel)
+    return jnp.stack(sel)
+
+
+def _select_kernel(nv_ref,                  # scalar prefetch
+                   qg_ref, kg_ref,          # VMEM in
+                   o_ref,                   # VMEM out [1,1,k]
+                   *, nb: int, k_sel: int, method: str, threshold: float,
+                   force_first: bool, force_last: bool, scale: float):
+    b = pl.program_id(0)
+    nv = nv_ref[b]
+    q = qg_ref[0, 0].reshape(1, -1).astype(jnp.float32)        # [1, Dg]
+    kg = kg_ref[0, 0].astype(jnp.float32)                      # [nb, Dg]
+    s = jax.lax.dot_general(q, kg, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)      # [1, nb]
+    s = jnp.where(col < nv, s, NEG_INF)                        # visibility
+    o_ref[0, 0] = _rank_and_pick(
+        s, col, nv, nb=nb, k_sel=k_sel, method=method, threshold=threshold,
+        force_first=force_first, force_last=force_last)
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "max_selected",
@@ -158,3 +168,102 @@ def fused_gate_select(qg: jnp.ndarray, kg: jnp.ndarray, n_valid: jnp.ndarray,
         out_shape=jax.ShapeDtypeStruct((b, hkv, k_sel), jnp.int32),
         interpret=interpret,
     )(n_valid.astype(jnp.int32), qg, kg)
+
+
+# ---------------------------------------------------------------------------
+# paged twin: gate-select straight off kg_pages (no per-slot Kg gather)
+# ---------------------------------------------------------------------------
+
+def gate_select_paged_ref(qg: jnp.ndarray, kg_pages: jnp.ndarray,
+                          page_table: jnp.ndarray, n_valid: jnp.ndarray,
+                          cfg: GateConfig, max_selected: Optional[int] = None
+                          ) -> jnp.ndarray:
+    """jnp twin (the semantic spec + CPU path): per-slot Kg gather through
+    the page table (``serve.paging.gather_kg``, the same view the engine
+    uses), then the contiguous selection. The gather is Kg-sized (<1% of
+    KV), not cache-sized; the Pallas kernel below removes even that copy
+    by streaming pages through a scalar-prefetch index_map."""
+    from repro.serve.paging import gather_kg   # local: no kernels->serve cycle
+    kg = gather_kg(kg_pages, page_table)               # [S, Hkv, npt, Dg]
+    return gate_select_ref(qg, kg, n_valid, cfg, max_selected)
+
+
+def _select_paged_kernel(pt_ref, nv_ref,    # scalar prefetch
+                         qg_ref, kg_ref,    # VMEM in [1,1,Dg] each
+                         o_ref,             # VMEM out [1,1,k]
+                         s_ref,             # VMEM scratch [1, npt] fp32
+                         *, npt: int, k_sel: int, method: str,
+                         threshold: float, force_first: bool,
+                         force_last: bool, scale: float):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    q = qg_ref[0, 0].astype(jnp.float32)                       # [Dg]
+    kg = kg_ref[0, 0].astype(jnp.float32)                      # [Dg]
+    s_ref[0, j] = jnp.sum(q * kg) * scale
+
+    @pl.when(j == npt - 1)
+    def _select():
+        nv = nv_ref[b]
+        s = s_ref[...]                                         # [1, npt]
+        col = jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(col < nv, s, NEG_INF)                    # visibility
+        o_ref[0, 0] = _rank_and_pick(
+            s, col, nv, nb=npt, k_sel=k_sel, method=method,
+            threshold=threshold, force_first=force_first,
+            force_last=force_last)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "max_selected",
+                                             "interpret"))
+def fused_gate_select_paged(qg: jnp.ndarray, kg_pages: jnp.ndarray,
+                            page_table: jnp.ndarray, n_valid: jnp.ndarray,
+                            cfg: GateConfig,
+                            max_selected: Optional[int] = None,
+                            interpret: bool = False) -> jnp.ndarray:
+    """Paged fused gate-select: scores one layer's Kg pool rows DIRECTLY
+    through the page table (the TPU analog of skipping ``gather_kg``).
+
+    qg [S, Hkv, Dg] per-slot gate queries; kg_pages [P, Hkv, Dg] pooled Kg
+    rows (one per physical page); page_table [S, npt] int32; n_valid [S].
+    Grid = (S, Hkv, npt): each step DMAs exactly ONE [Dg] Kg row — the row
+    of the page the slot's table maps logical block j to — scores it into
+    a [1, npt] scratch, and the last step runs the same ranked selection
+    as the contiguous kernel. Unallocated table entries point at the null
+    page; their garbage scores are masked by the visibility cut (col <
+    n_valid) before ranking. Returns logical ids [S, Hkv, k], -1 padding,
+    identical to ``gate_select_paged_ref``.
+    """
+    s, hkv, dg = qg.shape
+    npt = page_table.shape[1]
+    k_sel = n_selected(cfg, npt, max_selected)
+    scale = 1.0 / math.sqrt(dg)
+
+    def qg_map(bi, h, j, pt_ref, nv_ref):
+        return (bi, h, 0)
+
+    def kg_map(bi, h, j, pt_ref, nv_ref):
+        return (pt_ref[bi, j], h, 0)
+
+    def o_map(bi, h, j, pt_ref, nv_ref):
+        return (bi, h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(s, hkv, npt),
+        in_specs=[
+            pl.BlockSpec((1, 1, dg), qg_map),
+            pl.BlockSpec((1, 1, dg), kg_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, k_sel), o_map),
+        scratch_shapes=[pltpu.VMEM((1, npt), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _select_paged_kernel, npt=npt, k_sel=k_sel, method=cfg.method,
+            threshold=float(cfg.threshold),
+            force_first=bool(cfg.always_first_block),
+            force_last=bool(cfg.always_last_block), scale=scale),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((s, hkv, k_sel), jnp.int32),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), n_valid.astype(jnp.int32), qg, kg_pages)

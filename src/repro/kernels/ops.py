@@ -17,6 +17,8 @@ from repro.kernels.block_sparse_decode import (
     block_sparse_decode_paged as _bsd_paged_pallas)
 from repro.kernels.gate_gt_fwd import gate_gt_flash_fwd as _gt_pallas
 from repro.kernels.gate_select import (fused_gate_select as _gs_pallas,
+                                       fused_gate_select_paged as _gsp_pallas,
+                                       gate_select_paged_ref as _gsp_ref,
                                        gate_select_ref as _gs_ref)
 
 
@@ -54,6 +56,26 @@ def gate_select(qg: jnp.ndarray, kg: jnp.ndarray, n_valid: jnp.ndarray,
         return _gs_pallas(qg, kg, n_valid, cfg, max_selected)
     if impl == "pallas_interpret":
         return _gs_pallas(qg, kg, n_valid, cfg, max_selected, interpret=True)
+    raise ValueError(impl)
+
+
+def gate_select_paged(qg: jnp.ndarray, kg_pages: jnp.ndarray,
+                      page_table: jnp.ndarray, n_valid: jnp.ndarray,
+                      cfg, max_selected: Optional[int] = None, *,
+                      impl: str = "ref") -> jnp.ndarray:
+    """Paged twin of ``gate_select``: scores one layer's Kg page pool
+    [P,Hkv,Dg] straight through ``page_table`` [S,npt] — the Pallas paths
+    never materialise the per-slot Kg gather (``fused_gate_select_paged``
+    streams table-indexed pool rows); the jnp ref gathers first (the
+    semantic spec). Returns logical block ids [S,Hkv,k], -1 padding."""
+    if impl == "ref":
+        return _gsp_ref(qg, kg_pages, page_table, n_valid, cfg, max_selected)
+    if impl == "pallas":
+        return _gsp_pallas(qg, kg_pages, page_table, n_valid, cfg,
+                           max_selected)
+    if impl == "pallas_interpret":
+        return _gsp_pallas(qg, kg_pages, page_table, n_valid, cfg,
+                           max_selected, interpret=True)
     raise ValueError(impl)
 
 

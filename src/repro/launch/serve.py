@@ -3,11 +3,13 @@
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3_0_6b --reduced \
         [--batch 4] [--prefill 256] [--new 64] [--budget 128]
         [--method budget|threshold] [--dense]
+        [--policy gate|quest|oracle|sliding_window]
 
 Runs prefill + autoregressive decode through the SeerAttention-R engine
-(KV cache + K-compression cache + gate + block-sparse attention) and
-reports throughput and achieved sparsity. --dense disables the gate for an
-A/B reference.
+(KV cache + K-compression cache + selection policy + block-sparse
+attention) and reports throughput and MEASURED achieved sparsity.
+--policy swaps the block-selection strategy (core.policy); --dense
+disables selection entirely for an A/B reference.
 """
 from __future__ import annotations
 
@@ -19,6 +21,7 @@ import jax.numpy as jnp
 
 import repro.configs as configs
 from repro.config import reduced
+from repro.core.policy import DecodeOptions, DensePolicy, get_policy
 from repro.data.pipeline import DataState, make_batch
 from repro.models.registry import get_api
 from repro.serve.engine import DecodeEngine
@@ -34,6 +37,8 @@ def main():
     ap.add_argument("--budget", type=int, default=None)
     ap.add_argument("--method", default=None, choices=[None, "budget", "threshold"])
     ap.add_argument("--dense", action="store_true")
+    ap.add_argument("--policy", default="gate",
+                    choices=["gate", "quest", "oracle", "sliding_window"])
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)
@@ -47,8 +52,12 @@ def main():
     if gate_kw:
         cfg = cfg.replace(gate=dataclasses.replace(cfg.gate, **gate_kw))
 
-    sparse = (not args.dense) and cfg.gate.enabled and cfg.has_attention \
-        and cfg.is_decoder
+    pol = get_policy(args.policy)
+    # non-gate policies (quest/oracle/sliding_window) run fine without a
+    # distilled gate; only GatePolicy needs cfg.gate.enabled
+    sparse = (not args.dense) and cfg.has_attention and cfg.is_decoder \
+        and (cfg.gate.enabled or not pol.needs_gate)
+    opts = DecodeOptions(policy=pol if sparse else DensePolicy())
     params = get_api(cfg).init_params(jax.random.PRNGKey(0), cfg)
     max_len = args.prefill + args.new + 16
     batch = {"tokens": make_batch(cfg, args.batch, args.prefill,
@@ -57,14 +66,14 @@ def main():
         batch["image_embeds"] = jnp.zeros(
             (args.batch, cfg.n_image_tokens, cfg.d_model), jnp.dtype(cfg.dtype))
 
-    eng = DecodeEngine(cfg, params, max_len=max_len, sparse=sparse)
+    eng = DecodeEngine(cfg, params, max_len=max_len, options=opts)
     res = eng.generate(batch, args.new)
-    print(f"arch={cfg.arch_id} sparse={sparse} devices={jax.device_count()}")
+    print(f"arch={cfg.arch_id} policy={args.policy if sparse else 'dense'} "
+          f"devices={jax.device_count()}")
     print(f"prefill: {res['prefill_s'] * 1e3:.1f} ms | decode: "
           f"{res['decode_s'] * 1e3:.1f} ms | {res['tok_per_s']:.1f} tok/s")
     if sparse:
-        _, st = eng.prefill(batch)
-        stats = eng.sparsity_stats(st)
+        stats = eng.sparsity_stats()      # measured over the decode above
         print(f"sparsity={stats['sparsity']:.3f} "
               f"io_speedup={stats['io_speedup']:.2f}x")
 

@@ -133,12 +133,16 @@ def cell_fn_and_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
     if shape.kind == "decode":
         import os
-        sparse = cfg.gate.enabled
-        impl = os.environ.get("REPRO_SERVE_IMPL", "ref")
+        from repro.core.policy import DecodeOptions, default_options
+        # telemetry off: the dry-run probes cost the decode DATA PATH,
+        # matching the bench_decode hot-path discipline
+        opts = default_options(cfg).replace(
+            kernel_impl=os.environ.get("REPRO_SERVE_IMPL", "ref"),
+            measure_sparsity=False)
 
         def serve_step(params, state, token):
-            return api.decode_step(params, state, token, cfg, sparse=sparse,
-                                   sparse_impl=impl, shard=shard)
+            return api.decode_step(params, state, token, cfg, options=opts,
+                                   shard=shard)
         # serving engines donate the decode state: cache updates alias in
         # place instead of copying the full KV cache every step.
         serve_step.donate_argnums = (1,)

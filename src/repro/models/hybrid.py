@@ -188,7 +188,10 @@ def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int,
 
 
 def lm_decode_step(params: Params, state: HybridDecodeState, token, cfg,
-                   *, sparse=True, sparse_impl="ref", shard=None):
+                   *, options=None, shard=None):
+    """token [B] -> (logits, new state, aux) — see tf.lm_decode_step."""
+    from repro.core.policy import default_options
+    options = options if options is not None else default_options(cfg)
     n_units, period, rem = _plan(cfg)
     b = token.shape[0]
     x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
@@ -208,15 +211,15 @@ def lm_decode_step(params: Params, state: HybridDecodeState, token, cfg,
         x1, (c2, h2) = layer_scan(mamba_step_scan, x1,
                                   (ublocks, uconv, uh),
                                   unroll=not cfg.scan_layers)
-        x1, attn_state = tf.block_decode(
+        x1, attn_state, aux = tf.block_decode(
             params["shared_attn"], x1, cfg, (kc, vc, kgc, kgn),
-            state.cur_len, sparse=sparse, sparse_impl=sparse_impl, shard=shard)
-        return x1, (c2, h2) + attn_state
+            state.cur_len, options=options, shard=shard)
+        return x1, ((c2, h2) + attn_state, aux)
 
-    x1, outs = layer_scan(unit, x1, (params["units"], conv_u, h_u,
-                                     state.k_cache, state.v_cache,
-                                     state.kg_cache, state.kg_n),
-                          unroll=not cfg.scan_layers)
+    x1, (outs, auxs) = layer_scan(unit, x1, (params["units"], conv_u, h_u,
+                                             state.k_cache, state.v_cache,
+                                             state.kg_cache, state.kg_n),
+                                  unroll=not cfg.scan_layers)
     conv2, h2, kc, vc, kgc, kgn = outs
     conv2 = conv2.reshape((-1,) + conv2.shape[2:])
     h2 = h2.reshape((-1,) + h2.shape[2:])
@@ -233,4 +236,4 @@ def lm_decode_step(params: Params, state: HybridDecodeState, token, cfg,
               else linear(params["lm_head"], x1))
     new_state = HybridDecodeState(conv2.astype(state.conv.dtype), h2, kc, vc,
                                   kgc, kgn, state.cur_len + 1)
-    return logits[:, 0], new_state
+    return logits[:, 0], new_state, tf.aggregate_decode_aux(auxs)

@@ -9,14 +9,20 @@ from repro.models import transformer as tf
 
 
 class ModelApi(NamedTuple):
+    """Decode-time behavior (selection policy, kernel impl, sampling,
+    budget) is carried by a single static ``core.policy.DecodeOptions``
+    object — no per-knob kwarg threading. ``decode_step`` additionally
+    returns a measured-selection ``aux`` dict (sparsity / sel_blocks /
+    vis_blocks) for serving telemetry."""
     init_params: Callable          # (key, cfg) -> params
     forward: Callable              # (params, batch, cfg, *, mode, shard) -> (loss, metrics)
     init_decode_state: Callable    # (cfg, batch_size, max_len) -> state
     prefill: Callable              # (params, batch, cfg, max_len, shard) -> (logits, state)
-    decode_step: Callable          # (params, state, token, cfg, *, sparse, sparse_impl, shard)
+    decode_step: Callable          # (params, state, token, cfg, *, options, shard)
+    #                                 -> (logits, state, aux)
     # continuous-batching paged decode (serve.paging); None = unsupported
-    # (params, pages, token, page_table, cur_len, active, cfg, *, sparse,
-    #  sparse_impl) -> (logits, pages)
+    # (params, pages, token, page_table, cur_len, active, cfg, *, options,
+    #  budget_blocks) -> (logits, pages, aux)
     decode_step_paged: Any = None
 
 

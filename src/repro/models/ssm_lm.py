@@ -101,7 +101,10 @@ def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int = 0,
 
 
 def lm_decode_step(params: Params, state: SSMDecodeState, token, cfg,
-                   *, sparse=True, sparse_impl="ref", shard=None):
+                   *, options=None, shard=None):
+    """``options`` accepted for ModelApi uniformity; an attention-free LM
+    has no block selection, so only its sampling defaults matter (applied
+    by the engine) and the aux reports zero selection."""
     x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
 
     def body(x1, inp):
@@ -115,5 +118,8 @@ def lm_decode_step(params: Params, state: SSMDecodeState, token, cfg,
     x1 = rms_norm(params["final_norm"], x1, cfg.norm_eps)
     logits = (x1 @ params["embed"]["w"].T if cfg.tie_embeddings
               else linear(params["lm_head"], x1))
-    return logits[:, 0], SSMDecodeState(conv.astype(state.conv.dtype), h,
-                                        state.cur_len + 1)
+    from repro.models.transformer import zero_decode_aux
+    return (logits[:, 0],
+            SSMDecodeState(conv.astype(state.conv.dtype), h,
+                           state.cur_len + 1),
+            zero_decode_aux(token.shape[0]))

@@ -23,7 +23,10 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.core import attngate as ag
 from repro.core import kcache as kc
+from repro.core import sparsity as sp
 from repro.core.distill import gate_kl_loss, ground_truth_from_blockmax
+from repro.core.policy import (DecodeOptions, SelectionInputs,
+                               default_options, select_impl)
 from repro.kernels import ops
 from repro.models import moe as moe_mod
 from repro.models.common import (NEG_INF, apply_rope, chunked_attention,
@@ -364,42 +367,63 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
         cross_k=cross, cross_v=cross)
 
 
-def _select_impl(sparse_impl: str) -> str:
-    """Map the attention-kernel impl to the fused gate-select impl: the
-    Pallas paths run selection in-kernel too; everything else (ref,
-    sharded) uses the jnp twin."""
-    return sparse_impl if sparse_impl in ("pallas", "pallas_interpret") \
-        else "ref"
+def _policy_active(policy, p: Params) -> bool:
+    """Sparse selection runs unless the policy is dense or requires a gate
+    the layer doesn't carry (then dense decode — the old ``sparse=True``
+    fallback for ungated layers)."""
+    return (not policy.dense) and (("gate" in p) or not policy.needs_gate)
 
 
-def _gate_select(gate_p: Params, q_nope: jnp.ndarray, pos: jnp.ndarray,
-                 kg: jnp.ndarray, new_len: jnp.ndarray, cfg: ModelConfig,
-                 impl: str = "ref"):
-    """Gate scoring + discrete block selection for ONE decode step.
+def _selection_aux(idx: jnp.ndarray, n_valid: jnp.ndarray, nb: int):
+    """Measured per-layer selection telemetry from the ACTUAL selected
+    block ids: (sparsity scalar, per-row sparsity [B], mean selected
+    blocks [B], visible blocks [B]). The scalar/rows come from
+    ``core.sparsity.sparsity_ratio`` on the materialised selection mask."""
+    b, hkv, _ = idx.shape
+    cnt = jnp.zeros((b, hkv, nb), jnp.int32).at[
+        jnp.arange(b)[:, None, None], jnp.arange(hkv)[None, :, None],
+        jnp.maximum(idx, 0)].add((idx >= 0).astype(jnp.int32))
+    sel_mask = cnt > 0
+    rho = sp.sparsity_ratio(sel_mask, n_valid)
+    # per-row breakdown: rho is exactly mean(rho_rows) by construction
+    sel_counts = jnp.sum(sel_mask, -1).astype(jnp.float32)        # [B,Hkv]
+    tot = jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+    rho_rows = 1.0 - jnp.mean(sel_counts / tot[:, None], axis=1)
+    return rho, rho_rows, jnp.mean(sel_counts, axis=1), \
+        n_valid.astype(jnp.float32)
 
-    kg: the logical per-row Kg view, HEAD-MAJOR [B, Hkv, nb, Dg] —
-    contiguous cache or paged gather. Shared by both decode paths;
-    parity-critical (a change here changes contiguous and paged selection
-    together, by construction). Scoring + masking + force-pinning + top-k
-    are fused in ``ops.gate_select`` (kernels/gate_select.py).
-    Returns logical block indices [B, Hkv, nsel].
-    """
-    qg = ag.gate_q(gate_p, q_nope, pos, cfg.gate)[:, 0]    # [B,Hkv,Dg]
-    n_valid = kc.visible_blocks(jnp.maximum(new_len, 1), cfg.gate.block_size)
-    return ops.gate_select(qg, kg, n_valid, cfg.gate, impl=impl)
+
+def _dense_aux(new_len: jnp.ndarray, block_size: int):
+    """Dense decode reads every visible block: sparsity 0 by definition."""
+    n_valid = kc.visible_blocks(jnp.maximum(new_len, 1), block_size)
+    nv = n_valid.astype(jnp.float32)
+    return (jnp.zeros((), jnp.float32), jnp.zeros_like(nv), nv, nv)
+
+
+def _zero_layer_aux(batch: int):
+    """Per-layer aux when telemetry is compiled out
+    (DecodeOptions.measure_sparsity=False)."""
+    z = jnp.zeros((batch,), jnp.float32)
+    return jnp.zeros((), jnp.float32), z, z, z
 
 
 def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                      k_cache, v_cache, kg_cache, kg_n, cur_len,
-                     sparse: bool, sparse_impl: str, shard=None):
+                     options: DecodeOptions, shard=None):
     """One token. x1 [B,1,d]; caches for ONE layer HEAD-MAJOR [B,Hkv,S,Dh].
+    Returns (out, new_layer_state, selection_aux).
 
-    sparse_impl='sharded' takes the sequence-parallel shard_map path
-    (repro.serve.sharded): explicit split-K collectives instead of GSPMD
-    resharding of the gathered cache — requires a mesh on ``shard``.
+    ``options.policy`` picks the block-selection strategy (core.policy);
+    ``options.kernel_impl='sharded'`` takes the sequence-parallel
+    shard_map path (repro.serve.sharded): explicit split-K collectives
+    instead of GSPMD resharding of the gathered cache — requires a mesh
+    on ``shard`` and the gate policy (distributed gate top-k).
     """
     b = x1.shape[0]
     dh, hkv, g = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.gqa_group
+    bs = cfg.gate.block_size
+    policy = options.policy
+    sparse_on = _policy_active(policy, p)
     q, k, v = _qkv(p, x1, cfg)
     q_nope = q
     pos = cur_len[:, None]                                 # [B,1]
@@ -407,56 +431,81 @@ def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
     kr = apply_rope(k, pos, cfg.rope_theta)
 
     mesh = getattr(shard, "mesh", None)
-    if sparse and "gate" in p and sparse_impl == "sharded" and mesh is not None:
+    if sparse_on and options.kernel_impl == "sharded" and "gate" in p \
+            and mesh is not None:
         from repro.distributed.sharding import decode_partition
         from repro.serve.sharded import sharded_sparse_decode
         bspec, seq_axes = decode_partition(mesh, b)
         qg = ag.gate_q(p["gate"], q_nope, pos, cfg.gate)[:, 0]  # [B,Hkv,Dg]
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
-        o, k_cache, v_cache, kg_cache = sharded_sparse_decode(
+        o, k_cache, v_cache, kg_cache, n_sel = sharded_sparse_decode(
             qg, qgrp, kr[:, 0], v[:, 0], k_cache, v_cache, kg_cache,
             cur_len, p["gate"]["wk"], mesh=mesh, seq_axes=seq_axes,
-            batch_spec=bspec, cfg=cfg.gate, rope_theta=cfg.rope_theta)
+            batch_spec=bspec, cfg=cfg.gate, rope_theta=cfg.rope_theta,
+            max_selected=options.max_selected(cfg))
         new_len = cur_len + 1
-        completed = (new_len % cfg.gate.block_size) == 0
-        kg_n = jnp.where(completed, new_len // cfg.gate.block_size,
-                         kg_n).astype(jnp.int32)
+        completed = (new_len % bs) == 0
+        kg_n = jnp.where(completed, new_len // bs, kg_n).astype(jnp.int32)
         o = o.reshape(b, 1, hkv * g, dh)
         out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-        return out, (k_cache, v_cache, kg_cache, kg_n)
+        if options.measure_sparsity:
+            # measured sparsity from the shards' psum'd selection counts
+            n_valid = kc.visible_blocks(jnp.maximum(new_len, 1), bs)
+            frac = n_sel.astype(jnp.float32) \
+                / jnp.maximum(n_valid[:, None].astype(jnp.float32), 1.0)
+            rho_rows = 1.0 - jnp.mean(frac, axis=1)
+            aux = (jnp.mean(rho_rows), rho_rows,
+                   jnp.mean(n_sel.astype(jnp.float32), axis=1),
+                   n_valid.astype(jnp.float32))
+        else:
+            aux = _zero_layer_aux(b)
+        return out, (k_cache, v_cache, kg_cache, kg_n), aux
 
     bidx = jnp.arange(b)
     k_cache = k_cache.at[bidx, :, cur_len].set(kr[:, 0])
     v_cache = v_cache.at[bidx, :, cur_len].set(v[:, 0])
     new_len = cur_len + 1
 
-    if sparse and "gate" in p:
-        cache = kc.KCompressionCache(kg_cache, kg_n)
-        cache = kc.update_kcache(cache, p["gate"], k_cache, new_len, cfg.gate,
-                                 cache_is_roped=True, rope_theta=cfg.rope_theta)
-        idx = _gate_select(p["gate"], q_nope, pos, cache.kg, new_len, cfg,
-                           impl=_select_impl(sparse_impl))
+    if sparse_on:
+        # the Kg cache only advances for the policy that reads it — a
+        # quest/oracle/sliding rollout skips the per-step gate-K
+        # projection entirely (each engine's options are fixed, so no
+        # consumer can appear mid-run)
+        if policy.needs_gate and "gate" in p and kg_cache is not None:
+            cache = kc.update_kcache(
+                kc.KCompressionCache(kg_cache, kg_n), p["gate"], k_cache,
+                new_len, cfg.gate, cache_is_roped=True,
+                rope_theta=cfg.rope_theta)
+            kg_cache, kg_n = cache.kg, cache.n_complete
+        inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
+                              gate_params=p.get("gate"), kg=kg_cache,
+                              k_cache=k_cache)
+        idx = policy.select(inp, cfg, impl=select_impl(options.kernel_impl),
+                            max_selected=options.max_selected(cfg))
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
         o = ops.sparse_decode(qgrp, k_cache, v_cache, idx, new_len,
-                              block_size=cfg.gate.block_size,
-                              impl=sparse_impl)
+                              block_size=bs, impl=options.kernel_impl)
         o = o.reshape(b, 1, hkv * g, dh)
-        kg_cache, kg_n = cache.kg, cache.n_complete
+        aux = (_selection_aux(idx, kc.visible_blocks(
+                   jnp.maximum(new_len, 1), bs), k_cache.shape[2] // bs)
+               if options.measure_sparsity else _zero_layer_aux(b))
     else:
         o = decode_attention(qr, k_cache, v_cache, new_len,
                              logit_softcap=cfg.attn_logit_softcap)
+        aux = (_dense_aux(new_len, bs) if options.measure_sparsity
+               else _zero_layer_aux(b))
     out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-    return out, (k_cache, v_cache, kg_cache, kg_n)
+    return out, (k_cache, v_cache, kg_cache, kg_n), aux
 
 
 def block_decode(p: Params, x1, cfg: ModelConfig, layer_state, cur_len, *,
-                 sparse: bool, sparse_impl: str, shard=None):
+                 options: DecodeOptions, shard=None):
     k_cache, v_cache, kg_cache, kg_n = layer_state
     h = rms_norm(p["ln1"], x1, cfg.norm_eps)
-    attn_out, new_state = attention_decode(
+    attn_out, new_state, aux = attention_decode(
         p["attn"], h, cfg, k_cache=k_cache, v_cache=v_cache,
-        kg_cache=kg_cache, kg_n=kg_n, cur_len=cur_len, sparse=sparse,
-        sparse_impl=sparse_impl, shard=shard)
+        kg_cache=kg_cache, kg_n=kg_n, cur_len=cur_len, options=options,
+        shard=shard)
     x1 = x1 + attn_out
     h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
     if "moe" in p:
@@ -466,7 +515,7 @@ def block_decode(p: Params, x1, cfg: ModelConfig, layer_state, cur_len, *,
         y = y.reshape(b, 1, -1)
     else:
         y = mlp(p["mlp"], h2, cfg.activation)
-    return x1 + y, new_state
+    return x1 + y, new_state, aux
 
 
 def cross_block_decode(p: Params, x1, cfg: ModelConfig, ck, cv):
@@ -484,19 +533,44 @@ def cross_block_decode(p: Params, x1, cfg: ModelConfig, ck, cv):
     return x1 + mlp(p["mlp"], h2, cfg.activation)
 
 
+def aggregate_decode_aux(auxs) -> Dict[str, jnp.ndarray]:
+    """Stacked per-layer (rho, rho_rows [B], sel [B], vis [B]) -> the
+    decode-step aux dict every ModelApi.decode_step returns."""
+    rho, rho_rows, sel, vis = auxs
+    return {"sparsity": jnp.mean(rho),
+            "sparsity_rows": jnp.mean(rho_rows, axis=0),
+            "sel_blocks": jnp.mean(sel, axis=0),
+            "vis_blocks": jnp.mean(vis, axis=0)}
+
+
+def zero_decode_aux(batch: int) -> Dict[str, jnp.ndarray]:
+    """Aux for attention-free decode paths (SSM): nothing is selected."""
+    z = jnp.zeros((batch,), jnp.float32)
+    return {"sparsity": jnp.zeros((), jnp.float32), "sparsity_rows": z,
+            "sel_blocks": z, "vis_blocks": z}
+
+
 def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
-                   cfg: ModelConfig, *, sparse: bool = True,
-                   sparse_impl: str = "ref", shard=None):
-    """token [B] -> (logits [B, V], new DecodeState)."""
+                   cfg: ModelConfig, *,
+                   options: Optional[DecodeOptions] = None, shard=None):
+    """token [B] -> (logits [B, V], new DecodeState, aux dict).
+
+    ``options`` (static) selects policy/kernel/budget — see
+    ``core.policy.DecodeOptions``; None means the config default
+    (GatePolicy when the config carries a gate). ``aux`` reports the
+    MEASURED selection of this step (sparsity/sel_blocks/vis_blocks),
+    averaged over layers.
+    """
+    options = options if options is not None else default_options(cfg)
     x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
 
     def self_scan(carry, inp):
         x1 = carry
         layer_p, layer_state = inp
-        y, new_state = block_decode(layer_p, x1, cfg, layer_state,
-                                    state.cur_len, sparse=sparse,
-                                    sparse_impl=sparse_impl, shard=shard)
-        return y, new_state
+        y, new_state, aux = block_decode(layer_p, x1, cfg, layer_state,
+                                         state.cur_len, options=options,
+                                         shard=shard)
+        return y, (new_state, aux)
 
     layer_states = (state.k_cache, state.v_cache, state.kg_cache, state.kg_n)
 
@@ -506,25 +580,26 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
 
         def unit_scan(x1, inp):
             unit_p, unit_states, cross_p, ck, cv = inp
-            x1, new_states = layer_scan(self_scan, x1, (unit_p, unit_states),
-                                        unroll=not cfg.scan_layers)
+            x1, ys = layer_scan(self_scan, x1, (unit_p, unit_states),
+                                unroll=not cfg.scan_layers)
             x1 = cross_block_decode(cross_p, x1, cfg, ck, cv)
-            return x1, new_states
+            return x1, ys
 
         shaped = jax.tree.map(
             lambda c: c.reshape((n_units, n_self) + c.shape[1:]) if c is not None else None,
             layer_states)
-        x1, new_states = layer_scan(
+        x1, (new_states, auxs) = layer_scan(
             unit_scan, x1,
             (params["blocks"], shaped, params["cross_blocks"],
              state.cross_k, state.cross_v), unroll=not cfg.scan_layers)
         new_states = jax.tree.map(
             lambda c: c.reshape((-1,) + c.shape[2:]) if c is not None else None,
             new_states)
+        auxs = jax.tree.map(lambda a: a.reshape((-1,) + a.shape[2:]), auxs)
     else:
-        x1, new_states = layer_scan(self_scan, x1,
-                                    (params["blocks"], layer_states),
-                                    unroll=not cfg.scan_layers)
+        x1, (new_states, auxs) = layer_scan(self_scan, x1,
+                                            (params["blocks"], layer_states),
+                                            unroll=not cfg.scan_layers)
 
     x1 = rms_norm(params["final_norm"], x1, cfg.norm_eps)
     if cfg.tie_embeddings:
@@ -536,7 +611,7 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
         kg_cache=new_states[2], kg_n=new_states[3],
         cur_len=state.cur_len + 1,
         cross_k=state.cross_k, cross_v=state.cross_v)
-    return logits[:, 0], new_state
+    return logits[:, 0], new_state, aggregate_decode_aux(auxs)
 
 
 # ---------------------------------------------------------------------------
@@ -545,18 +620,26 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
 
 def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                            k_pages, v_pages, kg_pages, page_table, cur_len,
-                           active, sparse: bool, sparse_impl: str):
+                           active, options: DecodeOptions,
+                           budget_blocks=None):
     """One token over paged KV. x1 [S,1,d]; pools for ONE layer HEAD-MAJOR
     [P, Hkv, ps, Dh]; page_table [S, npt]; cur_len/active [S] per-slot.
 
     The gate path is identical to the contiguous ``attention_decode`` —
     same selection, same force-select of the trailing partial block — but
-    the Kg cache is the paged twin and the block-sparse attention gathers
-    physical pages through the page table. Rows with ``active == False``
-    (empty decode slots) write to the null page and do not advance."""
+    the Kg cache is the paged twin: ``GatePolicy`` scores it straight off
+    ``kg_pages`` through the page table (no per-slot Kg gather on the
+    Pallas paths) and the block-sparse attention gathers physical pages
+    in-kernel. ``budget_blocks`` [S] (optional, RUNTIME) caps each slot's
+    selected list post-hoc — the per-request budget override; forced
+    first/last blocks rank ahead of every scored block, so any cap >= the
+    forced count preserves them. Rows with ``active == False`` (empty
+    decode slots) write to the null page and do not advance."""
     b = x1.shape[0]
     dh, hkv, g = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.gqa_group
     ps = cfg.gate.block_size
+    policy = options.policy
+    sparse_on = _policy_active(policy, p)
     q, k, v = _qkv(p, x1, cfg)
     q_nope = q
     pos = cur_len[:, None]                                 # [S,1]
@@ -564,37 +647,52 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
     kr = apply_rope(k, pos, cfg.rope_theta)
 
     from repro.serve import paging as pg
+    # mirror the contiguous path: the Kg page rows only advance for the
+    # policy that reads them (append skips the gate projection on None)
     k_pages, v_pages, kg_pages = pg.append_token_paged(
         k_pages, v_pages, kg_pages, kr[:, 0], v[:, 0], page_table, cur_len,
-        active, p.get("gate"), cfg.gate, rope_theta=cfg.rope_theta)
+        active, p.get("gate") if policy.needs_gate else None, cfg.gate,
+        rope_theta=cfg.rope_theta)
     new_len = cur_len + active.astype(jnp.int32)
 
-    if sparse and "gate" in p:
-        kg_slot = pg.gather_kg(kg_pages, page_table)       # [S,Hkv,npt,Dg]
-        idx = _gate_select(p["gate"], q_nope, pos, kg_slot, new_len, cfg,
-                           impl=_select_impl(sparse_impl))
+    if sparse_on:
+        inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
+                              gate_params=p.get("gate"), kg_pages=kg_pages,
+                              k_pages=k_pages, page_table=page_table)
+        idx = policy.select(inp, cfg, impl=select_impl(options.kernel_impl),
+                            max_selected=options.max_selected(cfg))
+        if budget_blocks is not None:
+            slot_cap = jnp.arange(idx.shape[-1])[None, None, :] \
+                < budget_blocks[:, None, None]
+            idx = jnp.where(slot_cap, idx, -1)
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
         o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx, page_table,
-                                    new_len, block_size=ps, impl=sparse_impl)
+                                    new_len, block_size=ps,
+                                    impl=options.kernel_impl)
         o = o.reshape(b, 1, hkv * g, dh)
+        aux = (_selection_aux(idx, kc.visible_blocks(
+                   jnp.maximum(new_len, 1), ps), page_table.shape[1])
+               if options.measure_sparsity else _zero_layer_aux(b))
     else:
         k_ct = pg.gather_kv(k_pages, page_table)           # [S,Hkv,npt*ps,Dh]
         v_ct = pg.gather_kv(v_pages, page_table)
         o = decode_attention(qr, k_ct, v_ct, new_len,
                              logit_softcap=cfg.attn_logit_softcap)
+        aux = (_dense_aux(new_len, ps) if options.measure_sparsity
+               else _zero_layer_aux(b))
     out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-    return out, (k_pages, v_pages, kg_pages)
+    return out, (k_pages, v_pages, kg_pages), aux
 
 
 def block_decode_paged(p: Params, x1, cfg: ModelConfig, layer_pages,
-                       page_table, cur_len, active, *, sparse: bool,
-                       sparse_impl: str):
+                       page_table, cur_len, active, *,
+                       options: DecodeOptions, budget_blocks=None):
     k_pages, v_pages, kg_pages = layer_pages
     h = rms_norm(p["ln1"], x1, cfg.norm_eps)
-    attn_out, new_pages = attention_decode_paged(
+    attn_out, new_pages, aux = attention_decode_paged(
         p["attn"], h, cfg, k_pages=k_pages, v_pages=v_pages,
         kg_pages=kg_pages, page_table=page_table, cur_len=cur_len,
-        active=active, sparse=sparse, sparse_impl=sparse_impl)
+        active=active, options=options, budget_blocks=budget_blocks)
     x1 = x1 + attn_out
     h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
     if "moe" in p:
@@ -604,40 +702,45 @@ def block_decode_paged(p: Params, x1, cfg: ModelConfig, layer_pages,
         y = y.reshape(b, 1, -1)
     else:
         y = mlp(p["mlp"], h2, cfg.activation)
-    return x1 + y, new_pages
+    return x1 + y, new_pages, aux
 
 
 def lm_decode_step_paged(params: Params, pages, token: jnp.ndarray,
                          page_table: jnp.ndarray, cur_len: jnp.ndarray,
                          active: jnp.ndarray, cfg: ModelConfig, *,
-                         sparse: bool = True, sparse_impl: str = "ref"):
+                         options: Optional[DecodeOptions] = None,
+                         budget_blocks=None):
     """Continuous-batching decode step. token/cur_len/active [n_slots];
     pages is a ``serve.paging.PagedPages`` (layer-stacked pools);
-    page_table [n_slots, npt]. Returns (logits [n_slots, V], new pages).
+    page_table [n_slots, npt]; ``budget_blocks`` [n_slots] (optional,
+    runtime) per-slot selected-block caps for per-request budget
+    overrides. Returns (logits [n_slots, V], new pages, aux dict).
 
     Inactive rows produce garbage logits (the engine masks them) but do
     not touch live pages or advance — per-row raggedness is carried by
     ``cur_len``/``active`` rather than a uniform batch length."""
     if cfg.cross_attn_period:
         raise NotImplementedError("paged decode: cross-attn families TBD")
+    options = options if options is not None else default_options(cfg)
     from repro.serve.paging import PagedPages
     x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
 
     def self_scan(x1, inp):
         layer_p, layer_pages = inp
-        return block_decode_paged(layer_p, x1, cfg, layer_pages, page_table,
-                                  cur_len, active, sparse=sparse,
-                                  sparse_impl=sparse_impl)
+        y, new_pages, aux = block_decode_paged(
+            layer_p, x1, cfg, layer_pages, page_table, cur_len, active,
+            options=options, budget_blocks=budget_blocks)
+        return y, (new_pages, aux)
 
-    x1, new_pages = layer_scan(self_scan, x1,
-                               (params["blocks"], tuple(pages)),
-                               unroll=not cfg.scan_layers)
+    x1, (new_pages, auxs) = layer_scan(self_scan, x1,
+                                       (params["blocks"], tuple(pages)),
+                                       unroll=not cfg.scan_layers)
     x1 = rms_norm(params["final_norm"], x1, cfg.norm_eps)
     if cfg.tie_embeddings:
         logits = x1 @ params["embed"]["w"].T
     else:
         logits = linear(params["lm_head"], x1)
-    return logits[:, 0], PagedPages(*new_pages)
+    return logits[:, 0], PagedPages(*new_pages), aggregate_decode_aux(auxs)
 
 
 def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],

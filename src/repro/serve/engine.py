@@ -1,7 +1,7 @@
 """Sparse decode serving engine.
 
-Two serving paths share the SeerAttention-R machinery (gate scoring,
-budget/threshold block selection, block-sparse decode kernel):
+Two serving paths share the SeerAttention-R machinery (block-selection
+policy, budget/threshold selection, block-sparse decode kernel):
 
   * ``generate(batch, n)`` — the original uniform-batch path: one
     contiguous DecodeState, every row decodes in lockstep. Kept as the
@@ -14,7 +14,15 @@ budget/threshold block selection, block-sparse decode kernel):
     the raw KV (page size == gate block size), so gate state can never
     desync from the cache under admission/eviction churn.
 
-Tracks achieved sparsity and derived I/O savings either way.
+Decode behavior is configured by ONE static ``core.policy.DecodeOptions``
+object (selection policy, kernel impl, sampling, budget) instead of
+per-knob kwargs; the jitted steps close over it, so distinct options
+compile distinct programs while runtime state never recompiles.
+``serve()`` additionally takes cheap PER-REQUEST overrides: a
+``"sampling"`` SamplingParams (per-request jitted sampler, hash-keyed
+cache) and a ``"budget"`` token budget (runtime-masked per slot — no
+recompilation). Tracks MEASURED per-batch sparsity from the actual
+selected block mask and derived I/O savings either way.
 """
 from __future__ import annotations
 
@@ -27,8 +35,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.core.policy import DecodeOptions, default_options
 from repro.models.registry import get_api
 from repro.serve import paging as pg
+from repro.serve import sampling as smp
 from repro.serve.scheduler import Request, Scheduler, pages_needed
 
 
@@ -44,44 +54,65 @@ class ServeResult(Dict):
 
 class DecodeEngine:
     def __init__(self, cfg: ModelConfig, params: Any, *, max_len: int,
-                 sparse: bool = True, sparse_impl: str = "ref",
-                 greedy: bool = True, shard=None):
+                 options: Optional[DecodeOptions] = None, shard=None):
         self.cfg = cfg
         self.params = params
         self.api = get_api(cfg)
         self.max_len = max_len
-        self.sparse = sparse
-        self.sparse_impl = sparse_impl
-        self.greedy = greedy
-        self.shard = shard          # mesh-aware: enables sparse_impl="sharded"
+        self.options = options if options is not None else default_options(cfg)
+        self.shard = shard          # mesh-aware: enables kernel_impl="sharded"
         # the decode state is donated: KV/Kg cache updates alias in place
         self._step = jax.jit(functools.partial(
-            self._decode_step, sparse=sparse, sparse_impl=sparse_impl),
-            donate_argnums=(1,))
+            self._decode_step, options=self.options), donate_argnums=(1,))
         self._paged_step = None     # built lazily on first serve()
+        self._last_aux = None       # measured selection of the latest step
+        self._last_active = None    # serve(): slots active during that step
 
-    def _decode_step(self, params, state, token, *, sparse, sparse_impl):
-        logits, state = self.api.decode_step(
-            params, state, token, self.cfg, sparse=sparse,
-            sparse_impl=sparse_impl, shard=self.shard)
-        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return nxt, logits, state
+    def _decode_step(self, params, state, token, key=None, *,
+                     options: DecodeOptions):
+        logits, state, aux = self.api.decode_step(
+            params, state, token, self.cfg, options=options,
+            shard=self.shard)
+        nxt = smp.sample(logits, options.sampling, key)
+        return nxt, logits, state, aux
 
-    def prefill(self, batch: Dict[str, jnp.ndarray]):
+    def prefill(self, batch: Dict[str, jnp.ndarray], key=None):
+        # stochastic sampling gets a fixed fallback key rather than an
+        # error; to reproduce a generate() trajectory, pass the key chain
+        # explicitly (generate splits its key before this call)
+        if key is None and not self.options.sampling.greedy:
+            key = jax.random.PRNGKey(0)
         logits, state = self.api.prefill(self.params, batch, self.cfg,
                                          self.max_len)
-        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        first = smp.sample(logits, self.options.sampling, key)
         return first, state
 
-    def generate(self, batch: Dict[str, jnp.ndarray], n_tokens: int
-                 ) -> GenerationResult:
+    def generate(self, batch: Dict[str, jnp.ndarray], n_tokens: int, *,
+                 key: Optional[jax.Array] = None) -> GenerationResult:
+        """Uniform-batch decode of ``n_tokens`` per row. ``key`` seeds the
+        sampling chain when ``options.sampling`` is stochastic (defaults
+        to PRNGKey(0)); greedy decoding never consumes randomness."""
+        stochastic = not self.options.sampling.greedy
+        if stochastic and key is None:
+            key = jax.random.PRNGKey(0)
+        self._last_aux = self._last_active = None   # stats reflect THIS run
+
+        def next_key():
+            nonlocal key
+            if not stochastic:
+                return None
+            key, sub = jax.random.split(key)
+            return sub
+
         t0 = time.perf_counter()
-        token, state = self.prefill(batch)
+        token, state = self.prefill(batch, next_key())
         prefill_s = time.perf_counter() - t0
         toks = [token]
         t1 = time.perf_counter()
         for _ in range(n_tokens - 1):
-            token, _, state = self._step(self.params, state, token)
+            token, _, state, aux = self._step(self.params, state, token,
+                                              next_key())
+            self._last_aux = aux
             toks.append(token)
         jax.block_until_ready(token)
         decode_s = time.perf_counter() - t1
@@ -96,18 +127,25 @@ class DecodeEngine:
     def serve(self, requests: Sequence[Dict[str, Any]], *,
               n_slots: int = 4, num_pages: Optional[int] = None,
               collect_logits: bool = False,
-              max_steps: Optional[int] = None) -> ServeResult:
+              max_steps: Optional[int] = None,
+              sample_seed: int = 0) -> ServeResult:
         """Continuous-batching decode over a paged KV cache.
 
         requests: each ``{"tokens": 1-D int array, "max_new_tokens": int}``
-        (an optional ``"rid"`` overrides the default enumeration id).
-        Admission is FIFO; a request's full page budget is reserved
-        up-front so running requests never stall on an empty free list.
+        plus optional per-request overrides — ``"rid"`` (id), ``"sampling"``
+        (SamplingParams replacing ``options.sampling`` for that request)
+        and ``"budget"`` (token budget, applied as a runtime per-slot mask
+        over the selected-block list; floored so the force-selected
+        first/last blocks survive, and a cap beyond the compiled selection
+        width is naturally a no-op). Admission is FIFO; a request's full
+        page budget is reserved up-front so running requests never stall
+        on an empty free list.
 
         Returns ``ServeResult``: rid -> generated token ids (length
-        ``max_new_tokens``, greedy), ``res["stats"]`` has throughput and
-        scheduler telemetry, and ``res["logits"]`` (rid -> [n, V] fp32,
-        prefill token included) when ``collect_logits``.
+        ``max_new_tokens``), ``res["stats"]`` has throughput, scheduler
+        telemetry and measured per-request sparsity, and ``res["logits"]``
+        (rid -> [n, V] fp32, prefill token included) when
+        ``collect_logits``.
         """
         cfg = self.cfg
         if self.api.decode_step_paged is None:
@@ -127,6 +165,14 @@ class DecodeEngine:
         if clash:
             raise ValueError(f"request ids collide with reserved result "
                              f"keys: {clash}")
+        sampling_of = {r.rid: requests[i].get("sampling")
+                       or self.options.sampling for i, r in enumerate(reqs)}
+        budget_of = {r.rid: requests[i].get("budget")
+                     for i, r in enumerate(reqs)}
+        ridx_of = {r.rid: i for i, r in enumerate(reqs)}
+        base_key = jax.random.PRNGKey(sample_seed)
+        self._last_aux = self._last_active = None   # stats reflect THIS run
+
         npt = max(pages_needed(r.prompt_len, r.max_new_tokens, ps)
                   for r in reqs)
         if num_pages is None:
@@ -136,27 +182,73 @@ class DecodeEngine:
         for r in reqs:
             sched.submit(r)
 
+        # per-slot selected-block caps: ONLY active when some request sets
+        # a "budget" (otherwise no mask exists at all — zero risk of
+        # clipping a policy whose list is wider than the config budget).
+        # Slots without an override get a never-binding sentinel; override
+        # caps are floored so the force-selected first/last blocks (which
+        # rank ahead of every scored block by construction) survive.
+        use_budget = any(b is not None for b in budget_of.values())
+        no_cap = np.int32(2 ** 30)
+        floor = max(1, int(cfg.gate.always_first_block)
+                    + int(cfg.gate.always_last_block))
+        budget_blocks = (np.full((n_slots,), no_cap, np.int32)
+                         if use_budget else None)
+
+        def slot_cap(rid) -> int:
+            b = budget_of[rid]
+            if b is None:
+                return int(no_cap)
+            return max(floor, int(b) // ps)
+
+        # host-side per-slot sampling runs ONLY while a LIVE request is
+        # stochastic; otherwise (and again once every stochastic request
+        # retires) the device-side batched argmax transfers n_slots ints,
+        # not [n_slots, V] logits. The stochastic path pays one tiny
+        # dispatch per active slot per step — batching slots that share
+        # SamplingParams (vmapped keys) is a serving-scale follow-up.
+        def any_stochastic(slot_reqs) -> bool:
+            return any(not sampling_of[slot_reqs[s].rid].greedy
+                       for s in np.nonzero(sched.active)[0])
+
+        def sample_slot(req, row_logits) -> int:
+            """Sample one slot's next token with the request's params."""
+            params_s = sampling_of[req.rid]
+            if params_s.greedy:
+                return int(np.argmax(row_logits))
+            key = jax.random.fold_in(
+                jax.random.fold_in(base_key, ridx_of[req.rid]),
+                len(req.out_tokens))
+            return int(smp.make_sampler(params_s)(jnp.asarray(row_logits),
+                                                  key=key))
+
         # layer count from the stacked params (leading dim of any leaf)
         nl = jax.tree.leaves(self.params["blocks"])[0].shape[0]
         pages = pg.init_pages(cfg, num_pages, nl)
         if self._paged_step is None:   # one jit per engine: repeat serve()
             self._paged_step = jax.jit(functools.partial(
-                self.api.decode_step_paged, cfg=cfg, sparse=self.sparse,
-                sparse_impl=self.sparse_impl), donate_argnums=(1,))
+                self.api.decode_step_paged, cfg=cfg, options=self.options),
+                donate_argnums=(1,))
         step = self._paged_step
 
         token_buf = np.zeros((n_slots,), np.int32)
+        rho_sum: Dict[Any, float] = {r.rid: 0.0 for r in reqs}
+        sel_sum: Dict[Any, float] = {r.rid: 0.0 for r in reqs}
+        rho_n: Dict[Any, int] = {r.rid: 0 for r in reqs}
         n_steps = 0
         t0 = time.perf_counter()
         limit = max_steps if max_steps is not None else sum(
             r.max_new_tokens for r in reqs) + len(reqs) + 8
         while sched.has_work():
             for req in sched.admissions():
-                pages, first, lg = self._paged_prefill(pages, req, ps)
-                req.out_tokens.append(int(first))
+                pages, lg = self._paged_prefill(pages, req, ps)
+                first = sample_slot(req, lg)
+                req.out_tokens.append(first)
                 if collect_logits:
                     req.out_logits.append(lg)
-                token_buf[req.slot] = int(first)
+                token_buf[req.slot] = first
+                if budget_blocks is not None:
+                    budget_blocks[req.slot] = slot_cap(req.rid)
                 sched.retire_if_done(req)
             if not sched.active.any():
                 if sched.pending:       # pool too fragmented to admit
@@ -164,15 +256,38 @@ class DecodeEngine:
                         "scheduler stalled: pending requests but no active "
                         "slots and admission failed")
                 break
-            logits, pages = step(self.params, pages,
-                                 jnp.asarray(token_buf),
-                                 jnp.asarray(sched.page_table),
-                                 jnp.asarray(sched.cur_len),
-                                 jnp.asarray(sched.active))
-            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            slot_reqs = list(sched.slots)   # before retirement mutates it
+            logits, pages, aux = step(self.params, pages,
+                                      jnp.asarray(token_buf),
+                                      jnp.asarray(sched.page_table),
+                                      jnp.asarray(sched.cur_len),
+                                      jnp.asarray(sched.active),
+                                      budget_blocks=(
+                                          jnp.asarray(budget_blocks)
+                                          if budget_blocks is not None
+                                          else None))
+            self._last_aux = aux
+            # idle/retired slots decode garbage rows (rho=0): remember who
+            # was live so sparsity_stats() averages ACTIVE rows only
+            self._last_active = sched.active.copy()
+            stoch = any_stochastic(slot_reqs)
             lg_np = (np.asarray(logits, np.float32)
-                     if collect_logits else None)
-            sched.complete_step(nxt, lg_np)
+                     if (collect_logits or stoch) else None)
+            if stoch:
+                nxt = np.zeros((n_slots,), np.int32)
+                for slot in np.nonzero(sched.active)[0]:
+                    nxt[slot] = sample_slot(slot_reqs[slot], lg_np[slot])
+            else:
+                nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            if self.options.measure_sparsity:
+                rho_rows = np.asarray(aux["sparsity_rows"], np.float32)
+                sel_rows = np.asarray(aux["sel_blocks"], np.float32)
+                for slot in np.nonzero(sched.active)[0]:
+                    rid = slot_reqs[slot].rid
+                    rho_sum[rid] += float(rho_rows[slot])
+                    sel_sum[rid] += float(sel_rows[slot])
+                    rho_n[rid] += 1
+            sched.complete_step(nxt, lg_np if collect_logits else None)
             token_buf = np.where(sched.active, nxt, 0).astype(np.int32)
             n_steps += 1
             if n_steps > limit:
@@ -197,6 +312,12 @@ class DecodeEngine:
             "admitted": sched.n_admitted, "retired": sched.n_retired,
             "admission_stalls": sched.admission_stalls,
             "num_pages": num_pages, "page_size": ps,
+            # measured per-request selection telemetry (decode steps only;
+            # empty — not zero — when telemetry is compiled out)
+            "sparsity_by_rid": {rid: rho_sum[rid] / rho_n[rid]
+                                for rid in rho_sum if rho_n[rid]},
+            "sel_blocks_by_rid": {rid: sel_sum[rid] / rho_n[rid]
+                                  for rid in sel_sum if rho_n[rid]},
         }
         return out
 
@@ -206,7 +327,7 @@ class DecodeEngine:
         max_len is the page-aligned prompt length so the cache slices
         reshape into whole pages; the reservation's remaining pages only
         receive their (zeroed) Kg rows here — their K/V fill during
-        decode."""
+        decode. Returns (pages, fp32 logits row) — the caller samples."""
         plen = req.prompt_len
         n_prompt = -(-plen // ps)
         logits, cstate = self.api.prefill(
@@ -215,21 +336,47 @@ class DecodeEngine:
         pages = pg.scatter_prefill(
             pages, cstate.k_cache, cstate.v_cache, cstate.kg_cache, plen,
             jnp.asarray(req.pages, jnp.int32), ps)
-        first = jnp.argmax(logits, axis=-1).astype(jnp.int32)[0]
-        return pages, first, np.asarray(logits[0], np.float32)
+        return pages, np.asarray(logits[0], np.float32)
 
-    def sparsity_stats(self, state) -> Dict[str, float]:
-        """Derived I/O economics of the current step (paper Fig. 6 model)."""
+    def sparsity_stats(self, state=None) -> Dict[str, Any]:
+        """Measured selection economics of the LATEST decode step.
+
+        Sparsity comes from the step's ACTUAL selected block mask
+        (``core.sparsity.sparsity_ratio`` inside the decode step, averaged
+        over layers), not from the configured budget — threshold-method
+        adaptivity, ragged batches and per-request budget overrides are
+        all reflected. ``sparsity_rows`` is the per-batch-row breakdown.
+        Derived I/O terms follow the paper Fig. 6 model. Before any decode
+        step has run there is nothing to measure: returns the SAME key
+        set with neutral values and ``measured=False``. ``state`` is
+        accepted for backward compatibility and unused."""
         cfg = self.cfg
-        if not (cfg.gate.enabled and self.sparse):
-            return {"sparsity": 0.0, "io_speedup": 1.0}
-        cur = int(state.cur_len[0])
-        nb = -(-cur // cfg.gate.block_size)
-        nsel = min(max(1, cfg.gate.token_budget // cfg.gate.block_size), nb)
-        rho = 1.0 - nsel / nb
-        return {"sparsity": rho,
-                "io_speedup": nb / nsel,
-                "kv_bytes_read": nsel * cfg.gate.block_size
-                * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * 2,
-                "gate_overhead_frac": (cfg.gate.d_gate / cfg.gate.block_size)
-                / (2 * cfg.resolved_head_dim)}
+        if self._last_aux is None or not self.options.measure_sparsity:
+            sel, vis, rho = 0.0, 0.0, 0.0
+            rows = np.zeros((0,), np.float32)
+            measured = False
+        else:
+            aux = jax.device_get(self._last_aux)
+            rows = np.asarray(aux["sparsity_rows"], np.float32)
+            sel_rows = np.asarray(aux["sel_blocks"], np.float32)
+            vis_rows = np.asarray(aux["vis_blocks"], np.float32)
+            if self._last_active is not None:   # paged: skip idle slots
+                act = np.asarray(self._last_active, bool)
+                rows, sel_rows, vis_rows = \
+                    rows[act], sel_rows[act], vis_rows[act]
+            sel = float(np.mean(sel_rows))
+            vis = float(np.mean(vis_rows))
+            # the aux scalar is mean(rows) by construction; recompute it
+            # over the surviving rows
+            rho = float(np.mean(rows))
+            measured = True
+        return {
+            "sparsity": rho, "sparsity_rows": rows,
+            "sel_blocks": sel, "vis_blocks": vis,
+            "io_speedup": (vis / sel) if sel > 0 else 1.0,
+            "kv_bytes_read": sel * cfg.gate.block_size
+            * cfg.n_kv_heads * cfg.resolved_head_dim * 2 * 2,
+            "gate_overhead_frac": (cfg.gate.d_gate / cfg.gate.block_size)
+            / (2 * cfg.resolved_head_dim),
+            "measured": measured,
+        }

@@ -1,0 +1,92 @@
+"""Token sampling for the decode engines (ROADMAP "sampling beyond greedy").
+
+``SamplingParams`` is a frozen dataclass — hashable, so it keys jit caches
+(one compiled sampler per distinct parameter set) and rides inside the
+static ``DecodeOptions``. The PRNG key is threaded explicitly: the caller
+owns the key chain (`key, sub = jax.random.split(key)` per step), so a
+fixed seed reproduces a trajectory exactly.
+
+Filter order follows the common serving convention (vLLM/HF):
+temperature scale -> top-k cut -> top-p (nucleus) cut -> categorical.
+``temperature == 0`` short-circuits to greedy argmax and never consumes
+randomness, so the greedy path is bitwise identical to ``jnp.argmax``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = float("-inf")
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """temperature=0 -> greedy; top_k=0 and top_p=1 disable those filters."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+GREEDY = SamplingParams()
+
+
+def _desc_rank(logits: jnp.ndarray) -> jnp.ndarray:
+    """Rank of every token in descending-logit order (ties broken by
+    lower token id — stable argsort), so filters keep an EXACT count
+    instead of a value cutoff that would leak tied tokens."""
+    order = jnp.argsort(-logits, axis=-1)
+    return jnp.argsort(order, axis=-1)
+
+
+def _filter_top_k(logits: jnp.ndarray, k: int) -> jnp.ndarray:
+    return jnp.where(_desc_rank(logits) < k, logits, NEG_INF)
+
+
+def _filter_top_p(logits: jnp.ndarray, p: float) -> jnp.ndarray:
+    """Nucleus filter: keep the smallest prefix of the sorted distribution
+    with cumulative mass > p (the argmax token always survives). Keeps
+    exactly the nucleus COUNT per row — tokens tied with the last kept
+    logit do not leak in."""
+    sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+    probs = jax.nn.softmax(sorted_logits, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # a token is kept while the mass BEFORE it is still < p
+    n_keep = jnp.sum((cum - probs) < p, axis=-1, keepdims=True)   # >= 1
+    return jnp.where(_desc_rank(logits) < n_keep, logits, NEG_INF)
+
+
+def sample(logits: jnp.ndarray, params: SamplingParams,
+           key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """logits [..., V] -> token ids [...]. ``key`` is required unless greedy."""
+    if params.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    if key is None:
+        raise ValueError("stochastic sampling needs a PRNG key")
+    lg = logits.astype(jnp.float32) / params.temperature
+    if params.top_k:
+        lg = _filter_top_k(lg, min(params.top_k, lg.shape[-1]))
+    if params.top_p < 1.0:
+        lg = _filter_top_p(lg, params.top_p)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=64)
+def make_sampler(params: SamplingParams):
+    """One jitted sampler per distinct SamplingParams (hash-keyed cache)."""
+    return jax.jit(functools.partial(sample, params=params))

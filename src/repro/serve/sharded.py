@@ -36,6 +36,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import GateConfig
+from repro.core import sparsity as sp
 from repro.models.common import NEG_INF, apply_rope
 
 try:  # JAX >= 0.6
@@ -73,16 +74,21 @@ def sharded_sparse_decode(
         batch_spec,
         cfg: GateConfig,
         rope_theta: float,
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """One decode step for ONE layer. Returns (o [B,Hkv,G,Dh], k_cache,
-    v_cache, kg_cache) with the caches updated in place (same shardings).
+        max_selected: Optional[int] = None,
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One decode step for ONE layer. ``max_selected`` overrides the
+    config block budget (DecodeOptions.budget_override). Returns
+    (o [B,Hkv,G,Dh], k_cache, v_cache, kg_cache, n_sel [B,Hkv]) with the
+    caches updated in place (same shardings); ``n_sel`` is the psum'd
+    per-(row, kv-head) count of selected blocks across shards (measured
+    sparsity telemetry).
     """
     sizes = tuple(int(mesh.shape[a]) for a in seq_axes)
     nsh = 1
     for s in sizes:
         nsh *= s
     bs = cfg.block_size
-    k_budget = max(1, cfg.token_budget // bs)
+    k_budget = sp.resolve_max_selected(cfg, max_selected)
     cap = max(1, min(int(math.ceil(k_budget / nsh * cfg.local_cap_factor)),
                      k_cache.shape[2] // (bs * nsh)))
 
@@ -217,12 +223,16 @@ def sharded_sparse_decode(
         pn = p / jnp.maximum(l, 1e-30)
         o_i = jnp.einsum("bhgk,bhkd->bhgd", pn, vg_.astype(jnp.float32))
         o = jax.lax.psum(o_i, seq) if nsh > 1 else o_i
-        return o.astype(qr.dtype), k_loc, v_loc, kg_loc
+
+        # measured selection count: each shard counts its own winners
+        n_sel = jnp.sum(mine.astype(jnp.int32), axis=-1)    # [B,Hkv] local
+        n_sel = jax.lax.psum(n_sel, seq) if nsh > 1 else n_sel
+        return o.astype(qr.dtype), k_loc, v_loc, kg_loc, n_sel
 
     fn = shard_map(
         local, mesh,
         in_specs=(spec_qg, spec_q, P(bspec, None, None), P(bspec, None, None),
                   spec_kv, spec_kv, spec_kv, spec_len, spec_w),
-        out_specs=(spec_q, spec_kv, spec_kv, spec_kv))
+        out_specs=(spec_q, spec_kv, spec_kv, spec_kv, P(bspec, None)))
     return fn(qg, qr, kr_new, v_new, k_cache, v_cache, kg_cache, cur_len,
               gate_wk)

@@ -1,0 +1,145 @@
+"""Capture golden decode trajectories for tests/golden_policy.npz.
+
+The committed npz was produced by running this script against the
+PRE-DecodeOptions tree (the old ``sparse``/``sparse_impl`` kwarg API),
+one commit before the policy redesign landed — tests/test_policy.py
+replays the same workloads through DecodeOptions and asserts BITWISE
+equality, proving the refactor behavior-preserving. The script itself
+tracks the current API so the fixture stays regenerable: if a future PR
+intentionally changes decode numerics (layout change, kernel rewrite),
+run both capture modes on the pre-change tree (or accept the new
+numerics by running on the post-change tree) and commit the refreshed
+npz alongside an explanation.
+
+Usage (from repo root):
+    PYTHONPATH=src:tests python tests/capture_golden_policy.py contiguous_paged
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src:tests python tests/capture_golden_policy.py sharded
+
+Both modes merge their arrays into tests/golden_policy.npz. The two modes
+are separate processes because jax pins the device count at first init.
+"""
+import dataclasses
+import os
+import sys
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+OUT = os.path.join(HERE, "golden_policy.npz")
+
+# workload constants shared with tests/test_policy.py
+PROMPT_SHAPE = (2, 41)          # contiguous rollouts
+PROMPT_SEED = 1
+PARAM_SEED = 0
+N_STEPS = 12
+MAX_LEN = 64
+PAGED_SPECS = ((21, 12), (17, 12), (30, 12))   # (prompt_len, max_new)
+PAGED_SEED = 4
+SHARDED_B, SHARDED_PRE, SHARDED_MAX = 4, 120, 256
+
+
+def tiny_cfg(method="budget"):
+    import repro.configs as configs
+    from repro.config import reduced
+    cfg = reduced(configs.get("qwen3_0_6b")).replace(dtype="float32")
+    return cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, token_budget=32, method=method,
+        threshold=2e-2))
+
+
+def sharded_cfg():
+    import repro.configs as configs
+    from repro.config import reduced
+    cfg = reduced(configs.get("qwen3_0_6b"))
+    return cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, token_budget=64,
+        local_cap_factor=8.0))
+
+
+def paged_requests(cfg):
+    rng = np.random.default_rng(PAGED_SEED)
+    return [{"rid": i, "max_new_tokens": mn,
+             "tokens": rng.integers(0, cfg.vocab_size,
+                                    size=(pl,)).astype(np.int32)}
+            for i, (pl, mn) in enumerate(PAGED_SPECS)]
+
+
+def _merge_save(arrays):
+    if os.path.exists(OUT):
+        prev = dict(np.load(OUT))
+        prev.update(arrays)
+        arrays = prev
+    np.savez_compressed(OUT, **arrays)
+    print(f"wrote {OUT}: {sorted(arrays)}")
+
+
+def capture_contiguous_paged():
+    import jax
+    import jax.numpy as jnp
+    jax.config.update("jax_platform_name", "cpu")
+    from repro.models.registry import get_api
+    from repro.serve.engine import DecodeEngine
+
+    out = {}
+    for method in ("budget", "threshold"):
+        cfg = tiny_cfg(method)
+        api = get_api(cfg)
+        params = api.init_params(jax.random.PRNGKey(PARAM_SEED), cfg)
+        toks = jax.random.randint(jax.random.PRNGKey(PROMPT_SEED),
+                                  PROMPT_SHAPE, 0, cfg.vocab_size)
+        eng = DecodeEngine(cfg, params, max_len=MAX_LEN)
+        tok, st = eng.prefill({"tokens": toks})
+        lgs, tks = [], []
+        for _ in range(N_STEPS):
+            tok, lg, st = eng._step(params, st, tok)[:3]
+            lgs.append(np.asarray(lg, np.float32))
+            tks.append(np.asarray(tok, np.int32))
+        out[f"ct_{method}_logits"] = np.stack(lgs)
+        out[f"ct_{method}_tokens"] = np.stack(tks)
+
+    cfg = tiny_cfg("budget")
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(PARAM_SEED), cfg)
+    eng = DecodeEngine(cfg, params, max_len=128)
+    res = eng.serve(paged_requests(cfg), n_slots=2, collect_logits=True)
+    for rid in range(len(PAGED_SPECS)):
+        out[f"paged_rid{rid}_logits"] = res["logits"][rid]
+        out[f"paged_rid{rid}_tokens"] = np.asarray(res[rid], np.int32)
+    _merge_save(out)
+
+
+def capture_sharded():
+    import functools
+    import jax
+    import jax.numpy as jnp
+    from repro.data.pipeline import DataState, make_batch
+    from repro.models import transformer as tf
+    from repro.distributed import sharding as shd
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = sharded_cfg()
+    params = tf.init_lm(jax.random.PRNGKey(PARAM_SEED), cfg)
+    batch = {"tokens": make_batch(cfg, SHARDED_B, SHARDED_PRE,
+                                  DataState(0, 0))["tokens"]}
+    logits, st = tf.lm_prefill(params, batch, cfg, max_len=SHARDED_MAX)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    shard = shd.make_shard_fn(mesh)
+    from repro.core.policy import DecodeOptions
+    lgs, tks = [], []
+    with mesh:
+        step = jax.jit(functools.partial(
+            tf.lm_decode_step, cfg=cfg,
+            options=DecodeOptions(kernel_impl="sharded"), shard=shard))
+        for _ in range(N_STEPS):
+            lg, st = step(params, st, tok)[:2]
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            lgs.append(np.asarray(lg, np.float32))
+            tks.append(np.asarray(tok, np.int32))
+    _merge_save({"sharded_logits": np.stack(lgs),
+                 "sharded_tokens": np.stack(tks)})
+
+
+if __name__ == "__main__":
+    {"contiguous_paged": capture_contiguous_paged,
+     "sharded": capture_sharded}[sys.argv[1]]()

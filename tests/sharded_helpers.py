@@ -13,6 +13,7 @@ def sharded_decode_parity():
     import numpy as np
     import repro.configs as configs
     from repro.config import reduced
+    from repro.core.policy import DecodeOptions
     from repro.data.pipeline import DataState, make_batch
     from repro.models import transformer as tf
     from repro.distributed import sharding as shd
@@ -29,16 +30,16 @@ def sharded_decode_parity():
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     shard = shd.make_shard_fn(mesh)
     with mesh:
-        step_ref = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg,
-                                             sparse=True, sparse_impl="ref"))
+        step_ref = jax.jit(functools.partial(
+            tf.lm_decode_step, cfg=cfg, options=DecodeOptions()))
         step_sh = jax.jit(functools.partial(
-            tf.lm_decode_step, cfg=cfg, sparse=True, sparse_impl="sharded",
-            shard=shard))
+            tf.lm_decode_step, cfg=cfg,
+            options=DecodeOptions(kernel_impl="sharded"), shard=shard))
         st_r = st_s = st
         t = tok
         for i in range(12):
-            lg_r, st_r = step_ref(params, st_r, t)
-            lg_s, st_s = step_sh(params, st_s, t)
+            lg_r, st_r, _ = step_ref(params, st_r, t)
+            lg_s, st_s, _ = step_sh(params, st_s, t)
             d = float(jnp.max(jnp.abs(lg_r.astype(jnp.float32)
                                       - lg_s.astype(jnp.float32))))
             assert d < 1e-3, f"step {i}: dlogit {d}"
@@ -57,6 +58,7 @@ def sharded_decode_threshold_parity():
     import jax, jax.numpy as jnp
     import repro.configs as configs
     from repro.config import reduced
+    from repro.core.policy import DecodeOptions
     from repro.data.pipeline import DataState, make_batch
     from repro.models import transformer as tf
     from repro.distributed import sharding as shd
@@ -72,21 +74,60 @@ def sharded_decode_threshold_parity():
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     shard = shd.make_shard_fn(mesh)
     with mesh:
-        step_ref = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg,
-                                             sparse=True, sparse_impl="ref"))
+        step_ref = jax.jit(functools.partial(
+            tf.lm_decode_step, cfg=cfg, options=DecodeOptions()))
         step_sh = jax.jit(functools.partial(
-            tf.lm_decode_step, cfg=cfg, sparse=True, sparse_impl="sharded",
-            shard=shard))
+            tf.lm_decode_step, cfg=cfg,
+            options=DecodeOptions(kernel_impl="sharded"), shard=shard))
         st_r = st_s = st
         t = tok
         for i in range(8):
-            lg_r, st_r = step_ref(params, st_r, t)
-            lg_s, st_s = step_sh(params, st_s, t)
+            lg_r, st_r, _ = step_ref(params, st_r, t)
+            lg_s, st_s, _ = step_sh(params, st_s, t)
             d = float(jnp.max(jnp.abs(lg_r.astype(jnp.float32)
                                       - lg_s.astype(jnp.float32))))
             assert d < 1e-3, f"step {i}: dlogit {d}"
             t = jnp.argmax(lg_r, -1).astype(jnp.int32)
     print("sharded_decode_threshold_parity OK")
+
+
+def sharded_policy_golden():
+    """DecodeOptions(kernel_impl='sharded') decode must be BITWISE equal
+    to the pre-DecodeOptions sharded trajectory captured in
+    tests/golden_policy.npz (capture_golden_policy.capture_sharded)."""
+    import functools, os
+    import jax, jax.numpy as jnp
+    import numpy as np
+    import capture_golden_policy as G
+    from repro.core.policy import DecodeOptions
+    from repro.data.pipeline import DataState, make_batch
+    from repro.models import transformer as tf
+    from repro.distributed import sharding as shd
+
+    gold = np.load(os.path.join(os.path.dirname(__file__),
+                                "golden_policy.npz"))
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    cfg = G.sharded_cfg()
+    params = tf.init_lm(jax.random.PRNGKey(G.PARAM_SEED), cfg)
+    batch = {"tokens": make_batch(cfg, G.SHARDED_B, G.SHARDED_PRE,
+                                  DataState(0, 0))["tokens"]}
+    logits, st = tf.lm_prefill(params, batch, cfg, max_len=G.SHARDED_MAX)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    shard = shd.make_shard_fn(mesh)
+    lgs, tks = [], []
+    with mesh:
+        step = jax.jit(functools.partial(
+            tf.lm_decode_step, cfg=cfg,
+            options=DecodeOptions(kernel_impl="sharded"), shard=shard))
+        for _ in range(G.N_STEPS):
+            lg, st, aux = step(params, st, tok)
+            tok = jnp.argmax(lg, -1).astype(jnp.int32)
+            lgs.append(np.asarray(lg, np.float32))
+            tks.append(np.asarray(tok, np.int32))
+    np.testing.assert_array_equal(np.stack(tks), gold["sharded_tokens"])
+    np.testing.assert_array_equal(np.stack(lgs), gold["sharded_logits"])
+    assert 0.0 < float(aux["sparsity"]) < 1.0
+    print("sharded_policy_golden OK")
 
 
 def moe_sharded_parity():

@@ -27,6 +27,7 @@ import pytest
 import repro.configs as configs
 from repro.config import GateConfig, reduced
 from repro.core import sparsity as sp
+from repro.core.policy import DecodeOptions
 from repro.kernels import ops
 from repro.models import transformer as tf
 from repro.models.common import NEG_INF
@@ -112,7 +113,7 @@ def _rollout(cfg, params, state, tok, step, n=12):
     """n decode steps; returns (per-step logits list, final state)."""
     lgs = []
     for _ in range(n):
-        lg, state = step(params, state, tok)
+        lg, state, _ = step(params, state, tok)
         lgs.append(np.asarray(lg, np.float32))
         tok = jnp.argmax(lg, -1).astype(jnp.int32)
     return lgs, state
@@ -130,10 +131,10 @@ def test_contiguous_ref_vs_interpret_12step(method):
     logits, st = api.prefill(params, {"tokens": toks}, cfg, 64)
     tok = jnp.argmax(logits, -1).astype(jnp.int32)
     step_ref = jax.jit(functools.partial(
-        tf.lm_decode_step, cfg=cfg, sparse=True, sparse_impl="ref"))
+        tf.lm_decode_step, cfg=cfg, options=DecodeOptions()))
     step_pal = jax.jit(functools.partial(
-        tf.lm_decode_step, cfg=cfg, sparse=True,
-        sparse_impl="pallas_interpret"))
+        tf.lm_decode_step, cfg=cfg,
+        options=DecodeOptions(kernel_impl="pallas_interpret")))
     lg_r, st_r = _rollout(cfg, params, st, tok, step_ref)
     lg_p, st_p = _rollout(cfg, params, st, tok, step_pal)
     for i, (a, b) in enumerate(zip(lg_r, lg_p)):
@@ -156,8 +157,7 @@ def test_contiguous_vs_paged_12step():
              "tokens": rng.integers(0, cfg.vocab_size,
                                     size=(pl,)).astype(np.int32)}
             for i, pl in enumerate((21, 17, 30))]
-    eng = DecodeEngine(cfg, params, max_len=128, sparse=True,
-                       sparse_impl="ref")
+    eng = DecodeEngine(cfg, params, max_len=128)
     res = eng.serve(reqs, n_slots=2, collect_logits=True)
     assert res["stats"]["retired"] == len(reqs)
     for r in reqs:
@@ -167,7 +167,7 @@ def test_contiguous_vs_paged_12step():
         t = jnp.argmax(logits, -1).astype(jnp.int32)
         toks = [int(t[0])]
         for _ in range(11):
-            t, lg, st = eng._step(params, st, t)
+            t, lg, st, _ = eng._step(params, st, t)
             lgs.append(np.asarray(lg[0], np.float32))
             toks.append(int(t[0]))
         assert res[r["rid"]] == toks
@@ -209,7 +209,7 @@ def test_no_cache_sized_transpose_on_decode_path():
     fns = (bsd.block_sparse_decode, bsd.block_sparse_decode_paged,
            ref.sparse_decode_ref, ref.paged_sparse_decode_ref,
            ref.dense_decode_ref, gs.fused_gate_select, gs.gate_select_ref,
-           OffloadedKV.fetch)
+           gs.fused_gate_select_paged, OffloadedKV.fetch)
     for fn in fns:
         src = inspect.getsource(fn)
         for tok in ("moveaxis", "swapaxes", ".transpose("):

@@ -8,6 +8,7 @@ import pytest
 
 import repro.configs as C
 from repro.config import GateConfig, reduced
+from repro.core.policy import DENSE_OPTIONS
 from repro.data.pipeline import DataState, make_batch
 from repro.models.registry import get_api
 from repro.models import transformer as tf
@@ -40,12 +41,12 @@ def test_arch_smoke_decode(arch, key):
     _, state = api.prefill(params, {k: v for k, v in batch.items()
                                     if k in ("tokens", "image_embeds")},
                            cfg, 96)
-    logits, state = api.decode_step(params, state,
-                                    jnp.zeros((2,), jnp.int32), cfg,
-                                    sparse=True)
+    logits, state, aux = api.decode_step(params, state,
+                                         jnp.zeros((2,), jnp.int32), cfg)
     assert logits.shape == (2, cfg.vocab_size)
     assert bool(jnp.all(jnp.isfinite(logits)))
     assert np.all(np.asarray(state.cur_len) == 65)
+    assert aux["sparsity_rows"].shape == (2,)
 
 
 @pytest.mark.parametrize("arch", [a for a in C.ARCH_IDS
@@ -72,7 +73,8 @@ def test_decode_matches_full_forward(key):
     toks = jax.random.randint(key, (B, L), 0, cfg.vocab_size)
     _, state = api.prefill(params, {"tokens": toks}, cfg, 64)
     nxt = jnp.array([3, 4])
-    lg, _ = api.decode_step(params, state, nxt, cfg, sparse=False)
+    lg, _, _ = api.decode_step(params, state, nxt, cfg,
+                               options=DENSE_OPTIONS)
     toks2 = jnp.concatenate([toks, nxt[:, None]], axis=1)
     x = jnp.take(params["embed"]["w"], toks2, axis=0)
     pos = jnp.broadcast_to(jnp.arange(L + 1), (B, L + 1))
@@ -97,8 +99,9 @@ def test_sparse_decode_full_budget_equals_dense(key):
     toks = jax.random.randint(key, (B, L), 0, cfg.vocab_size)
     _, st0 = api.prefill(params, {"tokens": toks}, cfg, 64)
     nxt = jnp.array([3, 4])
-    lg_d, _ = api.decode_step(params, st0, nxt, cfg, sparse=False)
-    lg_s, _ = api.decode_step(params, st0, nxt, cfg, sparse=True)
+    lg_d, _, _ = api.decode_step(params, st0, nxt, cfg,
+                                 options=DENSE_OPTIONS)
+    lg_s, _, _ = api.decode_step(params, st0, nxt, cfg)
     np.testing.assert_allclose(np.asarray(lg_s, np.float32),
                                np.asarray(lg_d, np.float32),
                                atol=3e-2, rtol=3e-2)

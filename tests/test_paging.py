@@ -18,6 +18,7 @@ import pytest
 import repro.configs as configs
 from repro.config import GateConfig, reduced
 from repro.core import attngate as ag
+from repro.core.policy import DecodeOptions, DensePolicy
 from repro.core import kcache as kc
 from repro.kernels import ops, ref
 from repro.models.common import apply_rope
@@ -158,19 +159,18 @@ def _reference_rollout(eng, req):
     t = jnp.argmax(logits, -1).astype(jnp.int32)
     toks = [int(t[0])]
     for _ in range(req["max_new_tokens"] - 1):
-        t, lg, st = eng._step(params, st, t)
+        t, lg, st, _ = eng._step(params, st, t)
         lgs.append(np.asarray(lg[0], np.float32))
         toks.append(int(t[0]))
     return toks, np.stack(lgs)
 
 
-def _assert_serve_parity(cfg, specs, *, n_slots, sparse=True,
-                         sparse_impl="ref", num_pages=None, seed=0):
+def _assert_serve_parity(cfg, specs, *, n_slots, options=None,
+                         num_pages=None, seed=0):
     api = get_api(cfg)
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     reqs = _mk_requests(cfg, specs, seed)
-    eng = DecodeEngine(cfg, params, max_len=128, sparse=sparse,
-                       sparse_impl=sparse_impl)
+    eng = DecodeEngine(cfg, params, max_len=128, options=options)
     res = eng.serve(reqs, n_slots=n_slots, num_pages=num_pages,
                     collect_logits=True)
     assert res["stats"]["retired"] == len(reqs)
@@ -197,7 +197,8 @@ def test_serve_ragged_midstream_parity():
 def test_serve_dense_paged_parity():
     cfg = _tiny_cfg()
     specs = [(13, 6), (26, 4), (9, 8)]
-    _assert_serve_parity(cfg, specs, n_slots=2, sparse=False)
+    _assert_serve_parity(cfg, specs, n_slots=2,
+                         options=DecodeOptions(policy=DensePolicy()))
 
 
 @pytest.mark.slow
@@ -208,7 +209,8 @@ def test_serve_parity_threshold_and_kernel():
     _assert_serve_parity(cfg, [(17, 6), (25, 5), (40, 7)], n_slots=2)
     cfg = _tiny_cfg()
     _assert_serve_parity(cfg, [(21, 6), (34, 5)], n_slots=2,
-                         sparse_impl="pallas_interpret")
+                         options=DecodeOptions(
+                             kernel_impl="pallas_interpret"))
 
 
 def test_serve_page_exhaustion_queueing_and_reuse():
@@ -220,7 +222,7 @@ def test_serve_page_exhaustion_queueing_and_reuse():
     specs = [(24, 6), (24, 6), (24, 6)]
     reqs = _mk_requests(cfg, specs, seed=2)
     need = pages_needed(24, 6, cfg.gate.block_size)
-    eng = DecodeEngine(cfg, params, max_len=64, sparse=True)
+    eng = DecodeEngine(cfg, params, max_len=64)
     # room for one reservation + null page only
     res = eng.serve(reqs, n_slots=3, num_pages=need + 1, collect_logits=True)
     assert res["stats"]["retired"] == 3
