@@ -1,0 +1,118 @@
+"""CI perf-regression gate over the decode benchmark JSON (ISSUE 4).
+
+Diffs a freshly produced ``benchmarks.run --json`` payload against the
+committed baseline and FAILS (exit 1) when any step-latency metric
+regresses beyond the threshold — the layout-regression guard that used to
+be a comment in the CI workflow ("a reintroduced cache-sized copy shows up
+as a step-latency jump"), promoted to enforcement.
+
+Gated metrics: every ``*_step_ms`` key in the gated sections (default:
+``decode`` and ``policies``). Throughput/sparsity/count keys are reported
+for context but never gate — CPU CI wall-clock is noisy, per-step latency
+at fixed workload is the stable signal, and the 1.5x default threshold
+sits far above observed runner jitter while still catching a structural
+regression (an extra cache-sized copy is >2x at these sizes).
+
+Exit codes: 0 pass, 1 regression, 2 unusable inputs (missing file /
+workload mismatch — a --fast baseline can't gate a full run).
+
+Operational caveat: the committed baseline is produced on whatever
+machine last refreshed it, and CI runners differ in absolute speed. The
+benchmark measures best-of-3 per key to kill scheduler noise, and the
+1.5x threshold absorbs typical runner-generation spread; if the gate ever
+trips with EVERY key shifted by a similar factor, that is a machine-speed
+mismatch, not a code regression — refresh the baseline from a CI-produced
+artifact (the workflow uploads one per run) rather than a laptop.
+
+Usage:
+    python -m benchmarks.compare BASELINE.json FRESH.json \
+        [--threshold 1.5] [--sections decode,policies]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+GATE_SUFFIX = "_step_ms"
+
+
+def load(path: str) -> Dict:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"compare: cannot read {path}: {e}")
+        raise SystemExit(2)            # unusable input, NOT a regression
+    if not isinstance(payload.get("sections"), dict):
+        print(f"compare: {path} has no 'sections' payload")
+        raise SystemExit(2)
+    return payload
+
+
+def gate(baseline: Dict, fresh: Dict, *, sections: List[str],
+         threshold: float) -> Tuple[List[str], List[str]]:
+    """Returns (regressions, report_lines)."""
+    regressions: List[str] = []
+    lines: List[str] = []
+    for sec in sections:
+        base_sec = baseline["sections"].get(sec, {})
+        fresh_sec = fresh["sections"].get(sec, {})
+        for key in sorted(fresh_sec):
+            if not key.endswith(GATE_SUFFIX):
+                continue
+            new = fresh_sec[key]
+            old = base_sec.get(key)
+            if not isinstance(old, (int, float)) or old <= 0 \
+                    or not isinstance(new, (int, float)):
+                lines.append(f"  {sec}.{key}: {new} (no baseline — "
+                             "gates from the next refresh)")
+                continue
+            ratio = new / old
+            verdict = "REGRESSION" if ratio > threshold else "ok"
+            lines.append(f"  {sec}.{key}: {old:g} -> {new:g} ms "
+                         f"(x{ratio:.2f}) {verdict}")
+            if ratio > threshold:
+                regressions.append(f"{sec}.{key} x{ratio:.2f} "
+                                   f"(limit x{threshold:g})")
+    return regressions, lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("baseline", help="committed BENCH_decode.json")
+    ap.add_argument("fresh", help="freshly produced benchmark JSON")
+    ap.add_argument("--threshold", type=float, default=1.5,
+                    help="max allowed fresh/baseline step-latency ratio")
+    ap.add_argument("--sections", default="decode,policies",
+                    help="comma-separated sections to gate")
+    args = ap.parse_args(argv)
+
+    baseline = load(args.baseline)
+    fresh = load(args.fresh)
+    if baseline.get("fast") != fresh.get("fast"):
+        print(f"compare: workload mismatch — baseline fast="
+              f"{baseline.get('fast')} vs fresh fast={fresh.get('fast')}; "
+              "latency ratios would be meaningless. Refresh the baseline "
+              "with the same --fast setting.")
+        return 2
+
+    sections = [s for s in args.sections.split(",") if s]
+    regressions, lines = gate(baseline, fresh, sections=sections,
+                              threshold=args.threshold)
+    print(f"perf gate: sections={sections} threshold=x{args.threshold:g}")
+    print("\n".join(lines) if lines else "  (no gated keys found)")
+    if regressions:
+        print("\nFAIL: step-latency regression(s):")
+        for r in regressions:
+            print(f"  {r}")
+        print("If intentional (new workload / slower-but-correct fix), "
+              "refresh the committed baseline in the same PR and say why.")
+        return 1
+    print("\nPASS: no step-latency regression beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,7 +15,6 @@ import dataclasses
 import functools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs

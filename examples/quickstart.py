@@ -12,7 +12,6 @@ What it shows (the paper's full loop, at CPU scale):
      compare tokens/logits against dense attention.
 """
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -25,7 +25,6 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 import repro.configs as configs
@@ -57,6 +56,14 @@ def main():
                     help="ragged requests through the continuous-batching "
                          "paged-KV engine (serve) instead of one uniform "
                          "batch (generate)")
+    ap.add_argument("--admission", default="lazy",
+                    choices=["lazy", "reserve"],
+                    help="paged admission policy: lazy allocate-on-demand "
+                         "with preemption/swap (default) vs upfront "
+                         "full-lifetime reservation")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="page-pool size; undersize it to watch lazy "
+                         "admission preempt+swap instead of stalling")
     args = ap.parse_args()
 
     cfg = reduced(configs.get(args.arch))
@@ -89,16 +96,21 @@ def main():
         reqs[0]["budget"] = max(cfg.gate.block_size, args.budget // 2)
         eng = DecodeEngine(cfg, params, max_len=max_len, options=opts)
         t0 = time.perf_counter()
-        res = eng.serve(reqs, n_slots=max(2, args.batch // 2))
+        res = eng.serve(reqs, n_slots=max(2, args.batch // 2),
+                        num_pages=args.pool_pages, admission=args.admission)
         wall = time.perf_counter() - t0
         st = res["stats"]
-        print(f"arch={cfg.arch_id} policy={args.policy} paged serve: "
-              f"{len(reqs)} ragged requests, "
+        print(f"arch={cfg.arch_id} policy={args.policy} paged serve "
+              f"(admission={args.admission}): {len(reqs)} ragged requests, "
               f"{st['generated_tokens']} tokens in {st['decode_steps']} steps "
               f"({st['tok_per_s']:.1f} tok/s, wall {wall:.2f}s)")
-        print(f"slot utilisation {st['slot_util']:.2f}, "
-              f"page pool {st['num_pages']} x {st['page_size']} tokens, "
-              f"admission stalls {st['admission_stalls']}")
+        print(f"slot utilisation {st['slot_util']:.2f} "
+              f"(mean active {st['mean_active_slots']:.2f}), "
+              f"page pool {st['num_pages']} x {st['page_size']} tokens "
+              f"(peak used {st['peak_pages_used']}), "
+              f"admission stalls {st['admission_stalls']}, "
+              f"preemptions {st['preemptions']} "
+              f"({st['retired_preempted']} requests finished after a swap)")
         print("measured sparsity by request (req 0 at half budget): "
               + ", ".join(f"{rid}: {rho:.3f}" for rid, rho in
                           sorted(st["sparsity_by_rid"].items())))

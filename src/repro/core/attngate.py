@@ -17,7 +17,7 @@ All functions are batch-first: Q [B, L, H, Dh], K [B, S, Hkv, Dh].
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

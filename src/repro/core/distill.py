@@ -14,7 +14,7 @@ and the Pallas kernel `repro.kernels.gate_gt_fwd` both do exactly that.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

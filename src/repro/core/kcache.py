@@ -10,7 +10,7 @@ d_gate * 2) — <1% at b=64, d_gate=128 (paper's number).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

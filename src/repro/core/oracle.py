@@ -6,11 +6,9 @@ twice": full attention produces blockmax, which then drives a sparse pass.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from repro.config import GateConfig
-from repro.core.distill import ground_truth_from_blockmax
 from repro.core.sparsity import select_blocks
 
 

@@ -299,17 +299,28 @@ class DecodeOptions:
                      the decode step. Tiny per-layer reductions; set False
                      to compile them out of a throughput-critical loop
                      (the engine then reports ``measured=False``)
+    split_k:         paged x sharded decode only (kernel_impl="sharded" on
+                     the paged engine): reduce each head shard's selected
+                     list in ``split_k`` independent flash partials
+                     (kernels.block_sparse_decode_paged_splitk). 1 = the
+                     single-pass path, bitwise identical to unsharded.
     """
     policy: SelectionPolicy = GatePolicy()
     kernel_impl: str = "ref"
     sampling: SamplingParams = GREEDY
     budget_override: Optional[int] = None
     measure_sparsity: bool = True
+    split_k: int = 1
 
     def __post_init__(self):
         if self.kernel_impl not in KERNEL_IMPLS:
             raise ValueError(f"kernel_impl {self.kernel_impl!r} not in "
                              f"{KERNEL_IMPLS}")
+        if self.split_k < 1:
+            raise ValueError(f"split_k must be >= 1: {self.split_k}")
+        if self.split_k > 1 and self.kernel_impl != "sharded":
+            raise ValueError("split_k applies to the paged sharded path "
+                             "(kernel_impl='sharded') only")
         if self.budget_override is not None and self.budget_override <= 0:
             raise ValueError(
                 f"budget_override must be positive: {self.budget_override}")

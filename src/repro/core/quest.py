@@ -9,9 +9,8 @@ provide a group-pooled variant.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Tuple
+from typing import NamedTuple, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.config import GateConfig

@@ -14,7 +14,7 @@ stream (fault-tolerance requirement).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Iterator, NamedTuple
+from typing import Dict, Iterator, NamedTuple
 
 import jax
 import jax.numpy as jnp

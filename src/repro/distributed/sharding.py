@@ -25,10 +25,9 @@ Decode-state rules depend on the shape cell (batch may be unshardable):
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Sequence, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
@@ -248,6 +247,25 @@ def logical_pspec(name: str, mesh: Mesh, ep_major: bool = False) -> P:
         "logits": P(dpa, None, MODEL),              # [B, L, V]
     }
     return table.get(name, P())
+
+
+def paged_pool_pspecs(pages: Any, mesh: Mesh) -> Any:
+    """Specs for a ``serve.paging.PagedPages`` pytree on a sharded mesh
+    (the paged x sharded composition, ISSUE 4): pools are sharded over the
+    KV-HEAD axis on 'model' — k/v pools [L, P, Hkv, ps, Dh] and Kg pools
+    [L, P, Hkv, Dg] put 'model' on axis 2 — while the page table and
+    per-slot metadata stay replicated (they are host numpy anyway).
+    Falls back to replication per-axis when Hkv doesn't divide the mesh
+    (sanitize_spec)."""
+    def one(leaf):
+        if leaf.ndim == 5:                       # [L, P, Hkv, ps, Dh]
+            spec = P(None, None, MODEL, None, None)
+        elif leaf.ndim == 4:                     # [L, P, Hkv, Dg]
+            spec = P(None, None, MODEL, None)
+        else:
+            spec = P(*((None,) * leaf.ndim))
+        return sanitize_spec(spec, leaf.shape, mesh)
+    return jax.tree.map(one, pages)
 
 
 def decode_partition(mesh: Mesh, batch_size: int):

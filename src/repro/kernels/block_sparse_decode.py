@@ -51,12 +51,13 @@ NEG_INF = -1e30
 LANES = 128
 
 
-def _flash_group(idxs, b, j, n_groups, len_ref, q_ref, k_refs, v_refs,
-                 o_ref, m_ref, l_ref, acc_ref, *, block_size: int,
-                 scale: float):
-    """Shared online-softmax body: init scratch, fold ``C`` selected blocks
-    in one state update (individual -1 padding blocks are masked out; a
-    fully-padded group is skipped), finalize on the last grid step."""
+def _flash_accum(idxs, b, j, len_ref, q_ref, k_refs, v_refs,
+                 m_ref, l_ref, acc_ref, *, block_size: int, scale: float):
+    """Shared online-softmax accumulation: init scratch at ``j == 0``,
+    fold ``C`` selected blocks in one state update (individual -1 padding
+    blocks are masked out; a fully-padded group is skipped). Finalization
+    is the caller's: normalize-and-write (``_flash_group``) or emit the
+    raw (acc, m, l) partial (split-K kernel)."""
     C = len(k_refs)
 
     @pl.when(j == 0)
@@ -102,6 +103,14 @@ def _flash_group(idxs, b, j, n_groups, len_ref, q_ref, k_refs, v_refs,
         acc_ref[...] = acc
         m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
         l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+
+def _flash_group(idxs, b, j, n_groups, len_ref, q_ref, k_refs, v_refs,
+                 o_ref, m_ref, l_ref, acc_ref, *, block_size: int,
+                 scale: float):
+    """Accumulate one group, normalize-and-write on the last grid step."""
+    _flash_accum(idxs, b, j, len_ref, q_ref, k_refs, v_refs, m_ref, l_ref,
+                 acc_ref, block_size=block_size, scale=scale)
 
     @pl.when(j == n_groups - 1)
     def _finalize():
@@ -276,3 +285,124 @@ def block_sparse_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     )(idx.astype(jnp.int32), page_table.astype(jnp.int32),
       kv_len.astype(jnp.int32), qp, *([k_pages] * c), *([v_pages] * c))
     return out[:, :, :g]
+
+
+def _kernel_paged_splitk(idx_ref, pt_ref, len_ref,   # scalar prefetch
+                         *refs, block_size: int, n_groups: int,
+                         blocks_per_step: int, scale: float, per_pad: int):
+    """Split-K body: each (b, h, s) lane accumulates its OWN split's
+    online-softmax state and emits the raw partial (acc, m, l) instead of
+    normalizing — the cross-split combine happens outside the kernel."""
+    C = blocks_per_step
+    q_ref = refs[0]
+    k_refs = refs[1:1 + C]
+    v_refs = refs[1 + C:1 + 2 * C]
+    o_ref, mo_ref, lo_ref = refs[1 + 2 * C:4 + 2 * C]
+    m_ref, l_ref, acc_ref = refs[4 + 2 * C:7 + 2 * C]
+    b = pl.program_id(0)
+    h = pl.program_id(1)
+    s = pl.program_id(2)
+    j = pl.program_id(3)
+    idxs = [idx_ref[b, h, s * per_pad + j * C + i] for i in range(C)]
+    _flash_accum(idxs, b, j, len_ref, q_ref, k_refs, v_refs, m_ref, l_ref,
+                 acc_ref, block_size=block_size, scale=scale)
+
+    @pl.when(j == n_groups - 1)
+    def _emit_partial():
+        o_ref[0, 0, 0] = acc_ref[...]
+        mo_ref[0, 0, 0] = m_ref[...]
+        lo_ref[0, 0, 0] = l_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_size", "num_splits",
+                                             "blocks_per_step", "interpret"))
+def block_sparse_decode_paged_splitk(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                     v_pages: jnp.ndarray,
+                                     block_indices: jnp.ndarray,
+                                     page_table: jnp.ndarray,
+                                     kv_len: jnp.ndarray, *, block_size: int,
+                                     num_splits: int = 2,
+                                     blocks_per_step: int = 4,
+                                     interpret: bool = False) -> jnp.ndarray:
+    """Split-K variant of ``block_sparse_decode_paged`` (the TPU analog of
+    the paper's ``num_split`` SM load balancing, ISSUE 4).
+
+    The selected-block list is split into ``num_splits`` segments that map
+    to a third grid dimension, so Mosaic can pipeline the segments'
+    HBM->VMEM streams independently; each segment emits an unnormalized
+    flash partial (acc, m, l) and the partials merge with the two-pass
+    rescale in jnp (exactly ``ref.paged_sparse_decode_splitk_ref``). Use
+    when a single sequence's selected list is long enough to starve the
+    grid — e.g. the paged x sharded serving path, where each head shard
+    owns the full selected list of its local heads.
+    """
+    bsz, hkv, g, dh = q.shape
+    ps = k_pages.shape[2]
+    assert ps == block_size, (ps, block_size)
+    ns = max(1, num_splits)
+    nsel = block_indices.shape[-1]
+    per = -(-nsel // ns)                  # selected entries per split
+    c = max(1, min(blocks_per_step, per))
+    n_groups = -(-per // c)
+    per_pad = n_groups * c                # per split, padded to C multiple
+    bi = jnp.full((bsz, hkv, ns * per_pad), -1, block_indices.dtype)
+    bi = bi.reshape(bsz, hkv, ns, per_pad).at[:, :, :, :per].set(
+        jnp.pad(block_indices, ((0, 0), (0, 0), (0, per * ns - nsel)),
+                constant_values=-1).reshape(bsz, hkv, ns, per))
+    idx = bi.reshape(bsz, hkv, ns * per_pad)
+    g_pad = _pad_group(g, q.dtype)
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
+    scale = 1.0 / math.sqrt(dh)
+
+    def q_map(b, h, s, j, idx_ref, pt_ref, len_ref):
+        return (b, h, 0, 0)
+
+    def kv_map(i):
+        def f(b, h, s, j, idx_ref, pt_ref, len_ref):
+            log = jnp.maximum(idx_ref[b, h, s * per_pad + j * c + i], 0)
+            phys = pt_ref[b, log]
+            return (jnp.maximum(phys, 0), h, 0, 0)
+        return f
+
+    def part_map(b, h, s, j, idx_ref, pt_ref, len_ref):
+        return (b, h, s, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(bsz, hkv, ns, n_groups),
+        in_specs=(
+            [pl.BlockSpec((1, 1, g_pad, dh), q_map)]
+            + [pl.BlockSpec((1, 1, ps, dh), kv_map(i)) for i in range(c)]
+            + [pl.BlockSpec((1, 1, ps, dh), kv_map(i)) for i in range(c)]),
+        out_specs=(pl.BlockSpec((1, 1, 1, g_pad, dh), part_map),
+                   pl.BlockSpec((1, 1, 1, g_pad, LANES), part_map),
+                   pl.BlockSpec((1, 1, 1, g_pad, LANES), part_map)),
+        scratch_shapes=[
+            pltpu.VMEM((g_pad, LANES), jnp.float32),   # m
+            pltpu.VMEM((g_pad, LANES), jnp.float32),   # l
+            pltpu.VMEM((g_pad, dh), jnp.float32),      # acc
+        ],
+    )
+    acc, m, l = pl.pallas_call(
+        functools.partial(_kernel_paged_splitk, block_size=block_size,
+                          n_groups=n_groups, blocks_per_step=c, scale=scale,
+                          per_pad=per_pad),
+        grid_spec=grid_spec,
+        out_shape=(jax.ShapeDtypeStruct((bsz, hkv, ns, g_pad, dh),
+                                        jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, hkv, ns, g_pad, LANES),
+                                        jnp.float32),
+                   jax.ShapeDtypeStruct((bsz, hkv, ns, g_pad, LANES),
+                                        jnp.float32)),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), page_table.astype(jnp.int32),
+      kv_len.astype(jnp.int32), qp, *([k_pages] * c), *([v_pages] * c))
+
+    # cross-split combine (two-pass rescale; matches the split-K ref)
+    m_s = m[..., :1]                                     # [B,Hkv,NS,G,1]
+    l_s = l[..., :1]
+    m_g = jnp.max(m_s, axis=2, keepdims=True)
+    rescale = jnp.where(l_s > 0, jnp.exp(m_s - m_g), 0.0)
+    l_g = jnp.sum(l_s * rescale, axis=2)                 # [B,Hkv,G,1]
+    o = jnp.sum(acc * rescale, axis=2) / jnp.maximum(l_g, 1e-30)
+    return o[:, :, :g].astype(q.dtype)

@@ -8,13 +8,13 @@ from __future__ import annotations
 
 from typing import Optional, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
 from repro.kernels.block_sparse_decode import (
     block_sparse_decode as _bsd_pallas,
-    block_sparse_decode_paged as _bsd_paged_pallas)
+    block_sparse_decode_paged as _bsd_paged_pallas,
+    block_sparse_decode_paged_splitk as _bsd_splitk_pallas)
 from repro.kernels.gate_gt_fwd import gate_gt_flash_fwd as _gt_pallas
 from repro.kernels.gate_select import (fused_gate_select as _gs_pallas,
                                        fused_gate_select_paged as _gsp_pallas,
@@ -97,6 +97,33 @@ def paged_sparse_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
         return _bsd_paged_pallas(q, k_pages, v_pages, block_indices,
                                  page_table, kv_len, block_size=block_size,
                                  interpret=True)
+    raise ValueError(impl)
+
+
+def paged_sparse_decode_splitk(q: jnp.ndarray, k_pages: jnp.ndarray,
+                               v_pages: jnp.ndarray,
+                               block_indices: jnp.ndarray,
+                               page_table: jnp.ndarray,
+                               kv_len: jnp.ndarray, *, block_size: int,
+                               num_splits: int,
+                               impl: str = "ref") -> jnp.ndarray:
+    """Split-K twin of ``paged_sparse_decode``: the selected list is
+    reduced in ``num_splits`` independent flash partials that merge with a
+    two-pass rescale (``num_splits=1`` is exactly the plain path). Used by
+    the paged x sharded serving composition; see
+    ``block_sparse_decode.block_sparse_decode_paged_splitk``."""
+    if impl == "ref":
+        return _ref.paged_sparse_decode_splitk_ref(
+            q, k_pages, v_pages, block_indices, page_table, kv_len,
+            block_size=block_size, num_splits=num_splits)
+    if impl == "pallas":
+        return _bsd_splitk_pallas(q, k_pages, v_pages, block_indices,
+                                  page_table, kv_len, block_size=block_size,
+                                  num_splits=num_splits)
+    if impl == "pallas_interpret":
+        return _bsd_splitk_pallas(q, k_pages, v_pages, block_indices,
+                                  page_table, kv_len, block_size=block_size,
+                                  num_splits=num_splits, interpret=True)
     raise ValueError(impl)
 
 

@@ -99,6 +99,72 @@ def paged_sparse_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     return o.astype(q.dtype)
 
 
+def paged_sparse_decode_splitk_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
+                                   v_pages: jnp.ndarray,
+                                   block_indices: jnp.ndarray,
+                                   page_table: jnp.ndarray,
+                                   kv_len: jnp.ndarray, *, block_size: int,
+                                   num_splits: int) -> jnp.ndarray:
+    """Split-K twin of ``paged_sparse_decode_ref`` (semantic spec of the
+    Pallas split-K kernel): the selected-block list is split into
+    ``num_splits`` segments, each reduced to an unnormalized flash partial
+    (acc_s, m_s, l_s), and the partials merge with the two-pass rescale
+
+        m = max_s m_s,  l = sum_s l_s e^{m_s - m},
+        o = sum_s acc_s e^{m_s - m} / l.
+
+    ``num_splits=1`` delegates to the plain reference (bitwise identical)
+    so the sharded paged engine can run split-free without changing code
+    path. Selection order inside each split is preserved — only the
+    cross-split reduction is restructured, which is exactly what the
+    paper's num_split kernel does on-chip.
+    """
+    if num_splits <= 1:
+        return paged_sparse_decode_ref(q, k_pages, v_pages, block_indices,
+                                       page_table, kv_len,
+                                       block_size=block_size)
+    b, hkv, g, dh = q.shape
+    ps = k_pages.shape[2]
+    assert ps == block_size, (ps, block_size)
+    nsel = block_indices.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    per = -(-nsel // num_splits)
+    pad = per * num_splits - nsel
+    bi = block_indices
+    if pad:
+        bi = jnp.concatenate(
+            [bi, jnp.full((b, hkv, pad), -1, bi.dtype)], axis=-1)
+    bi = bi.reshape(b, hkv, num_splits, per)
+    idx = jnp.maximum(bi, 0)
+
+    npt = page_table.shape[1]
+    pt = jnp.broadcast_to(page_table[:, None, None, :],
+                          (b, hkv, num_splits, npt))
+    phys = jnp.take_along_axis(pt, idx, axis=3)          # [B,Hkv,NS,per]
+    har = jnp.arange(hkv)[None, :, None, None]
+    kg = k_pages[phys, har].reshape(b, hkv, num_splits, per * ps, dh)
+    vg = v_pages[phys, har].reshape(b, hkv, num_splits, per * ps, dh)
+
+    pos = idx[..., None] * ps + jnp.arange(ps)           # [B,Hkv,NS,per,ps]
+    valid = (bi[..., None] >= 0) \
+        & (pos < kv_len[:, None, None, None, None])
+    valid = valid.reshape(b, hkv, num_splits, 1, per * ps)
+    sc = jnp.einsum("bhgd,bhskd->bhsgk", q.astype(jnp.float32),
+                    kg.astype(jnp.float32)) * scale
+    sc = jnp.where(valid, sc, NEG_INF)
+
+    m_s = jnp.max(sc, axis=-1, keepdims=True)            # [B,Hkv,NS,G,1]
+    p = jnp.where(sc > NEG_INF / 2, jnp.exp(sc - m_s), 0.0)
+    l_s = jnp.sum(p, axis=-1, keepdims=True)
+    acc_s = jnp.einsum("bhsgk,bhskd->bhsgd", p, vg.astype(jnp.float32))
+
+    m = jnp.max(m_s, axis=2, keepdims=True)              # over splits
+    rescale = jnp.where(l_s > 0, jnp.exp(m_s - m), 0.0)
+    l = jnp.sum(l_s * rescale, axis=2)                   # [B,Hkv,G,1]
+    o = jnp.sum(acc_s * rescale, axis=2) / jnp.maximum(l, 1e-30)
+    return o.astype(q.dtype)
+
+
 def dense_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                      kv_len: jnp.ndarray) -> jnp.ndarray:
     """Dense counterpart with the same head-major layout (baseline).

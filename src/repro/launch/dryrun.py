@@ -23,7 +23,7 @@ import re
 import sys
 import time
 import traceback
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 

@@ -133,7 +133,7 @@ def cell_fn_and_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
 
     if shape.kind == "decode":
         import os
-        from repro.core.policy import DecodeOptions, default_options
+        from repro.core.policy import default_options
         # telemetry off: the dry-run probes cost the decode DATA PATH,
         # matching the bench_decode hot-path discipline
         opts = default_options(cfg).replace(

@@ -7,7 +7,6 @@ at the launch layer by path-name pattern rules (repro.distributed.sharding).
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, Optional, Tuple
 
 import jax

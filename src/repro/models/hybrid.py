@@ -193,7 +193,6 @@ def lm_decode_step(params: Params, state: HybridDecodeState, token, cfg,
     from repro.core.policy import default_options
     options = options if options is not None else default_options(cfg)
     n_units, period, rem = _plan(cfg)
-    b = token.shape[0]
     x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
 
     def mamba_step_scan(x1, inp):

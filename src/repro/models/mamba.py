@@ -10,7 +10,7 @@ recurrent decode with O(1) state.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -128,7 +128,6 @@ def mamba1_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
 def mamba1_step(p: Params, x1: jnp.ndarray, cfg: ModelConfig,
                 conv_state: jnp.ndarray, h: jnp.ndarray):
     """x1 [B, 1, d]; conv_state [B, K-1, di]; h [B, di, n]."""
-    bsz = x1.shape[0]
     d = x1.shape[-1]
     n = cfg.ssm.state_dim
     dtr = _dt_rank(d)
@@ -257,7 +256,6 @@ def mamba2_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
 def mamba2_step(p: Params, x1: jnp.ndarray, cfg: ModelConfig,
                 conv_state: jnp.ndarray, h: jnp.ndarray):
     bsz = x1.shape[0]
-    d = x1.shape[-1]
     di, hd, nh, n = _m2_dims(cfg)
     zxbcdt = linear(p["in_proj"], x1)[:, 0]
     z, xs_raw, bc_raw, dt_in = jnp.split(

@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import MoEConfig
-from repro.models.common import init_linear, init_glu_mlp, glu_mlp
+from repro.models.common import init_glu_mlp, glu_mlp
 
 Params = Dict[str, Any]
 ShardFn = Optional[Callable[[jnp.ndarray, str], jnp.ndarray]]

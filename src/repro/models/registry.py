@@ -22,7 +22,9 @@ class ModelApi(NamedTuple):
     #                                 -> (logits, state, aux)
     # continuous-batching paged decode (serve.paging); None = unsupported
     # (params, pages, token, page_table, cur_len, active, cfg, *, options,
-    #  budget_blocks) -> (logits, pages, aux)
+    #  budget_blocks, shard) -> (logits, pages, aux); a mesh-aware `shard`
+    # with options.kernel_impl='sharded' takes the paged x sharded path
+    # (pools head-sharded over 'model', page table replicated)
     decode_step_paged: Any = None
 
 

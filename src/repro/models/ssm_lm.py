@@ -5,7 +5,7 @@ long_500k decode is native. Layers scanned like the transformer stack.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple
 
 import jax
 import jax.numpy as jnp

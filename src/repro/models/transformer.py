@@ -14,7 +14,6 @@ Modes:
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
@@ -621,7 +620,7 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
 def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                            k_pages, v_pages, kg_pages, page_table, cur_len,
                            active, options: DecodeOptions,
-                           budget_blocks=None):
+                           budget_blocks=None, shard=None):
     """One token over paged KV. x1 [S,1,d]; pools for ONE layer HEAD-MAJOR
     [P, Hkv, ps, Dh]; page_table [S, npt]; cur_len/active [S] per-slot.
 
@@ -634,7 +633,13 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
     selected list post-hoc — the per-request budget override; forced
     first/last blocks rank ahead of every scored block, so any cap >= the
     forced count preserves them. Rows with ``active == False`` (empty
-    decode slots) write to the null page and do not advance."""
+    decode slots) write to the null page and do not advance.
+
+    ``options.kernel_impl='sharded'`` with a mesh-aware ``shard`` takes
+    the paged x sharded path (serve.sharded.sharded_paged_decode): pools
+    sharded over kv heads, page table replicated, zero per-step
+    collectives — bitwise equal to the unsharded paged step. Requires the
+    gate policy; ungated/dense slots fall through to the local paths."""
     b = x1.shape[0]
     dh, hkv, g = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.gqa_group
     ps = cfg.gate.block_size
@@ -645,6 +650,32 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
     pos = cur_len[:, None]                                 # [S,1]
     qr = apply_rope(q, pos, cfg.rope_theta)
     kr = apply_rope(k, pos, cfg.rope_theta)
+
+    mesh = getattr(shard, "mesh", None)
+    if sparse_on and options.kernel_impl == "sharded" and mesh is None:
+        # fail at trace time with an actionable message instead of a bare
+        # ValueError('sharded') from the kernel dispatch deep in the step
+        raise ValueError(
+            "kernel_impl='sharded' on the paged path needs a mesh-aware "
+            "engine: construct DecodeEngine(..., shard=make_shard_fn(mesh))")
+    if sparse_on and options.kernel_impl == "sharded" and policy.needs_gate \
+            and "gate" in p:
+        from repro.serve.sharded import sharded_paged_decode
+        qg = ag.gate_q(p["gate"], q_nope, pos, cfg.gate)[:, 0]  # [S,Hkv,Dg]
+        qgrp = qr[:, 0].reshape(b, hkv, g, dh)
+        o, k_pages, v_pages, kg_pages, idx = sharded_paged_decode(
+            qg, qgrp, kr[:, 0], v[:, 0], k_pages, v_pages, kg_pages,
+            page_table, cur_len, active, p["gate"]["wk"], mesh=mesh,
+            cfg=cfg.gate, rope_theta=cfg.rope_theta,
+            max_selected=options.max_selected(cfg),
+            budget_blocks=budget_blocks, split_k=options.split_k,
+            inner_impl="pallas" if cfg.use_pallas else "ref")
+        new_len = cur_len + active.astype(jnp.int32)
+        aux = (_selection_aux(idx, kc.visible_blocks(
+                   jnp.maximum(new_len, 1), ps), page_table.shape[1])
+               if options.measure_sparsity else _zero_layer_aux(b))
+        out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
+        return out, (k_pages, v_pages, kg_pages), aux
 
     from repro.serve import paging as pg
     # mirror the contiguous path: the Kg page rows only advance for the
@@ -686,13 +717,15 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
 
 def block_decode_paged(p: Params, x1, cfg: ModelConfig, layer_pages,
                        page_table, cur_len, active, *,
-                       options: DecodeOptions, budget_blocks=None):
+                       options: DecodeOptions, budget_blocks=None,
+                       shard=None):
     k_pages, v_pages, kg_pages = layer_pages
     h = rms_norm(p["ln1"], x1, cfg.norm_eps)
     attn_out, new_pages, aux = attention_decode_paged(
         p["attn"], h, cfg, k_pages=k_pages, v_pages=v_pages,
         kg_pages=kg_pages, page_table=page_table, cur_len=cur_len,
-        active=active, options=options, budget_blocks=budget_blocks)
+        active=active, options=options, budget_blocks=budget_blocks,
+        shard=shard)
     x1 = x1 + attn_out
     h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
     if "moe" in p:
@@ -709,7 +742,7 @@ def lm_decode_step_paged(params: Params, pages, token: jnp.ndarray,
                          page_table: jnp.ndarray, cur_len: jnp.ndarray,
                          active: jnp.ndarray, cfg: ModelConfig, *,
                          options: Optional[DecodeOptions] = None,
-                         budget_blocks=None):
+                         budget_blocks=None, shard=None):
     """Continuous-batching decode step. token/cur_len/active [n_slots];
     pages is a ``serve.paging.PagedPages`` (layer-stacked pools);
     page_table [n_slots, npt]; ``budget_blocks`` [n_slots] (optional,
@@ -718,7 +751,10 @@ def lm_decode_step_paged(params: Params, pages, token: jnp.ndarray,
 
     Inactive rows produce garbage logits (the engine masks them) but do
     not touch live pages or advance — per-row raggedness is carried by
-    ``cur_len``/``active`` rather than a uniform batch length."""
+    ``cur_len``/``active`` rather than a uniform batch length. A
+    mesh-aware ``shard`` plus ``options.kernel_impl='sharded'`` runs the
+    paged x sharded path (pools head-sharded, see
+    ``attention_decode_paged``)."""
     if cfg.cross_attn_period:
         raise NotImplementedError("paged decode: cross-attn families TBD")
     options = options if options is not None else default_options(cfg)
@@ -729,7 +765,7 @@ def lm_decode_step_paged(params: Params, pages, token: jnp.ndarray,
         layer_p, layer_pages = inp
         y, new_pages, aux = block_decode_paged(
             layer_p, x1, cfg, layer_pages, page_table, cur_len, active,
-            options=options, budget_blocks=budget_blocks)
+            options=options, budget_blocks=budget_blocks, shard=shard)
         return y, (new_pages, aux)
 
     x1, (new_pages, auxs) = layer_scan(self_scan, x1,

@@ -12,7 +12,6 @@ Gradient compression hooks (distributed-optimization knob):
 """
 from __future__ import annotations
 
-import math
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

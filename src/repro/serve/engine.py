@@ -10,7 +10,11 @@ policy, budget/threshold selection, block-sparse decode kernel):
   * ``serve(requests)`` — continuous batching over a PAGED KV cache
     (serve.paging + serve.scheduler): iteration-level admission into free
     decode slots, per-row ragged lengths, retirement + page recycling the
-    moment a request finishes. The K-compression cache pages alongside
+    moment a request finishes. Pages are allocated LAZILY as decode
+    crosses page boundaries (admission governed by current occupancy, not
+    worst-case length) and pool exhaustion preempts the least-progressed
+    request to host swap space instead of stalling — see ``serve()``'s
+    ``admission`` parameter. The K-compression cache pages alongside
     the raw KV (page size == gate block size), so gate state can never
     desync from the cache under admission/eviction churn.
 
@@ -28,7 +32,7 @@ from __future__ import annotations
 
 import functools
 import time
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +43,7 @@ from repro.core.policy import DecodeOptions, default_options
 from repro.models.registry import get_api
 from repro.serve import paging as pg
 from repro.serve import sampling as smp
+from repro.serve.offload import HostSwapSpace, SwapEntry
 from repro.serve.scheduler import Request, Scheduler, pages_needed
 
 
@@ -65,6 +70,11 @@ class DecodeEngine:
         self._step = jax.jit(functools.partial(
             self._decode_step, options=self.options), donate_argnums=(1,))
         self._paged_step = None     # built lazily on first serve()
+        # serve()-path prefill, jitted per distinct prompt length (compiling
+        # is cheaper than ONE eager trace at any scale and cached calls are
+        # ~1000x faster; length BUCKETING to bound the cache is the known
+        # ROADMAP follow-up)
+        self._prefill_jit: Dict[int, Any] = {}
         self._last_aux = None       # measured selection of the latest step
         self._last_active = None    # serve(): slots active during that step
 
@@ -128,7 +138,8 @@ class DecodeEngine:
               n_slots: int = 4, num_pages: Optional[int] = None,
               collect_logits: bool = False,
               max_steps: Optional[int] = None,
-              sample_seed: int = 0) -> ServeResult:
+              sample_seed: int = 0, admission: str = "lazy",
+              watermark: int = 0) -> ServeResult:
         """Continuous-batching decode over a paged KV cache.
 
         requests: each ``{"tokens": 1-D int array, "max_new_tokens": int}``
@@ -137,15 +148,25 @@ class DecodeEngine:
         and ``"budget"`` (token budget, applied as a runtime per-slot mask
         over the selected-block list; floored so the force-selected
         first/last blocks survive, and a cap beyond the compiled selection
-        width is naturally a no-op). Admission is FIFO; a request's full
-        page budget is reserved up-front so running requests never stall
-        on an empty free list.
+        width is naturally a no-op). Admission is FIFO.
+
+        ``admission`` picks the page-allocation policy (ISSUE 4):
+        ``"lazy"`` (default) admits on CURRENT occupancy (prompt pages
+        only), grows each slot's page list on demand as decode crosses
+        page boundaries, and — when the pool runs dry — PREEMPTS the
+        active request with the fewest generated tokens: its pages are
+        swapped to a host buffer (serve.offload.HostSwapSpace) and the
+        request is re-admitted later with its pages restored, resuming
+        bitwise-identically. ``watermark`` pages are held back from lazy
+        admission as growth headroom. ``"reserve"`` is the PR-1 upfront
+        full-lifetime reservation (no growth, no preemption).
 
         Returns ``ServeResult``: rid -> generated token ids (length
         ``max_new_tokens``), ``res["stats"]`` has throughput, scheduler
-        telemetry and measured per-request sparsity, and ``res["logits"]``
-        (rid -> [n, V] fp32, prefill token included) when
-        ``collect_logits``.
+        telemetry (incl. preemption/swap counters and clean-vs-preempted
+        retirements) and measured per-request sparsity, and
+        ``res["logits"]`` (rid -> [n, V] fp32, prefill token included)
+        when ``collect_logits``.
         """
         cfg = self.cfg
         if self.api.decode_step_paged is None:
@@ -178,7 +199,9 @@ class DecodeEngine:
         if num_pages is None:
             # enough for every slot to hold a worst-case sequence (+null)
             num_pages = n_slots * npt + 1
-        sched = Scheduler(n_slots, num_pages, ps, npt)
+        sched = Scheduler(n_slots, num_pages, ps, npt,
+                          admission=admission, watermark=watermark)
+        swap = HostSwapSpace()
         for r in reqs:
             sched.submit(r)
 
@@ -225,37 +248,109 @@ class DecodeEngine:
         # layer count from the stacked params (leading dim of any leaf)
         nl = jax.tree.leaves(self.params["blocks"])[0].shape[0]
         pages = pg.init_pages(cfg, num_pages, nl)
+        mesh = getattr(self.shard, "mesh", None)
+        if mesh is not None and self.options.kernel_impl == "sharded":
+            # paged x sharded: keep the pools resident head-sharded so the
+            # per-step shard_map never reshards pool-sized arrays
+            from jax.sharding import NamedSharding
+            from repro.distributed.sharding import paged_pool_pspecs
+            pages = jax.device_put(pages, jax.tree.map(
+                lambda s: NamedSharding(mesh, s),
+                paged_pool_pspecs(pages, mesh)))
         if self._paged_step is None:   # one jit per engine: repeat serve()
             self._paged_step = jax.jit(functools.partial(
-                self.api.decode_step_paged, cfg=cfg, options=self.options),
-                donate_argnums=(1,))
+                self.api.decode_step_paged, cfg=cfg, options=self.options,
+                shard=self.shard), donate_argnums=(1,))
         step = self._paged_step
 
         token_buf = np.zeros((n_slots,), np.int32)
         rho_sum: Dict[Any, float] = {r.rid: 0.0 for r in reqs}
         sel_sum: Dict[Any, float] = {r.rid: 0.0 for r in reqs}
         rho_n: Dict[Any, int] = {r.rid: 0 for r in reqs}
+        active_sum = active_max = idle_spins = 0
         n_steps = 0
         t0 = time.perf_counter()
         limit = max_steps if max_steps is not None else sum(
             r.max_new_tokens for r in reqs) + len(reqs) + 8
+
+        def swap_out(req: Request) -> None:
+            """Preemption callback: capture the victim's device pages (and
+            its pending token) into host swap space BEFORE they are freed.
+            ``req.pages`` is in logical order, so restore is a plain
+            scatter. Only CONTENT pages are captured — a growth page
+            allocated for the not-yet-written next token is dropped (it is
+            empty; re-admission re-grows it), keeping the swap footprint
+            equal to what re-admission will allocate."""
+            n_content = max(1, -(-req.swap_len // ps))
+            # power-of-two id padding (trash-page ids): bounds the jit
+            # cache of extract/restore to O(log pool) programs; re-admission
+            # pads the same n_content to the same bucket, so shapes match
+            k, v, kg = pg.extract_pages(
+                pages, pg.pad_page_ids(req.pages[:n_content]))
+            swap.put(req.rid, SwapEntry(
+                k=np.asarray(k), v=np.asarray(v),
+                kg=None if kg is None else np.asarray(kg),
+                token=int(token_buf[req.slot]), cur_len=req.swap_len))
+
+        # recycled pages may hold a previous tenant's Kg row; the
+        # staleness contract needs a ZERO row on every partial trailing
+        # page. Freed pages are tracked in `dirty` and zeroed in one
+        # batched call per release iteration (cheap), so the per-step
+        # growth path almost never pays a device dispatch: admission
+        # reuse is cleaned by scatter_prefill/restore anyway, and growth
+        # only re-zeroes a page freed by a preemption in the SAME
+        # iteration (LIFO reuse before the end-of-iteration sweep).
+        dirty: set = set()
+        # reserve admission never grows: every reuse goes through
+        # scatter_prefill (which zeroes the Kg rows itself) — no sweeps
+        gate_paged = pages.kg_pages is not None and admission == "lazy"
+
+        def sweep_dirty(ids) -> None:
+            nonlocal pages, dirty
+            if ids and gate_paged:
+                pages = pg.reset_kg_rows(pages, pg.pad_page_ids(sorted(ids)))
+            dirty.difference_update(ids)
+
         while sched.has_work():
             for req in sched.admissions():
-                pages, lg = self._paged_prefill(pages, req, ps)
-                first = sample_slot(req, lg)
-                req.out_tokens.append(first)
-                if collect_logits:
-                    req.out_logits.append(lg)
-                token_buf[req.slot] = first
+                if req.swapped:            # resume: restore, don't prefill
+                    entry = swap.pop(req.rid)
+                    pages = pg.restore_pages(
+                        pages, jnp.asarray(entry.k), jnp.asarray(entry.v),
+                        None if entry.kg is None else jnp.asarray(entry.kg),
+                        pg.pad_page_ids(req.pages))
+                    token_buf[req.slot] = entry.token
+                    req.swapped = False
+                else:
+                    pages, lg = self._paged_prefill(pages, req, ps)
+                    first = sample_slot(req, lg)
+                    req.out_tokens.append(first)
+                    if collect_logits:
+                        req.out_logits.append(lg)
+                    token_buf[req.slot] = first
+                dirty.difference_update(req.pages)   # content written
                 if budget_blocks is not None:
                     budget_blocks[req.slot] = slot_cap(req.rid)
                 sched.retire_if_done(req)
+            fresh = sched.prepare_step(swap_out)   # lazy growth + preemption
+            dirty.update(sched.drain_released())
+            sweep_dirty([p for p in fresh if p in dirty])
             if not sched.active.any():
-                if sched.pending:       # pool too fragmented to admit
+                if not sched.pending:
+                    break
+                # preemption may have just vacated every slot while freeing
+                # its pages — loop back through admissions once before
+                # declaring a stall
+                idle_spins += 1
+                if idle_spins > 1:
                     raise RuntimeError(
                         "scheduler stalled: pending requests but no active "
                         "slots and admission failed")
-                break
+                continue
+            idle_spins = 0
+            active_now = int(sched.active.sum())
+            active_sum += active_now
+            active_max = max(active_max, active_now)
             slot_reqs = list(sched.slots)   # before retirement mutates it
             logits, pages, aux = step(self.params, pages,
                                       jnp.asarray(token_buf),
@@ -288,6 +383,8 @@ class DecodeEngine:
                     sel_sum[rid] += float(sel_rows[slot])
                     rho_n[rid] += 1
             sched.complete_step(nxt, lg_np if collect_logits else None)
+            dirty.update(sched.drain_released())   # retirements this step
+            sweep_dirty(set(dirty))
             token_buf = np.where(sched.active, nxt, 0).astype(np.int32)
             n_steps += 1
             if n_steps > limit:
@@ -304,13 +401,29 @@ class DecodeEngine:
         # slot_util over DECODE-step tokens only (each admission's first
         # token comes from prefill, not from a decode slot)
         decode_toks = gen_toks - sched.n_admitted
+        # "retired" counts every finished request; requests that were
+        # preempted at least once along the way are broken out separately
+        # (ISSUE 4 bugfix: the two used to be indistinguishable)
+        retired_preempted = sum(1 for r in sched.finished.values()
+                                if r.n_preemptions > 0)
         out["stats"] = {
             "wall_s": wall, "decode_steps": n_steps,
             "generated_tokens": gen_toks,
             "tok_per_s": gen_toks / max(wall, 1e-9),
             "slot_util": decode_toks / max(n_steps * n_slots, 1),
             "admitted": sched.n_admitted, "retired": sched.n_retired,
+            "retired_clean": sched.n_retired - retired_preempted,
+            "retired_preempted": retired_preempted,
             "admission_stalls": sched.admission_stalls,
+            "admission": admission, "watermark": watermark,
+            "preemptions": sched.n_preemptions,
+            "resumed": sched.n_resumed,
+            "swapped_out_bytes": swap.bytes_out,
+            "swapped_in_bytes": swap.bytes_in,
+            "mean_active_slots": active_sum / max(n_steps, 1),
+            "max_active_slots": active_max,
+            "peak_pages_used": (sched.allocator.num_pages - 1
+                                - sched.allocator.min_free),
             "num_pages": num_pages, "page_size": ps,
             # measured per-request selection telemetry (decode steps only;
             # empty — not zero — when telemetry is compiled out)
@@ -325,14 +438,20 @@ class DecodeEngine:
         """Contiguous prefill of one request, scattered into its pages.
 
         max_len is the page-aligned prompt length so the cache slices
-        reshape into whole pages; the reservation's remaining pages only
-        receive their (zeroed) Kg rows here — their K/V fill during
-        decode. Returns (pages, fp32 logits row) — the caller samples."""
+        reshape into whole pages. Any pages beyond the prompt (upfront
+        ``reserve`` admission) only receive their (zeroed) Kg rows here —
+        their K/V fill during decode; under ``lazy`` admission the page
+        list covers exactly the prompt, and growth pages get their Kg rows
+        zeroed at allocation time (``pg.reset_kg_rows``). Returns
+        (pages, fp32 logits row) — the caller samples."""
         plen = req.prompt_len
         n_prompt = -(-plen // ps)
-        logits, cstate = self.api.prefill(
-            self.params, {"tokens": jnp.asarray(req.prompt)[None]},
-            self.cfg, n_prompt * ps)
+        fn = self._prefill_jit.get(plen)
+        if fn is None:
+            fn = self._prefill_jit[plen] = jax.jit(functools.partial(
+                self.api.prefill, cfg=self.cfg, max_len=n_prompt * ps))
+        logits, cstate = fn(self.params,
+                            {"tokens": jnp.asarray(req.prompt)[None]})
         pages = pg.scatter_prefill(
             pages, cstate.k_cache, cstate.v_cache, cstate.kg_cache, plen,
             jnp.asarray(req.pages, jnp.int32), ps)

@@ -1,10 +1,16 @@
-"""KV-cache offload economics (paper §3.2 / §6.1).
+"""KV-cache offload economics (paper §3.2 / §6.1) + preemption swap space.
 
 The K-compression cache is <1% of the KV cache (b=64, d_gate=128), so it
 can stay in HBM while the full KV cache lives in host memory: per decode
 step only the gate runs on-chip and only the SELECTED blocks are fetched
 over PCIe/DMA. This module gives the derived cost model (the decision
 surface for when offload wins) and a functional simulator used in tests.
+
+``HostSwapSpace`` is the host-side buffer the paged serving engine swaps
+preempted requests' pages into (ISSUE 4): page contents (K/V/Kg), the
+request's last sampled token and its current length, keyed by request id.
+The same PCIe cost model above prices a swap: one page round trip costs
+``2 * ps * Hkv * Dh * bytes`` each way at PCIE_BW.
 
 Derived model per token (one layer, one sequence):
   on-chip   : kv_read = 2*budget*Hkv*Dh*bytes     @ HBM_BW
@@ -14,12 +20,12 @@ Derived model per token (one layer, one sequence):
 """
 from __future__ import annotations
 
-import math
-from typing import Dict, NamedTuple
+from typing import Dict, NamedTuple, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.config import GateConfig, ModelConfig
+from repro.config import ModelConfig
 
 HBM_BW = 819e9
 PCIE_BW = 32e9          # host<->device, ~PCIe gen4 x16 effective
@@ -73,3 +79,54 @@ class OffloadedKV(NamedTuple):
         n = int(block_indices.shape[-1])
         return k_sel, v_sel, self._replace(
             fetched_blocks=self.fetched_blocks + n)
+
+
+class SwapEntry(NamedTuple):
+    """One preempted request's host-resident state: page contents in
+    LOGICAL page order plus the bits needed to resume decode exactly where
+    it stopped."""
+    k: np.ndarray                 # [L, n_pages, Hkv, ps, Dh]
+    v: np.ndarray                 # [L, n_pages, Hkv, ps, Dh]
+    kg: Optional[np.ndarray]      # [L, n_pages, Hkv, Dg] | None
+    token: int                    # last sampled token (re-fed on resume)
+    cur_len: int                  # sequence length at preemption
+
+
+class HostSwapSpace:
+    """Host buffer for preempted requests' pages (one entry per rid).
+
+    The serving engine ``put``s a SwapEntry at preemption (after
+    device_get) and ``pop``s it at re-admission; byte counters feed the
+    swap telemetry in ``DecodeEngine.serve()`` stats.
+    """
+
+    def __init__(self):
+        self._entries: Dict[int, SwapEntry] = {}
+        self.swapped_out = 0
+        self.swapped_in = 0
+        self.bytes_out = 0
+        self.bytes_in = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, rid) -> bool:
+        return rid in self._entries
+
+    @staticmethod
+    def _nbytes(e: SwapEntry) -> int:
+        return (e.k.nbytes + e.v.nbytes
+                + (e.kg.nbytes if e.kg is not None else 0))
+
+    def put(self, rid, entry: SwapEntry) -> None:
+        if rid in self._entries:
+            raise ValueError(f"rid {rid} already swapped out")
+        self._entries[rid] = entry
+        self.swapped_out += 1
+        self.bytes_out += self._nbytes(entry)
+
+    def pop(self, rid) -> SwapEntry:
+        entry = self._entries.pop(rid)
+        self.swapped_in += 1
+        self.bytes_in += self._nbytes(entry)
+        return entry

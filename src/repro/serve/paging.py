@@ -32,7 +32,7 @@ force-selects the trailing block, exactly like the contiguous engine.
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, List, NamedTuple, Optional, Sequence, Tuple
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -177,7 +177,9 @@ class PageAllocator:
 
     Page 0 (NULL_PAGE) is reserved. Allocation is LIFO over the free list
     so freshly-freed pages are reused first (cache-warm + makes free-list
-    reuse observable in tests).
+    reuse observable in tests). ``min_free`` records the low-watermark of
+    the free list over the allocator's lifetime (peak-occupancy telemetry
+    for the serving stats).
     """
 
     def __init__(self, num_pages: int):
@@ -185,6 +187,7 @@ class PageAllocator:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
         self.num_pages = num_pages
         self._free: List[int] = list(range(num_pages - 1, 0, -1))
+        self.min_free = len(self._free)
 
     @property
     def num_free(self) -> int:
@@ -195,6 +198,7 @@ class PageAllocator:
         if n > len(self._free):
             return None
         out = [self._free.pop() for _ in range(n)]
+        self.min_free = min(self.min_free, len(self._free))
         return out
 
     def free(self, ids: Sequence[int]) -> None:
@@ -204,3 +208,70 @@ class PageAllocator:
             if i in self._free:
                 raise ValueError(f"double free of page {i}")
             self._free.append(int(i))
+
+
+# ---------------------------------------------------------------------------
+# lazy allocation + preemption/swap device helpers (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def pad_page_ids(ids: Sequence[int], *, min_len: int = 1) -> jnp.ndarray:
+    """Pad a host-side page-id list to the next power-of-two length with
+    NULL_PAGE, so the jitted page helpers below compile O(log pool)
+    distinct programs instead of one per distinct page count. Page 0 is
+    the trash page: reading its rows is harmless and writes to it are
+    discarded by design, so the padding ids are semantically inert."""
+    n = max(len(ids), min_len)
+    bucket = 1 << (n - 1).bit_length()
+    return jnp.asarray(list(ids) + [NULL_PAGE] * (bucket - len(ids)),
+                       jnp.int32)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def reset_kg_rows(pages: PagedPages, page_ids: jnp.ndarray) -> PagedPages:
+    """Zero the Kg rows of freshly (lazily) allocated pages.
+
+    A recycled physical page still holds the previous tenant's Kg entry;
+    under upfront reservation ``scatter_prefill`` zeroed every reserved
+    page's row at admission, so lazy growth must do the same at allocation
+    time to keep the staleness contract (a partial trailing page reads a
+    ZERO row, exactly like the contiguous cache). K/V page contents need no
+    reset: every read is masked by the logical ``kv_len``.
+    """
+    if pages.kg_pages is None:
+        return pages
+    kg = pages.kg_pages.at[:, page_ids].set(0.0)
+    return pages._replace(kg_pages=kg)
+
+
+@jax.jit
+def extract_pages(pages: PagedPages, page_ids: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray]]:
+    """Gather one request's pages for swap-out (preemption).
+
+    page_ids [n] physical ids in LOGICAL order -> (k [L,n,Hkv,ps,Dh],
+    v [L,n,Hkv,ps,Dh], kg [L,n,Hkv,Dg] | None). The caller device_gets the
+    result into the host swap space (serve.offload.HostSwapSpace).
+    """
+    k = pages.k_pages[:, page_ids]
+    v = pages.v_pages[:, page_ids]
+    kg = pages.kg_pages[:, page_ids] if pages.kg_pages is not None else None
+    return k, v, kg
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def restore_pages(pages: PagedPages, k: jnp.ndarray, v: jnp.ndarray,
+                  kg: Optional[jnp.ndarray],
+                  page_ids: jnp.ndarray) -> PagedPages:
+    """Scatter swapped-out page contents into a fresh set of physical
+    pages (re-admission after preemption). The new physical ids may differ
+    from the original ones — decode math is placement-invariant (every
+    access goes through the page table), so the round trip is bitwise
+    lossless."""
+    k_pages = pages.k_pages.at[:, page_ids].set(
+        k.astype(pages.k_pages.dtype))
+    v_pages = pages.v_pages.at[:, page_ids].set(
+        v.astype(pages.v_pages.dtype))
+    kg_pages = pages.kg_pages
+    if kg_pages is not None and kg is not None:
+        kg_pages = kg_pages.at[:, page_ids].set(kg.astype(kg_pages.dtype))
+    return PagedPages(k_pages, v_pages, kg_pages)

@@ -5,13 +5,30 @@ decode SLOTS (rows of the jitted batched step) and a page pool. Each
 engine iteration:
 
   1. ``admissions()`` — pop pending requests FIFO into free slots while
-     the allocator can reserve their full page budget
-     (ceil((prompt + max_new) / page_size); upfront reservation means a
-     running request can never stall mid-stream on an empty free list —
-     admission control is the single backpressure point).
-  2. run the batched decode step over all slots (inactive rows are
+     the allocator can satisfy their ADMISSION page need. Two admission
+     policies (ISSUE 4 — the binding default is lazy):
+       * ``"lazy"`` (default): reserve only the pages the request holds
+         RIGHT NOW (prompt pages, or the swapped page set on resume);
+         further pages are allocated on demand as ``cur_len`` crosses a
+         page boundary (``prepare_step``). Admission is governed by
+         current occupancy, so the sustained admitted batch is bounded by
+         live KV, not worst-case length. A ``watermark`` of free pages can
+         be held back from admission as growth headroom.
+       * ``"reserve"``: the PR-1 behavior — reserve the full lifetime
+         budget up-front (ceil((prompt + max_new - 1) / page_size)); a
+         running request can never stall, admission control is the single
+         backpressure point. Kept as the comparison baseline
+         (benchmarks.run --only serve) and for latency-critical tenants.
+  2. ``prepare_step()`` — lazy mode only: append a page to every active
+     slot whose next token write crosses into an unallocated page. When
+     the pool is exhausted, PREEMPT the active request with the fewest
+     generated tokens (ties broken by lowest slot — deterministic): its
+     pages are swapped out via the engine-provided callback, freed, and
+     the request is pushed to the FRONT of the pending queue for
+     re-admission with page restore.
+  3. run the batched decode step over all slots (inactive rows are
      masked inside the model via ``active``).
-  3. ``complete_step()`` — append sampled tokens, advance per-slot
+  4. ``complete_step()`` — append sampled tokens, advance per-slot
      lengths, retire finished requests and free their pages.
 
 The page table / cur_len / active arrays live here as host numpy and are
@@ -22,11 +39,13 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
 from repro.serve.paging import NULL_PAGE, PageAllocator
+
+ADMISSION_MODES = ("lazy", "reserve")
 
 
 @dataclasses.dataclass
@@ -39,6 +58,11 @@ class Request:
     out_logits: List[np.ndarray] = dataclasses.field(default_factory=list)
     slot: int = -1
     pages: List[int] = dataclasses.field(default_factory=list)
+    # preemption/swap state (lazy admission): set by ``_preempt``, cleared
+    # by the engine once the page contents are restored
+    swapped: bool = False
+    swap_len: int = 0                # cur_len at preemption
+    n_preemptions: int = 0
 
     @property
     def prompt_len(self) -> int:
@@ -47,6 +71,11 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.out_tokens) >= self.max_new_tokens
+
+    def pages_held(self, page_size: int) -> int:
+        """Pages needed to hold the request's CURRENT content."""
+        length = self.swap_len if self.swapped else self.prompt_len
+        return max(1, -(-length // page_size))
 
 
 def pages_needed(prompt_len: int, max_new_tokens: int, page_size: int) -> int:
@@ -58,10 +87,18 @@ def pages_needed(prompt_len: int, max_new_tokens: int, page_size: int) -> int:
 
 class Scheduler:
     def __init__(self, n_slots: int, num_pages: int, page_size: int,
-                 max_pages_per_seq: int):
+                 max_pages_per_seq: int, *, admission: str = "lazy",
+                 watermark: int = 0):
+        if admission not in ADMISSION_MODES:
+            raise ValueError(f"admission {admission!r} not in "
+                             f"{ADMISSION_MODES}")
+        if watermark < 0:
+            raise ValueError(f"watermark must be >= 0: {watermark}")
         self.n_slots = n_slots
         self.page_size = page_size
         self.max_pages_per_seq = max_pages_per_seq
+        self.admission = admission
+        self.watermark = watermark
         self.allocator = PageAllocator(num_pages)
         self.page_table = np.full((n_slots, max_pages_per_seq), NULL_PAGE,
                                   np.int32)
@@ -70,9 +107,15 @@ class Scheduler:
         self.slots: List[Optional[Request]] = [None] * n_slots
         self.pending: Deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
+        # pages freed since the engine last drained (retire/preempt) —
+        # the engine zeroes their Kg rows before the free list re-issues
+        # them (one batched device call per release, not per growth)
+        self.released: List[int] = []
         # telemetry
-        self.n_admitted = 0
+        self.n_admitted = 0                # fresh admissions (prefills)
+        self.n_resumed = 0                 # swap-in re-admissions
         self.n_retired = 0
+        self.n_preemptions = 0
         self.admission_stalls = 0          # steps a head-of-line req waited
 
     # -- submission ---------------------------------------------------------
@@ -100,11 +143,21 @@ class Scheduler:
 
     # -- admission ----------------------------------------------------------
 
+    def _admission_need(self, req: Request) -> int:
+        if self.admission == "reserve":
+            return pages_needed(req.prompt_len, req.max_new_tokens,
+                                self.page_size)
+        return req.pages_held(self.page_size)
+
     def admissions(self) -> List[Request]:
         """Admit pending requests FIFO into free slots while pages last.
 
         FIFO with head-of-line blocking: a stuck large request is not
         overtaken by smaller ones (latency fairness, deterministic tests).
+        Returned requests with ``swapped=True`` are RESUMES — the engine
+        must restore their page contents instead of prefilling. In lazy
+        mode admission additionally keeps ``watermark`` pages free as
+        growth headroom for already-running requests.
         """
         out: List[Request] = []
         while self.pending:
@@ -113,9 +166,17 @@ class Scheduler:
             if slot < 0:
                 break
             req = self.pending[0]
-            need = pages_needed(req.prompt_len, req.max_new_tokens,
-                                self.page_size)
-            ids = self.allocator.alloc(need)
+            need = self._admission_need(req)
+            # the watermark is growth headroom for RUNNING requests; a
+            # swap-in resume is itself the continuation of a running
+            # request, so it is exempt — otherwise a victim whose content
+            # pages exceed (pool - watermark) could never be re-admitted
+            # even with the pool fully free (permanent stall)
+            headroom = (self.watermark
+                        if self.admission == "lazy" and not req.swapped
+                        else 0)
+            ids = (self.allocator.alloc(need)
+                   if self.allocator.num_free - need >= headroom else None)
             if ids is None:
                 self.admission_stalls += 1
                 break
@@ -124,11 +185,82 @@ class Scheduler:
             self.slots[slot] = req
             self.page_table[slot] = NULL_PAGE
             self.page_table[slot, :need] = np.asarray(ids, np.int32)
-            self.cur_len[slot] = req.prompt_len
+            self.cur_len[slot] = (req.swap_len if req.swapped
+                                  else req.prompt_len)
             self.active[slot] = True
-            self.n_admitted += 1
+            if req.swapped:
+                self.n_resumed += 1
+            else:
+                self.n_admitted += 1
             out.append(req)
         return out
+
+    # -- lazy growth + preemption -------------------------------------------
+
+    def prepare_step(self, swap_out: Optional[Callable[[Request], None]]
+                     = None) -> List[int]:
+        """Lazy mode: make every active slot's next token write landable.
+
+        A slot writing at position ``cur_len`` needs page
+        ``cur_len // page_size`` allocated; when the free list is empty the
+        victim with the fewest generated tokens is preempted (swap_out
+        callback fires BEFORE its pages are freed, so the engine can
+        capture the device contents). Returns the freshly allocated page
+        ids — the engine must zero their Kg rows (recycled pages hold the
+        previous tenant's entries). No-op under ``reserve`` admission.
+        """
+        if self.admission != "lazy":
+            return []
+        fresh: List[int] = []
+        for slot in range(self.n_slots):
+            req = self.slots[slot]
+            if req is None or not self.active[slot]:
+                continue
+            needed = int(self.cur_len[slot]) // self.page_size + 1
+            while len(req.pages) < needed:
+                ids = self.allocator.alloc(1)
+                if ids is None:
+                    victim = self._pick_victim()
+                    self._preempt(victim, swap_out)
+                    if victim is req:
+                        break               # the grower itself was evicted
+                    continue
+                self.page_table[slot, len(req.pages)] = ids[0]
+                req.pages.extend(ids)
+                fresh.extend(ids)
+        return fresh
+
+    def _pick_victim(self) -> Request:
+        """Fewest-generated-tokens victim (least progress lost per page
+        freed); ties break to the LOWEST slot for determinism."""
+        best: Optional[Request] = None
+        for slot in range(self.n_slots):
+            req = self.slots[slot]
+            if req is None or not self.active[slot]:
+                continue
+            if best is None or len(req.out_tokens) < len(best.out_tokens):
+                best = req
+        assert best is not None, "preemption with no active slots"
+        return best
+
+    def _preempt(self, req: Request,
+                 swap_out: Optional[Callable[[Request], None]]) -> None:
+        slot = req.slot
+        req.swap_len = int(self.cur_len[slot])
+        if swap_out is not None:
+            swap_out(req)                  # capture BEFORE pages are freed
+        self.allocator.free(req.pages)
+        self.released.extend(req.pages)
+        req.pages = []
+        req.swapped = True
+        req.n_preemptions += 1
+        self.n_preemptions += 1
+        self.slots[slot] = None
+        self.active[slot] = False
+        self.cur_len[slot] = 0
+        self.page_table[slot] = NULL_PAGE
+        req.slot = -1
+        self.pending.appendleft(req)       # resume ahead of fresh arrivals
 
     # -- step completion ----------------------------------------------------
 
@@ -158,9 +290,14 @@ class Scheduler:
             return True
         return False
 
+    def drain_released(self) -> List[int]:
+        out, self.released = self.released, []
+        return out
+
     def _retire(self, slot: int) -> Request:
         req = self.slots[slot]
         self.allocator.free(req.pages)
+        self.released.extend(req.pages)
         req.pages = []
         self.slots[slot] = None
         self.active[slot] = False

@@ -27,9 +27,8 @@ concentrates in one shard (recall impact measured in benchmarks).
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.config import GateConfig
 from repro.core import sparsity as sp
+from repro.distributed.sharding import MODEL
 from repro.models.common import NEG_INF, apply_rope
 
 try:  # JAX >= 0.6
@@ -103,7 +103,6 @@ def sharded_sparse_decode(
     def local(qg, qr, kr_new, v_new, k_loc, v_loc, kg_loc, cur_len, wk):
         b, hkv, s_loc, dh = k_loc.shape
         nb_loc = kg_loc.shape[2]
-        g = qr.shape[2]
         dg = qg.shape[-1]
         ax = _flat_axis_index(seq_axes, sizes)
         tok0 = ax * s_loc                                  # global token base
@@ -236,3 +235,118 @@ def sharded_sparse_decode(
         out_specs=(spec_q, spec_kv, spec_kv, spec_kv, P(bspec, None)))
     return fn(qg, qr, kr_new, v_new, k_cache, v_cache, kg_cache, cur_len,
               gate_wk)
+
+
+# ---------------------------------------------------------------------------
+# paged x sharded: head-sharded page pools (ISSUE 4)
+# ---------------------------------------------------------------------------
+
+def sharded_paged_decode(
+        qg: jnp.ndarray,          # [S, Hkv, Dg]     gate query (post-rope)
+        qgrp: jnp.ndarray,        # [S, Hkv, G, Dh]  attention query grouped
+        kr_new: jnp.ndarray,      # [S, Hkv, Dh]     new key (post-rope)
+        v_new: jnp.ndarray,       # [S, Hkv, Dh]
+        k_pages: jnp.ndarray,     # [P, Hkv, ps, Dh] ONE layer's pool
+        v_pages: jnp.ndarray,
+        kg_pages: jnp.ndarray,    # [P, Hkv, Dg]
+        page_table: jnp.ndarray,  # [S, npt] int32   (replicated)
+        cur_len: jnp.ndarray,     # [S] length BEFORE this token
+        active: jnp.ndarray,      # [S] bool
+        gate_wk: jnp.ndarray,     # [Hkv, 3*Dh, Dg]
+        *,
+        mesh: Mesh,
+        cfg: GateConfig,
+        rope_theta: float,
+        max_selected: Optional[int] = None,
+        budget_blocks: Optional[jnp.ndarray] = None,
+        split_k: int = 1,
+        inner_impl: str = "ref",
+) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One PAGED decode step for ONE layer on a sharded mesh.
+
+    Composition rule (the paged x sharded design): the page POOLS (and the
+    Kg pool, and the gate weights, and the per-head queries) are sharded
+    over the KV-HEAD axis on 'model'; the page TABLE, per-slot lengths and
+    the active mask are replicated. Per-kv-head attention is independent —
+    selection, the paged append (including the Kg finalization of a
+    completed page) and the block-sparse attention all batch over heads —
+    so every shard runs the IDENTICAL unsharded math on its local head
+    slice and the step needs ZERO collectives: the out-specs concatenate
+    the head shards back. This is why paged x sharded is bitwise equal to
+    paged-unsharded (tested), unlike the sequence-sharded contiguous path
+    whose flash combine reorders the softmax reduction.
+
+    Within a shard the selected list is reduced by the split-K kernel when
+    ``split_k > 1`` (``ops.paged_sparse_decode_splitk``) — the in-shard
+    analog of the paper's num_split — with ``inner_impl`` picking jnp ref
+    (CPU) or the Pallas kernel (TPU).
+
+    Returns (o [S,Hkv,G,Dh], k_pages, v_pages, kg_pages, idx [S,Hkv,k])
+    with pools updated in place (same shardings); ``idx`` is the gathered
+    selection for telemetry.
+    """
+    from repro.core import kcache as kc
+    from repro.kernels import ops
+    from repro.serve import paging as pg
+
+    hkv = qg.shape[1]
+    nsh = int(mesh.shape[MODEL])
+    if hkv % nsh:
+        raise ValueError(
+            f"paged sharded decode: n_kv_heads={hkv} not divisible by "
+            f"mesh axis '{MODEL}' of size {nsh}")
+    if budget_blocks is None:
+        # never-binding sentinel: masking with it is the identity, so the
+        # budgeted and unbudgeted paths stay one compiled program
+        budget_blocks = jnp.full((qg.shape[0],), 2 ** 30, jnp.int32)
+
+    # pin the per-token operands REPLICATED: without this GSPMD propagates
+    # the head-sharding backwards into the producing qkv/gate projection
+    # dots, retiling them (different contraction order -> last-bit drift)
+    # and breaking the bitwise paged==paged x sharded contract; with it the
+    # projections compute exactly the unsharded program and the boundary
+    # reshard is an exact slice
+    rep = NamedSharding(mesh, P())
+    qg, qgrp, kr_new, v_new = (
+        jax.lax.with_sharding_constraint(x, rep)
+        for x in (qg, qgrp, kr_new, v_new))
+
+    spec_h3 = P(None, MODEL, None)
+    spec_h4 = P(None, MODEL, None, None)
+    rep1, rep2 = P(None), P(None, None)
+
+    def local(qg, qgrp, kr_new, v_new, kp, vp, kgp, pt, cl, act, bb, wk):
+        kp, vp, kgp = pg.append_token_paged(
+            kp, vp, kgp, kr_new, v_new, pt, cl, act, {"wk": wk}, cfg,
+            rope_theta=rope_theta)
+        new_len = cl + act.astype(jnp.int32)
+        n_valid = kc.visible_blocks(jnp.maximum(new_len, 1), cfg.block_size)
+        idx = ops.gate_select_paged(qg, kgp, pt, n_valid, cfg, max_selected,
+                                    impl="ref")
+        cap = jnp.arange(idx.shape[-1])[None, None, :] < bb[:, None, None]
+        idx = jnp.where(cap, idx, -1)
+        if split_k > 1:
+            o = ops.paged_sparse_decode_splitk(
+                qgrp, kp, vp, idx, pt, new_len, block_size=cfg.block_size,
+                num_splits=split_k, impl=inner_impl)
+        else:
+            o = ops.paged_sparse_decode(qgrp, kp, vp, idx, pt, new_len,
+                                        block_size=cfg.block_size,
+                                        impl=inner_impl)
+        return o, kp, vp, kgp, idx
+
+    fn = shard_map(
+        local, mesh,
+        in_specs=(spec_h3, spec_h4, spec_h3, spec_h3, spec_h4, spec_h4,
+                  spec_h3, rep2, rep1, rep1, rep1, P(MODEL, None, None)),
+        out_specs=(spec_h4, spec_h4, spec_h4, spec_h3, spec_h3))
+    o, k_pages, v_pages, kg_pages, idx = fn(
+        qg, qgrp, kr_new, v_new, k_pages, v_pages, kg_pages,
+        page_table, cur_len, active, budget_blocks, gate_wk)
+    # gather o/idx back to replicated (an exact all-gather) BEFORE they
+    # feed dense compute: a head-sharded o would make GSPMD partition the
+    # wo projection's contraction dim (psum -> reordered reduction ->
+    # last-bit drift); the pools stay head-sharded for the next step
+    o = jax.lax.with_sharding_constraint(o, rep)
+    idx = jax.lax.with_sharding_constraint(idx, rep)
+    return o, k_pages, v_pages, kg_pages, idx

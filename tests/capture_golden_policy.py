@@ -18,6 +18,12 @@ Usage (from repo root):
 
 Both modes merge their arrays into tests/golden_policy.npz. The two modes
 are separate processes because jax pins the device count at first init.
+
+``--verify`` (the CI golden-drift guard, ISSUE 4): recompute the mode's
+arrays and BITWISE-compare them against the committed npz instead of
+writing — exits non-zero on drift, so a stale golden is caught as its own
+CI step rather than as a confusing bitwise-test failure later:
+    python tests/capture_golden_policy.py --verify contiguous_paged
 """
 import dataclasses
 import os
@@ -65,13 +71,41 @@ def paged_requests(cfg):
             for i, (pl, mn) in enumerate(PAGED_SPECS)]
 
 
+VERIFY = False
+
+
 def _merge_save(arrays):
+    if VERIFY:
+        return _verify(arrays)
     if os.path.exists(OUT):
         prev = dict(np.load(OUT))
         prev.update(arrays)
         arrays = prev
     np.savez_compressed(OUT, **arrays)
     print(f"wrote {OUT}: {sorted(arrays)}")
+
+
+def _verify(arrays):
+    """Bitwise-compare freshly captured arrays against the committed npz."""
+    gold = dict(np.load(OUT))
+    bad = []
+    for k, v in sorted(arrays.items()):
+        if k not in gold:
+            bad.append(f"{k}: missing from {OUT} (capture was never run?)")
+        elif gold[k].shape != v.shape:
+            bad.append(f"{k}: shape {gold[k].shape} != fresh {v.shape}")
+        elif not np.array_equal(gold[k], v):
+            d = float(np.max(np.abs(gold[k].astype(np.float64)
+                                    - v.astype(np.float64))))
+            bad.append(f"{k}: DRIFT (max abs diff {d:.3e})")
+    if bad:
+        print(f"golden drift against {OUT}:")
+        for line in bad:
+            print(f"  {line}")
+        print("If the numerics change is intentional, re-run capture "
+              "(both modes) and commit the refreshed npz with the reason.")
+        sys.exit(1)
+    print(f"verify OK: {sorted(arrays)} bitwise-match {OUT}")
 
 
 def capture_contiguous_paged():
@@ -141,5 +175,7 @@ def capture_sharded():
 
 
 if __name__ == "__main__":
+    args = [a for a in sys.argv[1:] if a != "--verify"]
+    VERIFY = "--verify" in sys.argv[1:]
     {"contiguous_paged": capture_contiguous_paged,
-     "sharded": capture_sharded}[sys.argv[1]]()
+     "sharded": capture_sharded}[args[0]]()

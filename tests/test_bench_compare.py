@@ -1,0 +1,82 @@
+"""The CI perf-regression gate (benchmarks.compare) must demonstrably
+fail on an injected slowdown and pass on a faithful run — the ISSUE 4
+acceptance criterion, pinned as a unit test so the gate itself can't rot.
+"""
+import copy
+import json
+
+import pytest
+
+from benchmarks import compare
+
+BASE = {
+    "fast": True,
+    "generated_by": "benchmarks.run",
+    "sections": {
+        "decode": {"sparse_ref_step_ms": 1.0, "dense_step_ms": 0.5,
+                   "sparse_ref_tok_per_s": 5000.0},
+        "policies": {"gate_step_ms": 0.9, "gate_sparsity": 0.1},
+    },
+}
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_gate_passes_on_faithful_run(tmp_path):
+    base = _write(tmp_path, "base.json", BASE)
+    fresh = copy.deepcopy(BASE)
+    fresh["sections"]["decode"]["sparse_ref_step_ms"] = 1.4   # < 1.5x
+    assert compare.main([base, _write(tmp_path, "f.json", fresh)]) == 0
+
+
+def test_gate_fails_on_injected_slowdown(tmp_path):
+    base = _write(tmp_path, "base.json", BASE)
+    fresh = copy.deepcopy(BASE)
+    fresh["sections"]["policies"]["gate_step_ms"] = 0.9 * 1.6  # > 1.5x
+    assert compare.main([base, _write(tmp_path, "f.json", fresh)]) == 1
+
+
+def test_gate_ignores_non_latency_keys(tmp_path):
+    """Throughput counters may swing wildly on shared runners — only
+    *_step_ms keys gate."""
+    base = _write(tmp_path, "base.json", BASE)
+    fresh = copy.deepcopy(BASE)
+    fresh["sections"]["decode"]["sparse_ref_tok_per_s"] = 1.0  # 5000x "drop"
+    fresh["sections"]["policies"]["gate_sparsity"] = 0.9
+    assert compare.main([base, _write(tmp_path, "f.json", fresh)]) == 0
+
+
+def test_gate_threshold_flag(tmp_path):
+    base = _write(tmp_path, "base.json", BASE)
+    fresh = copy.deepcopy(BASE)
+    fresh["sections"]["decode"]["sparse_ref_step_ms"] = 1.4
+    assert compare.main([base, _write(tmp_path, "f.json", fresh),
+                         "--threshold", "1.3"]) == 1
+
+
+def test_gate_rejects_workload_mismatch(tmp_path):
+    base = _write(tmp_path, "base.json", BASE)
+    fresh = copy.deepcopy(BASE)
+    fresh["fast"] = False
+    assert compare.main([base, _write(tmp_path, "f.json", fresh)]) == 2
+
+
+def test_gate_tolerates_new_keys_without_baseline(tmp_path):
+    """A key added by the current PR has no baseline yet: reported, not
+    gated (it starts gating once the refreshed baseline lands)."""
+    base = _write(tmp_path, "base.json", BASE)
+    fresh = copy.deepcopy(BASE)
+    fresh["sections"]["decode"]["new_kernel_step_ms"] = 123.0
+    assert compare.main([base, _write(tmp_path, "f.json", fresh)]) == 0
+
+
+def test_gate_errors_on_missing_file(tmp_path):
+    """Unusable inputs exit 2 — distinguishable from a regression (1)."""
+    with pytest.raises(SystemExit) as e:
+        compare.main([str(tmp_path / "nope.json"),
+                      _write(tmp_path, "f.json", BASE)])
+    assert e.value.code == 2

@@ -3,7 +3,6 @@ methods, K-compression cache, oracle and Quest baselines."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.config import GateConfig
 from repro.core import attngate as ag

@@ -10,7 +10,6 @@ import sys
 
 import jax
 import jax.numpy as jnp
-import pytest
 from jax.sharding import PartitionSpec as P
 
 HERE = os.path.dirname(__file__)
@@ -34,6 +33,14 @@ def test_sharded_decode_parity():
 
 def test_sharded_decode_threshold_parity():
     _run("sharded_decode_threshold_parity")
+
+
+def test_paged_sharded_parity():
+    """ISSUE 4 acceptance: the paged engine on a sharded mesh (pools
+    head-sharded, page table replicated) is BITWISE equal to the unsharded
+    paged engine — also under preemption — and split_k=2 stays within
+    rounding."""
+    _run("paged_sharded_parity")
 
 
 def test_moe_sharded_parity():
@@ -69,6 +76,33 @@ def test_sanitize_spec_drops_nondivisible():
     assert sanitize_spec(P(None, ("data", "model")), (5, 512), FakeMesh()) \
         == P(None, ("data", "model"))
     assert sanitize_spec(P(None, ("data", "model")), (5, 100), FakeMesh()) == P()
+
+
+def test_paged_pool_pspecs_head_sharded():
+    """Paged x sharded composition rule: pools shard Hkv on 'model'
+    (axis 2), Kg pools likewise; non-divisible head counts fall back to
+    replication on that axis only."""
+    import numpy as np
+    from repro.distributed.sharding import paged_pool_pspecs
+    from repro.serve.paging import PagedPages
+
+    class FakeMesh:
+        shape = {"data": 2, "model": 2}
+        axis_names = ("data", "model")
+
+    pages = PagedPages(
+        k_pages=jnp.zeros((2, 5, 4, 8, 16)),
+        v_pages=jnp.zeros((2, 5, 4, 8, 16)),
+        kg_pages=jnp.zeros((2, 5, 4, 16)))
+    specs = paged_pool_pspecs(pages, FakeMesh())
+    # sanitize_spec strips trailing Nones — same partitioning
+    assert specs.k_pages == P(None, None, "model")
+    assert specs.v_pages == P(None, None, "model")
+    assert specs.kg_pages == P(None, None, "model")
+    odd = pages._replace(k_pages=jnp.zeros((2, 5, 3, 8, 16)))
+    assert paged_pool_pspecs(odd, FakeMesh()).k_pages == P()
+    none_kg = pages._replace(kg_pages=None)
+    assert paged_pool_pspecs(none_kg, FakeMesh()).kg_pages is None
 
 
 def test_decode_partition_matches_state_specs():

@@ -1,5 +1,4 @@
 """KV-offload economics + simulator (paper §3.2/§6.1)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 

@@ -8,7 +8,6 @@ float32: the contract under test is indexing/scheduling equivalence, not
 bf16 reduction noise.
 """
 import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -20,7 +19,7 @@ from repro.config import GateConfig, reduced
 from repro.core import attngate as ag
 from repro.core.policy import DecodeOptions, DensePolicy
 from repro.core import kcache as kc
-from repro.kernels import ops, ref
+from repro.kernels import ops
 from repro.models.common import apply_rope
 from repro.models.registry import get_api
 from repro.serve import paging as pg
@@ -67,7 +66,6 @@ def test_scheduler_fifo_head_of_line():
     sched.complete_step(np.array([9, 9], np.int32))
     sched.complete_step(np.array([9, 9], np.int32))
     assert 1 in sched.finished
-    small_pages = set()  # freed pages are recycled below
     admitted = sched.admissions()
     assert [r.rid for r in admitted] == [2]
 
@@ -78,6 +76,93 @@ def test_scheduler_rejects_impossible_request():
     with pytest.raises(ValueError):
         sched.submit(Request(rid=0, prompt=np.zeros(40, np.int32),
                              max_new_tokens=4))
+
+
+def test_allocator_min_free_watermark_telemetry():
+    al = pg.PageAllocator(8)                  # 7 usable
+    al.alloc(3)
+    b = al.alloc(2)
+    assert al.min_free == 2
+    al.free(b)
+    assert al.num_free == 4 and al.min_free == 2   # low-watermark sticks
+
+
+def test_scheduler_lazy_admission_and_watermark():
+    """Lazy admission reserves only the pages held NOW (prompt pages) and
+    honours the free-page watermark as growth headroom."""
+    # reserve mode: prompt 10 + 7 new tokens => ceil(16/4) = 4 pages
+    r = Request(rid=0, prompt=np.zeros(10, np.int32), max_new_tokens=7)
+    res = Scheduler(n_slots=2, num_pages=16, page_size=4,
+                    max_pages_per_seq=4, admission="reserve")
+    res.submit(r)
+    (a,) = res.admissions()
+    assert len(a.pages) == 4
+    # lazy mode: only ceil(10/4) = 3 prompt pages at admission
+    lz = Scheduler(n_slots=2, num_pages=16, page_size=4,
+                   max_pages_per_seq=4, admission="lazy")
+    lz.submit(Request(rid=0, prompt=np.zeros(10, np.int32),
+                      max_new_tokens=7))
+    (b,) = lz.admissions()
+    assert len(b.pages) == 3
+    # watermark: 5 usable pages, watermark 3 -> a 3-page prompt must wait
+    wm = Scheduler(n_slots=2, num_pages=6, page_size=4,
+                   max_pages_per_seq=4, admission="lazy", watermark=3)
+    wm.submit(Request(rid=1, prompt=np.zeros(10, np.int32),
+                      max_new_tokens=2))
+    assert wm.admissions() == []
+    assert wm.admission_stalls == 1
+
+
+def test_watermark_exempts_swap_in_resumes():
+    """The watermark is growth headroom for running requests — a swap-in
+    resume must be exempt, or a victim holding more than
+    (pool - watermark) content pages could never be re-admitted even with
+    the pool fully free."""
+    sched = Scheduler(n_slots=2, num_pages=8, page_size=4,
+                      max_pages_per_seq=8, admission="lazy", watermark=2)
+    req = Request(rid=0, prompt=np.zeros(8, np.int32), max_new_tokens=17)
+    sched.submit(req)
+    (r,) = sched.admissions()
+    assert len(r.pages) == 2                  # prompt pages only
+    sched.cur_len[r.slot] = 23                # simulate 15 decode steps
+    sched.prepare_step()                      # grow to 23//4 + 1 = 6 pages
+    assert len(r.pages) == 6
+    sched._preempt(r, None)                   # victim holds 6 content pages
+    assert sched.allocator.num_free == 7
+    # a FRESH request needing 6 pages would be blocked by the watermark
+    # (7 - 6 < 2) — the resume must go through regardless
+    (r2,) = sched.admissions()
+    assert r2 is req and r2.swapped and len(r2.pages) == 6
+
+
+def test_scheduler_growth_preempts_fewest_generated():
+    """Pool exhaustion during lazy growth preempts the request with the
+    fewest generated tokens; its pages are freed, the swap callback fires
+    first, and it re-queues at the FRONT of pending."""
+    sched = Scheduler(n_slots=2, num_pages=6, page_size=4,
+                      max_pages_per_seq=6, admission="lazy")
+    r0 = Request(rid=0, prompt=np.zeros(8, np.int32), max_new_tokens=9)
+    r1 = Request(rid=1, prompt=np.zeros(8, np.int32), max_new_tokens=9)
+    sched.submit(r0)
+    sched.submit(r1)
+    assert len(sched.admissions()) == 2       # 2+2 prompt pages of 5
+    # r0 has generated more tokens than r1
+    r0.out_tokens = [1, 2, 3]
+    r1.out_tokens = [1]
+    # force both to need a page: both at a boundary
+    sched.cur_len[:] = 8
+    swapped = []
+    fresh = sched.prepare_step(lambda req: swapped.append(
+        (req.rid, req.swap_len, list(req.pages))))
+    # r0 takes the last free page; r1's growth finds the pool dry and the
+    # fewest-generated victim is r1 itself -> swapped out, not stalled
+    assert swapped and swapped[0][0] == 1     # fewest-generated victim
+    assert swapped[0][1] == 8                 # swap_len captured pre-free
+    assert swapped[0][2], "pages listed at swap time"
+    assert r1.swapped and r1.n_preemptions == 1 and not r1.pages
+    assert sched.pending[0] is r1             # re-queued at the front
+    assert len(r0.pages) == 3 and fresh       # grower got its page
+    assert sched.n_preemptions == 1
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +213,45 @@ def test_paged_sparse_decode_matches_contiguous(impl):
     tol = 1e-6 if impl == "ref" else 1e-5
     np.testing.assert_allclose(np.asarray(o_pg), np.asarray(o_ct),
                                atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("impl", ["ref", "pallas_interpret"])
+def test_paged_splitk_matches_plain(impl):
+    """Split-K paged decode (ISSUE 4): partials over split selected lists
+    must combine to the plain paged result; num_splits=1 on the ref path
+    is BITWISE the plain reference (the sharded engine's split-free
+    case)."""
+    b, hkv, g, dh, nb, bs, nsel = 2, 2, 4, 32, 6, 8, 5
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    q = jax.random.normal(ks[0], (b, hkv, g, dh), jnp.float32)
+    kc_ = jax.random.normal(ks[1], (b, hkv, nb * bs, dh), jnp.float32)
+    vc_ = jax.random.normal(ks[2], (b, hkv, nb * bs, dh), jnp.float32)
+    kv_len = jnp.array([nb * bs, nb * bs - 7])
+    rng = np.random.default_rng(5)
+    idx = np.full((b, hkv, nsel), -1, np.int32)
+    for bi in range(b):
+        for hi in range(hkv):
+            n = rng.integers(1, nsel + 1)
+            idx[bi, hi, :n] = rng.choice(nb, n, replace=False)
+        idx[bi, :, 0] = (int(kv_len[bi]) - 1) // bs
+    idx = jnp.asarray(idx)
+    perm = rng.permutation(b * nb)
+    k_pages, v_pages, table = _paged_from_contiguous(
+        np.asarray(kc_), np.asarray(vc_), nb, bs, perm)
+    o_plain = ops.paged_sparse_decode(q, k_pages, v_pages, idx, table,
+                                      kv_len, block_size=bs, impl="ref")
+    if impl == "ref":
+        o1 = ops.paged_sparse_decode_splitk(
+            q, k_pages, v_pages, idx, table, kv_len, block_size=bs,
+            num_splits=1, impl="ref")
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o_plain))
+    for ns in (2, 3, nsel):
+        o_s = ops.paged_sparse_decode_splitk(
+            q, k_pages, v_pages, idx, table, kv_len, block_size=bs,
+            num_splits=ns, impl=impl)
+        tol = 1e-6 if impl == "ref" else 1e-5
+        np.testing.assert_allclose(np.asarray(o_s), np.asarray(o_plain),
+                                   atol=tol, rtol=tol)
 
 
 # ---------------------------------------------------------------------------
@@ -239,6 +363,109 @@ def test_serve_max_new_one_and_single_token_prompt():
     and a one-token prompt, mixed with a normal request."""
     cfg = _tiny_cfg()
     _assert_serve_parity(cfg, [(10, 1), (1, 5), (18, 4)], n_slots=2)
+
+
+# ---------------------------------------------------------------------------
+# lazy allocation + preemption/swap (ISSUE 4 tentpole)
+# ---------------------------------------------------------------------------
+
+def _serve_fixture(specs, seed=0):
+    cfg = _tiny_cfg()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _mk_requests(cfg, specs, seed)
+    eng = DecodeEngine(cfg, params, max_len=64)
+    return cfg, eng, reqs
+
+
+def test_serve_lazy_matches_reserve_bitwise():
+    """With an ample pool the two admission policies admit identically, so
+    lazy must reproduce reserve EXACTLY (physical page placement differs;
+    the math is placement-invariant)."""
+    _, eng, reqs = _serve_fixture([(21, 8), (37, 5), (16, 11), (29, 7)])
+    res_l = eng.serve([dict(r) for r in reqs], n_slots=2,
+                      collect_logits=True, admission="lazy")
+    res_r = eng.serve([dict(r) for r in reqs], n_slots=2,
+                      collect_logits=True, admission="reserve")
+    assert res_l["stats"]["preemptions"] == 0
+    for r in reqs:
+        assert res_l[r["rid"]] == res_r[r["rid"]]
+        np.testing.assert_array_equal(res_l["logits"][r["rid"]],
+                                      res_r["logits"][r["rid"]])
+
+
+def test_preemption_roundtrip_bitwise_lossless():
+    """The acceptance case: a pool too small for the admitted batch's
+    full lifetimes forces preempt -> swap out -> re-admit -> restore; every
+    request's tokens AND logits must be bitwise identical to an
+    unpreempted run, and rid-keyed telemetry must survive the slot
+    recycling."""
+    _, eng, reqs = _serve_fixture([(20, 12), (18, 10), (22, 9)])
+    ample = eng.serve([dict(r) for r in reqs], n_slots=3,
+                      collect_logits=True)
+    assert ample["stats"]["preemptions"] == 0
+    tight = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=8,
+                      collect_logits=True)
+    st = tight["stats"]
+    assert st["preemptions"] > 0
+    assert st["resumed"] == st["preemptions"]
+    assert st["retired"] == len(reqs)
+    assert st["retired_preempted"] > 0
+    assert st["retired_clean"] == st["retired"] - st["retired_preempted"]
+    assert st["swapped_out_bytes"] == st["swapped_in_bytes"] > 0
+    for r in reqs:
+        rid = r["rid"]
+        assert tight[rid] == ample[rid], f"rid {rid} token mismatch"
+        np.testing.assert_array_equal(tight["logits"][rid],
+                                      ample["logits"][rid])
+    # per-request sparsity telemetry is rid-keyed: it must cover every
+    # request (preempted ones included) with the same values as unpreempted
+    for rid, rho in ample["stats"]["sparsity_by_rid"].items():
+        assert rid in st["sparsity_by_rid"]
+        np.testing.assert_allclose(st["sparsity_by_rid"][rid], rho,
+                                   atol=1e-6)
+
+
+def test_pool_exhaustion_preempts_instead_of_stalling():
+    """Under lazy admission a dry pool triggers preemption (forward
+    progress for the survivors) rather than an admission failure; the
+    same pool under reserve admission serializes execution instead.
+    Lazy sustains a strictly larger admitted batch at the same pool."""
+    _, eng, reqs = _serve_fixture([(12, 14), (12, 14), (12, 14)])
+    need = pages_needed(12, 14, 8)            # 4 pages full lifetime
+    pool = need + 3                           # < 2 full reservations
+    lazy = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=pool,
+                     collect_logits=True)
+    res = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=pool,
+                    admission="reserve", collect_logits=True)
+    assert lazy["stats"]["retired"] == res["stats"]["retired"] == 3
+    assert lazy["stats"]["preemptions"] > 0
+    assert res["stats"]["preemptions"] == 0
+    assert lazy["stats"]["max_active_slots"] > res["stats"]["max_active_slots"]
+    assert lazy["stats"]["mean_active_slots"] > res["stats"]["mean_active_slots"]
+    for r in reqs:                            # both remain exact
+        np.testing.assert_array_equal(lazy["logits"][r["rid"]],
+                                      res["logits"][r["rid"]])
+
+
+def test_preemption_with_per_request_budget_and_sampling():
+    """Slot-recycled per-request overrides (budget cap, stochastic
+    sampling chain) must survive a swap/re-admit cycle: the preempted run
+    reproduces the ample-pool run exactly."""
+    from repro.serve.sampling import SamplingParams
+    cfg, eng, reqs = _serve_fixture([(20, 9), (18, 8), (21, 7)])
+    reqs[0]["budget"] = 16                    # 2-block cap
+    reqs[1]["sampling"] = SamplingParams(temperature=0.7, top_k=8)
+    ample = eng.serve([dict(r) for r in reqs], n_slots=3,
+                      collect_logits=True, sample_seed=3)
+    tight = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=8,
+                      collect_logits=True, sample_seed=3)
+    assert tight["stats"]["preemptions"] > 0
+    for r in reqs:
+        rid = r["rid"]
+        assert tight[rid] == ample[rid]
+        np.testing.assert_array_equal(tight["logits"][rid],
+                                      ample["logits"][rid])
 
 
 # ---------------------------------------------------------------------------

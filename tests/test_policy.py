@@ -17,7 +17,6 @@ Contracts:
   5. DecodeOptions is hashable/jit-static and validates its fields.
 """
 import dataclasses
-import functools
 import os
 import subprocess
 import sys
@@ -28,7 +27,7 @@ import numpy as np
 import pytest
 
 import capture_golden_policy as G
-from repro.config import GateConfig, reduced
+from repro.config import GateConfig
 from repro.core import policy as pol
 from repro.core.policy import (DecodeOptions, DensePolicy, GatePolicy,
                                OraclePolicy, QuestPolicy,
@@ -174,7 +173,6 @@ def test_policy_select_shape_and_causality(policy):
 
 def test_sliding_window_selects_sink_and_tail():
     cfg = G.tiny_cfg()
-    bs = cfg.gate.block_size
     new_len = jnp.array([41], jnp.int32)           # 6 visible blocks
     inp = pol.SelectionInputs(
         q_nope=jnp.zeros((1, 1, cfg.n_heads, cfg.resolved_head_dim)),
@@ -538,7 +536,7 @@ def test_engine_budget_override_static():
     eng = DecodeEngine(cfg, params, max_len=G.MAX_LEN,
                        options=DecodeOptions(budget_override=2
                                              * cfg.gate.block_size))
-    out = eng.generate({"tokens": toks}, 4)
+    eng.generate({"tokens": toks}, 4)
     stats = eng.sparsity_stats()
     assert stats["measured"] and stats["sel_blocks"] <= 2.0 + 1e-6
 

@@ -1,5 +1,4 @@
 """Property-based tests (hypothesis) for the system's core invariants."""
-import math
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +13,6 @@ from repro.config import GateConfig
 from repro.core import sparsity as sp
 from repro.core.distill import ground_truth_from_blockmax
 from repro.kernels import ops
-from repro.models.common import NEG_INF
 
 SET = settings(max_examples=20, deadline=None)
 

@@ -1,7 +1,6 @@
 """scan_layers=False (the probe execution path) must be numerically
 identical to the scanned production path for every family."""
 import jax
-import jax.numpy as jnp
 import pytest
 
 import repro.configs as configs

@@ -6,7 +6,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 import repro.configs as C
 from repro.checkpoint import manager as ckpt
