@@ -470,9 +470,11 @@ def bench_serve():
     eng = DecodeEngine(cfg, params, max_len=max_plen + max_new + 16)
     if ENGINE in ("paged", "both"):
         res = eng.serve(reqs, n_slots=n_slots)          # warm compile
-        t0 = time.perf_counter()
-        res = eng.serve(reqs, n_slots=n_slots)
-        dt = time.perf_counter() - t0
+        dt = float("inf")                               # best-of-3 like the
+        for _ in range(3):                              # lazy/reserve rows
+            t0 = time.perf_counter()
+            res = eng.serve(reqs, n_slots=n_slots)
+            dt = min(dt, time.perf_counter() - t0)
         st = res["stats"]
         emit("serve", "paged_tok_per_s", f"{useful / dt:.1f}")
         emit("serve", "paged_decode_steps", st["decode_steps"])
@@ -610,8 +612,15 @@ def bench_policies():
     print("\n== policies: selection-policy sweep at equal budget ==")
     cfg, state, _, _ = distilled_fixture(16)
     params = state.params
-    prefill_len = 128 if FAST else 256
-    n_steps = 8 if FAST else 24
+    # prefill 512 / 24-step rollouts even under --fast: the quest vs
+    # quest_cached comparison measures an O(S)-vs-O(block_size) selection
+    # cost — at short contexts and 8-step timing windows the recompute
+    # term drowns in scheduler noise and the two rows are
+    # indistinguishable, defeating the sweep's comparative purpose (the
+    # section's cost is compile-dominated either way; 512 = the distill
+    # fixture's native sequence length)
+    prefill_len = 512
+    n_steps = 24
     max_len = prefill_len + n_steps + 8
     batch = {"tokens": make_batch(cfg, BATCH, prefill_len,
                                   DataState(3, 0))["tokens"]}
@@ -623,11 +632,25 @@ def bench_policies():
     emit("policies", "prefill_len", prefill_len)
 
     dense_toks = None
-    for name in ("dense", "gate", "oracle", "quest", "sliding_window"):
-        opts = DecodeOptions(policy=get_policy(name))
+    # "quest" keeps its historical meaning in the JSON trajectory (the
+    # O(S) recompute-per-step wiring, now QuestRecomputePolicy);
+    # "quest_cached" is the incremental selection-metadata cache path
+    # (ISSUE 5) — the registry's default QuestPolicy. Comparing the two
+    # rows IS the tentpole metric: same bitwise selections, O(bs) step.
+    sweep = (("dense", "dense"), ("gate", "gate"), ("oracle", "oracle"),
+             ("quest", "quest_recompute"), ("quest_cached", "quest"),
+             ("sliding_window", "sliding_window"))
+    for name, registry_name in sweep:
+        opts = DecodeOptions(policy=get_policy(registry_name))
         step = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg,
                                          options=opts))
-        st, tok = st0, tok0
+        if opts.policy.needs_meta:
+            _, st_meta = jax.jit(functools.partial(
+                tf.lm_prefill, cfg=cfg, max_len=max_len,
+                options=opts))(params, batch)
+        else:
+            st_meta = st0
+        st, tok = st_meta, tok0
         for _ in range(2):                                  # warm compile
             lg, st, aux = step(params, st, tok)
             tok = jnp.argmax(lg, -1).astype(jnp.int32)
@@ -637,7 +660,7 @@ def bench_policies():
         # the same tokens/sparsity and only the timing is minimized
         dt = float("inf")
         for _ in range(3):
-            st, tok = st0, tok0
+            st, tok = st_meta, tok0
             toks, rho = [], []
             t0 = time.perf_counter()
             for _ in range(n_steps):
@@ -655,6 +678,42 @@ def bench_policies():
              f"{float(np.mean(np.asarray(jnp.stack(rho)))):.3f}")
         emit("policies", f"{name}_top1_agree_dense",
              f"{float(np.mean(toks == dense_toks)):.4f}")
+
+    # micro-benchmark of the SELECTION-METADATA term itself (ISSUE 5):
+    # full-step wall clock at toy scale buries the O(S)-vs-O(block_size)
+    # difference under model FLOPs and scheduler noise; timing just the
+    # per-step metadata construction isolates what the metacache changes.
+    from repro.core import metacache as mcc
+    from repro.core import quest as qst
+    bs = cfg.gate.block_size
+    hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    s_meta = 4096                                 # decode-realistic context
+    kcache = jax.random.normal(jax.random.PRNGKey(5),
+                               (BATCH, hkv, s_meta, dh), jnp.float32)
+    kv_len = jnp.full((BATCH,), s_meta - 5, jnp.int32)
+    f_rec = jax.jit(lambda k, l: qst.quest_meta_decode(k, l, bs))
+    cache0 = mcc.prefill_metacache(
+        mcc.init_metacache(BATCH, s_meta // bs, hkv, dh), kcache, kv_len, bs)
+
+    def one_cached(cache, k, l):
+        c = mcc.update_metacache(cache, k, l, bs)
+        tmin, tmax, t = mcc.trailing_meta(k, l, bs)
+        return mcc.overlay_trailing(c.kmin, c.kmax, tmin, tmax, t)
+
+    f_cac = jax.jit(one_cached)
+    emit("policies", "meta_context_tokens", s_meta)
+    for label, fn, args in (
+            ("quest_meta_recompute", f_rec, (kcache, kv_len)),
+            ("quest_meta_cached", f_cac, (cache0, kcache, kv_len))):
+        jax.block_until_ready(fn(*args))          # warm compile
+        n_it, best = 50, float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(n_it):
+                out = fn(*args)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        emit("policies", f"{label}_us", f"{best / n_it * 1e6:.1f}")
 
 
 def _write_json(path: str) -> None:

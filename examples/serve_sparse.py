@@ -47,8 +47,11 @@ def main():
     ap.add_argument("--prefill", type=int, default=256)
     ap.add_argument("--new", type=int, default=64)
     ap.add_argument("--policy", default="gate",
-                    choices=["gate", "quest", "oracle", "sliding_window"],
-                    help="block-selection policy (core.policy)")
+                    choices=["gate", "quest", "quest_recompute", "oracle",
+                             "sliding_window"],
+                    help="block-selection policy (core.policy); 'quest' "
+                         "runs off the incremental metadata cache, "
+                         "'quest_recompute' is the O(S) reference")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy; >0 enables stochastic sampling")
     ap.add_argument("--top-p", type=float, default=1.0, dest="top_p")

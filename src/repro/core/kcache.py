@@ -88,7 +88,10 @@ def update_kcache(cache: KCompressionCache, gate_params: Dict[str, Any],
     check; ragged batches are handled per-row via where-masking.
     """
     bs = cfg.block_size
-    completed = (cur_len % bs) == 0                       # [B] bool
+    # cur_len == 0 (empty/retired slot) must NOT count as a completed
+    # block: (0 % bs) == 0 used to write a garbage Kg row at slot 0 and
+    # set n_complete = 1 (ISSUE 5 satellite)
+    completed = ((cur_len % bs) == 0) & (cur_len > 0)     # [B] bool
     blk_idx = jnp.maximum(cur_len // bs - 1, 0)           # [B]
     start = blk_idx * bs
 

@@ -80,6 +80,12 @@ class SelectionInputs(NamedTuple):
     kg_pages: Optional[jnp.ndarray] = None     # [P, Hkv, Dg]
     k_pages: Optional[jnp.ndarray] = None      # [P, Hkv, ps, Dh] post-rope
     page_table: Optional[jnp.ndarray] = None   # [B, npt] int32
+    # selection-metadata cache views (core.metacache; policies with
+    # ``needs_meta``): contiguous incremental min/max, or the paged pools
+    meta_kmin: Optional[jnp.ndarray] = None    # [B, Hkv, nb, Dh] float32
+    meta_kmax: Optional[jnp.ndarray] = None    # [B, Hkv, nb, Dh] float32
+    kmin_pages: Optional[jnp.ndarray] = None   # [P, Hkv, Dh] float32
+    kmax_pages: Optional[jnp.ndarray] = None   # [P, Hkv, Dh] float32
 
     @property
     def n_kv_heads(self) -> int:
@@ -106,9 +112,13 @@ class SelectionPolicy(Protocol):
     ``dense``: the attention layer skips selection and runs dense decode.
     ``needs_gate``: requires trained gate params (layers without a gate
     fall back to dense, preserving the old ``sparse=True`` semantics).
+    ``needs_meta``: reads the incremental selection-metadata cache
+    (core.metacache) — the model threads/advances it only for these
+    policies, the same advance-only-for-the-reader rule as the Kg cache.
     """
     dense: bool
     needs_gate: bool
+    needs_meta: bool
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -118,10 +128,11 @@ class SelectionPolicy(Protocol):
 
 
 def _gathered_k(inp: SelectionInputs) -> jnp.ndarray:
-    """Per-row head-major K view for metadata policies (Quest/Oracle):
-    the contiguous cache as-is, or the paged gather. The paged gather is a
-    cache-sized copy — acceptable for these reference/ceiling policies;
-    the gate hot path never takes it."""
+    """Per-row head-major K view for the REFERENCE metadata policies
+    (QuestRecompute/Oracle): the contiguous cache as-is, or the paged
+    gather. The paged gather is a cache-sized copy — acceptable for these
+    reference/ceiling policies only; neither the gate nor the cached
+    QuestPolicy hot path ever takes it."""
     if inp.k_cache is not None:
         return inp.k_cache
     from repro.serve import paging as pg
@@ -143,6 +154,7 @@ class GatePolicy:
     gather on the Pallas paths)."""
     dense = False
     needs_gate = True
+    needs_meta = False
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -163,13 +175,65 @@ class GatePolicy:
 @dataclasses.dataclass(frozen=True)
 class QuestPolicy:
     """Training-free Quest selection (Tang et al., 2024): rank blocks by
-    the q·k upper bound from per-block key min/max. Metadata is derived
-    from the (post-rope) K cache each step — a correctness-first wiring of
-    ``core.quest``; an incremental metadata cache is a perf follow-up.
+    the q·k upper bound from per-block key min/max. Metadata comes from
+    the INCREMENTAL selection-metadata cache (core.metacache): completed
+    blocks were finalized when ``cur_len`` crossed their boundary, only
+    the trailing partial block is recomputed per step from its one
+    block-sized K-cache slice (contiguous) or its one physical page
+    (paged) — O(block_size) per step, never an O(S) cache read and never
+    a cache-sized paged gather. Bitwise-equal selections to
+    ``QuestRecomputePolicy`` (the O(S) reference) by construction.
     Selection is GQA-group-shared (max-pooled bound) so it can drive the
     shared-sparsity block-sparse kernel."""
     dense = False
     needs_gate = False
+    needs_meta = True
+
+    def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
+               impl: str = "ref",
+               max_selected: Optional[int] = None) -> jnp.ndarray:
+        from repro.core import metacache as mc
+        from repro.core import quest
+        bs = cfg.gate.block_size
+        if inp.meta_kmin is not None and inp.k_cache is not None:
+            tmin, tmax, t_idx = mc.trailing_meta(inp.k_cache, inp.new_len,
+                                                 bs)
+            kmin, kmax = mc.overlay_trailing(inp.meta_kmin, inp.meta_kmax,
+                                             tmin, tmax, t_idx)
+        elif inp.kmin_pages is not None and inp.k_pages is not None:
+            # metadata-sized gather through the page table (npt rows per
+            # slot — block_size x smaller than the K cache; the analog of
+            # paging.gather_kg on the gate's ref path)
+            kmin = jnp.swapaxes(inp.kmin_pages[inp.page_table], 1, 2)
+            kmax = jnp.swapaxes(inp.kmax_pages[inp.page_table], 1, 2)
+            tmin, tmax, t_idx = mc.trailing_meta_paged(
+                inp.k_pages, inp.page_table, inp.new_len, bs)
+            kmin, kmax = mc.overlay_trailing(kmin, kmax, tmin, tmax, t_idx)
+        else:
+            raise ValueError(
+                "QuestPolicy needs the selection-metadata cache: build the "
+                "decode state with options (prefill(..., options=...)) so "
+                "meta_kmin/meta_kmax (or the paged kmin/kmax pools) are "
+                "threaded; QuestRecomputePolicy is the cache-free O(S) "
+                "reference")
+        n_valid = kc.visible_blocks(jnp.maximum(inp.new_len, 1), bs)
+        scores = quest.quest_scores_grouped(_grouped_q(inp), kmin, kmax,
+                                            n_valid)
+        idx, _ = sp.budget_select(scores, n_valid, cfg.gate, max_selected)
+        return idx
+
+
+@dataclasses.dataclass(frozen=True)
+class QuestRecomputePolicy:
+    """The pre-metacache Quest wiring: per-block key min/max REBUILT from
+    the entire (post-rope) K cache every step — an O(S) read, plus a
+    cache-sized gather on the paged path. Kept as the bitwise parity
+    reference for ``QuestPolicy`` and as the honest 'what Quest costs
+    without an incremental metadata cache' baseline in the ``policies``
+    benchmark sweep. Not a serving policy."""
+    dense = False
+    needs_gate = False
+    needs_meta = False
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -193,6 +257,7 @@ class OraclePolicy:
     (and at full budget, exactly dense attention's token set)."""
     dense = False
     needs_gate = False
+    needs_meta = False
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -211,6 +276,7 @@ class DensePolicy:
     """No selection: full dense decode attention (the old ``sparse=False``)."""
     dense = True
     needs_gate = False
+    needs_meta = False
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -233,6 +299,7 @@ class SlidingWindowPolicy:
     sink_blocks: int = 1
     dense = False
     needs_gate = False
+    needs_meta = False
 
     def __post_init__(self):
         if self.sink_blocks < 0:
@@ -264,7 +331,9 @@ class SlidingWindowPolicy:
 
 POLICIES: Dict[str, Any] = {
     "gate": GatePolicy,
-    "quest": QuestPolicy,
+    "quest": QuestPolicy,                     # incremental metadata cache
+    "quest_cached": QuestPolicy,              # explicit alias
+    "quest_recompute": QuestRecomputePolicy,  # O(S) parity/cost reference
     "oracle": OraclePolicy,
     "dense": DensePolicy,
     "sliding_window": SlidingWindowPolicy,

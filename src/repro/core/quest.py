@@ -28,7 +28,9 @@ def build_quest_meta(k_cache: jnp.ndarray, kv_len: jnp.ndarray,
                      block_size: int) -> QuestMeta:
     b, s, hkv, dh = k_cache.shape
     nb = s // block_size
-    kb = k_cache.reshape(b, nb, block_size, hkv, dh).astype(jnp.float32)
+    s = nb * block_size                  # floor a non-block-aligned cache
+    kb = k_cache[:, :s].reshape(b, nb, block_size, hkv, dh) \
+        .astype(jnp.float32)
     # mask out-of-range tokens so they don't pollute min/max
     pos = jnp.arange(s).reshape(nb, block_size)
     valid = pos[None, :, :, None, None] < kv_len[:, None, None, None, None]
@@ -36,7 +38,11 @@ def build_quest_meta(k_cache: jnp.ndarray, kv_len: jnp.ndarray,
     kmax = jnp.max(jnp.where(valid, kb, -jnp.inf), axis=2)
     kmin = jnp.where(jnp.isfinite(kmin), kmin, 0.0)
     kmax = jnp.where(jnp.isfinite(kmax), kmax, 0.0)
-    return QuestMeta(kmin, kmax, -(-kv_len // block_size))
+    # n_blocks is clamped to the STORED row count: with a non-block-aligned
+    # kv_len == S, ceil would report one more block than kmin/kmax hold and
+    # quest_scores/select would index past the metadata (ISSUE 5 satellite;
+    # the same floor quest_meta_decode documents)
+    return QuestMeta(kmin, kmax, jnp.minimum(-(-kv_len // block_size), nb))
 
 
 def quest_scores(q: jnp.ndarray, meta: QuestMeta, *, share_group: bool

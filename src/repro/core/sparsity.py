@@ -72,10 +72,15 @@ def budget_select(scores: jnp.ndarray, n_valid_blocks: jnp.ndarray,
     top_vals, top_idx = jax.lax.top_k(s, k)
     sel_valid = top_vals > NEG_INF / 2
     idx = jnp.where(sel_valid, top_idx, -1).astype(jnp.int32)
+    # order-INDEPENDENT scatter (`.max`, i.e. logical OR): invalid slots
+    # are clamped to index 0, so a duplicate-index `.set(False)` could
+    # race a genuine `.set(True)` for block 0 and silently corrupt the
+    # measured-sparsity telemetry (ISSUE 5 satellite) — with max, False
+    # can never clobber True
     mask = jnp.zeros(s.shape, bool).at[
         jnp.arange(s.shape[0])[:, None, None],
         jnp.arange(s.shape[1])[None, :, None],
-        jnp.maximum(top_idx, 0)].set(sel_valid)
+        jnp.maximum(top_idx, 0)].max(sel_valid)
     return idx, mask
 
 

@@ -203,7 +203,11 @@ def decode_state_pspecs(state: Any, batch_size: int, mesh: Mesh) -> Any:
     bspec = (dp if len(dp) > 1 else dp[0]) if b_shardable else None
     seq_axes: Any = MODEL if b_shardable else tuple(dp) + (MODEL,)
     n_model = mesh.shape[MODEL]
-    cache_names = {"k_cache", "v_cache", "kg_cache", "cross_k", "cross_v"}
+    # meta_kmin/meta_kmax are the selection-metadata cache [L,B,Hkv,nb,Dh]
+    # (ISSUE 5) — same cache-rule as kg_cache (their nb dim rides the seq
+    # axes), NOT the ssm fallthrough
+    cache_names = {"k_cache", "v_cache", "kg_cache", "cross_k", "cross_v",
+                   "meta_kmin", "meta_kmax"}
 
     def one(kp, leaf):
         name = getattr(kp[-1], "name", "") if kp else ""
@@ -252,15 +256,16 @@ def logical_pspec(name: str, mesh: Mesh, ep_major: bool = False) -> P:
 def paged_pool_pspecs(pages: Any, mesh: Mesh) -> Any:
     """Specs for a ``serve.paging.PagedPages`` pytree on a sharded mesh
     (the paged x sharded composition, ISSUE 4): pools are sharded over the
-    KV-HEAD axis on 'model' — k/v pools [L, P, Hkv, ps, Dh] and Kg pools
-    [L, P, Hkv, Dg] put 'model' on axis 2 — while the page table and
-    per-slot metadata stay replicated (they are host numpy anyway).
-    Falls back to replication per-axis when Hkv doesn't divide the mesh
-    (sanitize_spec)."""
+    KV-HEAD axis on 'model' — k/v pools [L, P, Hkv, ps, Dh], Kg pools
+    [L, P, Hkv, Dg] and the selection-metadata min/max pools
+    [L, P, Hkv, Dh] (ISSUE 5) all put 'model' on axis 2 — while the page
+    table and per-slot metadata stay replicated (they are host numpy
+    anyway). Falls back to replication per-axis when Hkv doesn't divide
+    the mesh (sanitize_spec)."""
     def one(leaf):
         if leaf.ndim == 5:                       # [L, P, Hkv, ps, Dh]
             spec = P(None, None, MODEL, None, None)
-        elif leaf.ndim == 4:                     # [L, P, Hkv, Dg]
+        elif leaf.ndim == 4:                     # [L, P, Hkv, Dg|Dh]
             spec = P(None, None, MODEL, None)
         else:
             spec = P(*((None,) * leaf.ndim))

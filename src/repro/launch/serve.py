@@ -38,7 +38,8 @@ def main():
     ap.add_argument("--method", default=None, choices=[None, "budget", "threshold"])
     ap.add_argument("--dense", action="store_true")
     ap.add_argument("--policy", default="gate",
-                    choices=["gate", "quest", "oracle", "sliding_window"])
+                    choices=["gate", "quest", "quest_recompute", "oracle",
+                             "sliding_window"])
     args = ap.parse_args()
 
     cfg = configs.get(args.arch)

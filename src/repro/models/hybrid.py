@@ -137,7 +137,9 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int
 
 
 def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int,
-               shard=None):
+               shard=None, options=None):
+    # ``options`` accepted for ModelApi uniformity; the hybrid family has
+    # no selection-metadata cache (QuestPolicy raises with guidance)
     n_units, period, rem = _plan(cfg)
     tokens = batch["tokens"]
     b, l = tokens.shape
@@ -211,9 +213,10 @@ def lm_decode_step(params: Params, state: HybridDecodeState, token, cfg,
                                   (ublocks, uconv, uh),
                                   unroll=not cfg.scan_layers)
         x1, attn_state, aux = tf.block_decode(
-            params["shared_attn"], x1, cfg, (kc, vc, kgc, kgn),
+            params["shared_attn"], x1, cfg,
+            (kc, vc, kgc, kgn, None, None, None),   # no metacache: hybrid
             state.cur_len, options=options, shard=shard)
-        return x1, ((c2, h2) + attn_state, aux)
+        return x1, ((c2, h2) + attn_state[:4], aux)
 
     x1, (outs, auxs) = layer_scan(unit, x1, (params["units"], conv_u, h_u,
                                              state.k_cache, state.v_cache,

@@ -17,7 +17,12 @@ class ModelApi(NamedTuple):
     init_params: Callable          # (key, cfg) -> params
     forward: Callable              # (params, batch, cfg, *, mode, shard) -> (loss, metrics)
     init_decode_state: Callable    # (cfg, batch_size, max_len) -> state
-    prefill: Callable              # (params, batch, cfg, max_len, shard) -> (logits, state)
+    prefill: Callable              # (params, batch, cfg, max_len, shard,
+    #                                 options) -> (logits, state); `options`
+    #                                 builds policy-side caches (e.g. the
+    #                                 selection-metadata cache) and batch
+    #                                 may carry "lengths" for bucketed
+    #                                 right-padded prompts
     decode_step: Callable          # (params, state, token, cfg, *, options, shard)
     #                                 -> (logits, state, aux)
     # continuous-batching paged decode (serve.paging); None = unsupported

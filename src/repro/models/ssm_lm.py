@@ -79,7 +79,8 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int = 0
 
 
 def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int = 0,
-               shard=None):
+               shard=None, options=None):
+    # ``options`` accepted for ModelApi uniformity (attention-free family)
     tokens = batch["tokens"]
     b, l = tokens.shape
     x = jnp.take(params["embed"]["w"], tokens, axis=0)

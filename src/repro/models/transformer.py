@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.config import ModelConfig
 from repro.core import attngate as ag
 from repro.core import kcache as kc
+from repro.core import metacache as mc
 from repro.core import sparsity as sp
 from repro.core.distill import gate_kl_loss, ground_truth_from_blockmax
 from repro.core.policy import (DecodeOptions, SelectionInputs,
@@ -328,7 +329,13 @@ def _n_gate_layers(cfg: ModelConfig) -> int:
 class DecodeState(NamedTuple):
     """All caches are HEAD-MAJOR (ISSUE 2 invariant: the decode hot path
     never transposes or copies a cache-sized array — prefill does the one
-    layout conversion, decode reads/writes the native layout)."""
+    layout conversion, decode reads/writes the native layout).
+
+    ``meta_*`` is the incremental selection-metadata cache
+    (core.metacache): per-block key min/max for metadata-reading policies
+    (QuestPolicy). Built at prefill only when the prefill ``options``
+    carry such a policy (None otherwise) and advanced per step only for
+    the policy that reads it — the same rule as the Kg cache."""
     k_cache: jnp.ndarray          # [L, B, Hkv, S_max, Dh]  (post-rope)
     v_cache: jnp.ndarray          # [L, B, Hkv, S_max, Dh]
     kg_cache: Optional[jnp.ndarray]     # [L, B, Hkv, nb_max, Dg]
@@ -336,6 +343,9 @@ class DecodeState(NamedTuple):
     cur_len: jnp.ndarray          # [B]
     cross_k: Optional[jnp.ndarray] = None   # [Lc, B, Hkv, n_img, Dh]
     cross_v: Optional[jnp.ndarray] = None
+    meta_kmin: Optional[jnp.ndarray] = None  # [L, B, Hkv, nb_max, Dh] f32
+    meta_kmax: Optional[jnp.ndarray] = None  # [L, B, Hkv, nb_max, Dh] f32
+    meta_n: Optional[jnp.ndarray] = None     # [L, B] int32
 
 
 def n_self_layers(cfg: ModelConfig) -> int:
@@ -345,7 +355,8 @@ def n_self_layers(cfg: ModelConfig) -> int:
 
 
 def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
-                      dtype=None) -> DecodeState:
+                      dtype=None,
+                      options: Optional[DecodeOptions] = None) -> DecodeState:
     dt = dtype or jnp.dtype(cfg.dtype)
     dh, hkv = cfg.resolved_head_dim, cfg.n_kv_heads
     nl = n_self_layers(cfg)
@@ -354,6 +365,11 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
     kg = (jnp.zeros((nl, batch, hkv, nb_max, cfg.gate.d_gate), dt)
           if gate_on else None)
     kg_n = jnp.zeros((nl, batch), jnp.int32) if gate_on else None
+    meta_kmin = meta_kmax = meta_n = None
+    if options is not None and options.policy.needs_meta:
+        meta_kmin = jnp.zeros((nl, batch, hkv, nb_max, dh), jnp.float32)
+        meta_kmax = jnp.zeros((nl, batch, hkv, nb_max, dh), jnp.float32)
+        meta_n = jnp.zeros((nl, batch), jnp.int32)
     cross = None
     if cfg.cross_attn_period:
         n_units = cfg.num_layers // cfg.cross_attn_period
@@ -363,7 +379,8 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
         v_cache=jnp.zeros((nl, batch, hkv, max_len, dh), dt),
         kg_cache=kg, kg_n=kg_n,
         cur_len=jnp.zeros((batch,), jnp.int32),
-        cross_k=cross, cross_v=cross)
+        cross_k=cross, cross_v=cross,
+        meta_kmin=meta_kmin, meta_kmax=meta_kmax, meta_n=meta_n)
 
 
 def _policy_active(policy, p: Params) -> bool:
@@ -408,7 +425,8 @@ def _zero_layer_aux(batch: int):
 
 def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                      k_cache, v_cache, kg_cache, kg_n, cur_len,
-                     options: DecodeOptions, shard=None):
+                     options: DecodeOptions, meta_kmin=None, meta_kmax=None,
+                     meta_n=None, shard=None):
     """One token. x1 [B,1,d]; caches for ONE layer HEAD-MAJOR [B,Hkv,S,Dh].
     Returns (out, new_layer_state, selection_aux).
 
@@ -430,8 +448,8 @@ def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
     kr = apply_rope(k, pos, cfg.rope_theta)
 
     mesh = getattr(shard, "mesh", None)
-    if sparse_on and options.kernel_impl == "sharded" and "gate" in p \
-            and mesh is not None:
+    if sparse_on and options.kernel_impl == "sharded" and policy.needs_gate \
+            and "gate" in p and mesh is not None:
         from repro.distributed.sharding import decode_partition
         from repro.serve.sharded import sharded_sparse_decode
         bspec, seq_axes = decode_partition(mesh, b)
@@ -458,8 +476,19 @@ def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                    n_valid.astype(jnp.float32))
         else:
             aux = _zero_layer_aux(b)
-        return out, (k_cache, v_cache, kg_cache, kg_n), aux
+        return out, (k_cache, v_cache, kg_cache, kg_n,
+                     meta_kmin, meta_kmax, meta_n), aux
 
+    if sparse_on and options.kernel_impl == "sharded":
+        # only reachable by bypassing DecodeOptions validation (non-gate
+        # policy, ungated layer, or no mesh on ``shard``): fail at trace
+        # time with guidance instead of a bare ValueError('sharded') from
+        # the kernel dispatch (mirrors the paged path's check)
+        raise ValueError(
+            "kernel_impl='sharded' on the contiguous path needs a "
+            "mesh-aware engine (shard=make_shard_fn(mesh)) and GatePolicy "
+            "on a gated layer; other policies run with kernel_impl="
+            "'ref'/'pallas'")
     bidx = jnp.arange(b)
     k_cache = k_cache.at[bidx, :, cur_len].set(kr[:, 0])
     v_cache = v_cache.at[bidx, :, cur_len].set(v[:, 0])
@@ -476,9 +505,17 @@ def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                 new_len, cfg.gate, cache_is_roped=True,
                 rope_theta=cfg.rope_theta)
             kg_cache, kg_n = cache.kg, cache.n_complete
+        # same advance-only-for-the-reader rule for the selection-metadata
+        # cache (QuestPolicy): O(block_size) finalize on block boundaries
+        if policy.needs_meta and meta_kmin is not None:
+            mcache = mc.update_metacache(
+                mc.SelectionMetaCache(meta_kmin, meta_kmax, meta_n),
+                k_cache, new_len, bs)
+            meta_kmin, meta_kmax, meta_n = mcache
         inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
                               gate_params=p.get("gate"), kg=kg_cache,
-                              k_cache=k_cache)
+                              k_cache=k_cache, meta_kmin=meta_kmin,
+                              meta_kmax=meta_kmax)
         idx = policy.select(inp, cfg, impl=select_impl(options.kernel_impl),
                             max_selected=options.max_selected(cfg))
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
@@ -494,16 +531,19 @@ def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         aux = (_dense_aux(new_len, bs) if options.measure_sparsity
                else _zero_layer_aux(b))
     out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-    return out, (k_cache, v_cache, kg_cache, kg_n), aux
+    return out, (k_cache, v_cache, kg_cache, kg_n,
+                 meta_kmin, meta_kmax, meta_n), aux
 
 
 def block_decode(p: Params, x1, cfg: ModelConfig, layer_state, cur_len, *,
                  options: DecodeOptions, shard=None):
-    k_cache, v_cache, kg_cache, kg_n = layer_state
+    k_cache, v_cache, kg_cache, kg_n, meta_kmin, meta_kmax, meta_n = \
+        layer_state
     h = rms_norm(p["ln1"], x1, cfg.norm_eps)
     attn_out, new_state, aux = attention_decode(
         p["attn"], h, cfg, k_cache=k_cache, v_cache=v_cache,
         kg_cache=kg_cache, kg_n=kg_n, cur_len=cur_len, options=options,
+        meta_kmin=meta_kmin, meta_kmax=meta_kmax, meta_n=meta_n,
         shard=shard)
     x1 = x1 + attn_out
     h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
@@ -571,7 +611,8 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
                                          shard=shard)
         return y, (new_state, aux)
 
-    layer_states = (state.k_cache, state.v_cache, state.kg_cache, state.kg_n)
+    layer_states = (state.k_cache, state.v_cache, state.kg_cache, state.kg_n,
+                    state.meta_kmin, state.meta_kmax, state.meta_n)
 
     if cfg.cross_attn_period:
         n_units = cfg.num_layers // cfg.cross_attn_period
@@ -609,7 +650,9 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
         k_cache=new_states[0], v_cache=new_states[1],
         kg_cache=new_states[2], kg_n=new_states[3],
         cur_len=state.cur_len + 1,
-        cross_k=state.cross_k, cross_v=state.cross_v)
+        cross_k=state.cross_k, cross_v=state.cross_v,
+        meta_kmin=new_states[4], meta_kmax=new_states[5],
+        meta_n=new_states[6])
     return logits[:, 0], new_state, aggregate_decode_aux(auxs)
 
 
@@ -620,7 +663,8 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
 def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                            k_pages, v_pages, kg_pages, page_table, cur_len,
                            active, options: DecodeOptions,
-                           budget_blocks=None, shard=None):
+                           budget_blocks=None, kmin_pages=None,
+                           kmax_pages=None, shard=None):
     """One token over paged KV. x1 [S,1,d]; pools for ONE layer HEAD-MAJOR
     [P, Hkv, ps, Dh]; page_table [S, npt]; cur_len/active [S] per-slot.
 
@@ -675,7 +719,7 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                    jnp.maximum(new_len, 1), ps), page_table.shape[1])
                if options.measure_sparsity else _zero_layer_aux(b))
         out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-        return out, (k_pages, v_pages, kg_pages), aux
+        return out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages), aux
 
     from repro.serve import paging as pg
     # mirror the contiguous path: the Kg page rows only advance for the
@@ -684,12 +728,19 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         k_pages, v_pages, kg_pages, kr[:, 0], v[:, 0], page_table, cur_len,
         active, p.get("gate") if policy.needs_gate else None, cfg.gate,
         rope_theta=cfg.rope_theta)
+    # ... and the min/max metadata page rows only for the policy that
+    # reads THEM (QuestPolicy): finalize a page's row when it fills
+    if policy.needs_meta and kmin_pages is not None:
+        kmin_pages, kmax_pages = pg.append_meta_paged(
+            kmin_pages, kmax_pages, k_pages, page_table, cur_len, active,
+            ps)
     new_len = cur_len + active.astype(jnp.int32)
 
     if sparse_on:
         inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
                               gate_params=p.get("gate"), kg_pages=kg_pages,
-                              k_pages=k_pages, page_table=page_table)
+                              k_pages=k_pages, page_table=page_table,
+                              kmin_pages=kmin_pages, kmax_pages=kmax_pages)
         idx = policy.select(inp, cfg, impl=select_impl(options.kernel_impl),
                             max_selected=options.max_selected(cfg))
         if budget_blocks is not None:
@@ -712,20 +763,20 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         aux = (_dense_aux(new_len, ps) if options.measure_sparsity
                else _zero_layer_aux(b))
     out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-    return out, (k_pages, v_pages, kg_pages), aux
+    return out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages), aux
 
 
 def block_decode_paged(p: Params, x1, cfg: ModelConfig, layer_pages,
                        page_table, cur_len, active, *,
                        options: DecodeOptions, budget_blocks=None,
                        shard=None):
-    k_pages, v_pages, kg_pages = layer_pages
+    k_pages, v_pages, kg_pages, kmin_pages, kmax_pages = layer_pages
     h = rms_norm(p["ln1"], x1, cfg.norm_eps)
     attn_out, new_pages, aux = attention_decode_paged(
         p["attn"], h, cfg, k_pages=k_pages, v_pages=v_pages,
         kg_pages=kg_pages, page_table=page_table, cur_len=cur_len,
         active=active, options=options, budget_blocks=budget_blocks,
-        shard=shard)
+        kmin_pages=kmin_pages, kmax_pages=kmax_pages, shard=shard)
     x1 = x1 + attn_out
     h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
     if "moe" in p:
@@ -780,11 +831,26 @@ def lm_decode_step_paged(params: Params, pages, token: jnp.ndarray,
 
 
 def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],
-               cfg: ModelConfig, max_len: int, shard=None
+               cfg: ModelConfig, max_len: int, shard=None,
+               options: Optional[DecodeOptions] = None
                ) -> Tuple[jnp.ndarray, DecodeState]:
-    """Full forward filling the caches. Returns (last logits, state)."""
+    """Full forward filling the caches. Returns (last logits, state).
+
+    ``batch["lengths"]`` (optional, [B] int): TRUE per-row prompt lengths
+    when ``tokens`` is right-padded to a bucketed width (the serve-path
+    prefill bucketing, ISSUE 5 satellite). Causality keeps real positions
+    unaffected by the pad tokens; the returned logits are gathered at
+    ``lengths - 1``, ``cur_len``/``kg_n`` reflect the true lengths, and
+    Kg rows whose block contains any pad token are zeroed (the staleness
+    contract: a partial trailing block reads a ZERO row).
+
+    ``options`` (the same DecodeOptions the decode steps will run with)
+    additionally builds the selection-metadata cache (core.metacache)
+    when its policy reads one — the bulk O(S) pass that makes every
+    subsequent QuestPolicy step O(block_size)."""
     tokens = batch["tokens"]
     b, l = tokens.shape
+    lengths = batch.get("lengths")                       # [B] | None
     x = jnp.take(params["embed"]["w"], tokens, axis=0)
     pos = jnp.broadcast_to(jnp.arange(l), (b, l))
     cross_ctx = batch.get("image_embeds")
@@ -803,6 +869,8 @@ def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],
                       ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
     v_cache = jnp.pad(jnp.moveaxis(v, 3, 2),
                       ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    cur_len = (jnp.full((b,), l, jnp.int32) if lengths is None
+               else lengths.astype(jnp.int32))
     kg_cache = kg_n = None
     if kg is not None:
         nb_max = max_len // cfg.gate.block_size
@@ -810,7 +878,28 @@ def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],
         kg_cache = jnp.pad(jnp.moveaxis(kg, 3, 2),
                            ((0, 0), (0, 0), (0, 0), (0, nb_max - nb),
                             (0, 0))).astype(jnp.dtype(cfg.dtype))
-        kg_n = jnp.full((nl, b), nb, jnp.int32)
+        kg_n = jnp.broadcast_to(cur_len // cfg.gate.block_size,
+                                (nl, b)).astype(jnp.int32)
+        if lengths is not None:
+            # bucketed prefill: blocks touching pad tokens hold garbage Kg
+            # rows — zero them (rows >= lengths // bs), keeping the
+            # partial-trailing-block-reads-zero staleness contract
+            row_ok = (jnp.arange(nb_max)[None, :]
+                      < (cur_len // cfg.gate.block_size)[:, None])
+            kg_cache = jnp.where(row_ok[None, :, None, :, None], kg_cache,
+                                 jnp.zeros((), kg_cache.dtype))
+
+    meta_kmin = meta_kmax = meta_n = None
+    if options is not None and options.policy.needs_meta:
+        # bulk-build the selection-metadata cache off the head-major K
+        # cache (the one allowed O(S) pass; kv_len masking keeps pad /
+        # beyond-length tokens out of the min/max)
+        def one_layer(kc_1l):
+            return mc.prefill_metacache(
+                mc.init_metacache(b, max_len // cfg.gate.block_size,
+                                  cfg.n_kv_heads, cfg.resolved_head_dim),
+                kc_1l, cur_len, cfg.gate.block_size)
+        meta_kmin, meta_kmax, meta_n = jax.vmap(one_layer)(k_cache)
 
     cross_k = cross_v = None
     if cfg.cross_attn_period and cross_ctx is not None:
@@ -827,14 +916,17 @@ def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],
         cross_k, cross_v = jax.vmap(cross_kv)(params["cross_blocks"])
 
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
-    last = x[:, -1]
+    last = (x[:, -1] if lengths is None
+            else x[jnp.arange(b), jnp.maximum(cur_len - 1, 0)])
     if cfg.tie_embeddings:
         logits = last @ params["embed"]["w"].T
     else:
         logits = linear(params["lm_head"], last)
     state = DecodeState(k_cache=k_cache, v_cache=v_cache, kg_cache=kg_cache,
-                        kg_n=kg_n, cur_len=jnp.full((b,), l, jnp.int32),
-                        cross_k=cross_k, cross_v=cross_v)
+                        kg_n=kg_n, cur_len=cur_len,
+                        cross_k=cross_k, cross_v=cross_v,
+                        meta_kmin=meta_kmin, meta_kmax=meta_kmax,
+                        meta_n=meta_n)
     return logits, state
 
 

@@ -70,10 +70,9 @@ class DecodeEngine:
         self._step = jax.jit(functools.partial(
             self._decode_step, options=self.options), donate_argnums=(1,))
         self._paged_step = None     # built lazily on first serve()
-        # serve()-path prefill, jitted per distinct prompt length (compiling
-        # is cheaper than ONE eager trace at any scale and cached calls are
-        # ~1000x faster; length BUCKETING to bound the cache is the known
-        # ROADMAP follow-up)
+        # serve()-path prefill, jitted per POWER-OF-TWO page bucket (ISSUE
+        # 5: prompts are right-padded to the bucket, so the cache holds
+        # O(log max_len) programs instead of one per distinct length)
         self._prefill_jit: Dict[int, Any] = {}
         self._last_aux = None       # measured selection of the latest step
         self._last_active = None    # serve(): slots active during that step
@@ -92,8 +91,11 @@ class DecodeEngine:
         # explicitly (generate splits its key before this call)
         if key is None and not self.options.sampling.greedy:
             key = jax.random.PRNGKey(0)
+        # options ride along so metadata-reading policies (QuestPolicy) get
+        # their selection-metadata cache bulk-built at prefill
         logits, state = self.api.prefill(self.params, batch, self.cfg,
-                                         self.max_len)
+                                         self.max_len,
+                                         options=self.options)
         first = smp.sample(logits, self.options.sampling, key)
         return first, state
 
@@ -247,7 +249,10 @@ class DecodeEngine:
 
         # layer count from the stacked params (leading dim of any leaf)
         nl = jax.tree.leaves(self.params["blocks"])[0].shape[0]
-        pages = pg.init_pages(cfg, num_pages, nl)
+        # min/max metadata pools only for the policy that reads them
+        # (needs_meta is part of the SelectionPolicy protocol)
+        pages = pg.init_pages(cfg, num_pages, nl,
+                              with_meta=self.options.policy.needs_meta)
         mesh = getattr(self.shard, "mesh", None)
         if mesh is not None and self.options.kernel_impl == "sharded":
             # paged x sharded: keep the pools resident head-sharded so the
@@ -285,12 +290,14 @@ class DecodeEngine:
             # power-of-two id padding (trash-page ids): bounds the jit
             # cache of extract/restore to O(log pool) programs; re-admission
             # pads the same n_content to the same bucket, so shapes match
-            k, v, kg = pg.extract_pages(
+            k, v, kg, kmin, kmax = pg.extract_pages(
                 pages, pg.pad_page_ids(req.pages[:n_content]))
             swap.put(req.rid, SwapEntry(
                 k=np.asarray(k), v=np.asarray(v),
                 kg=None if kg is None else np.asarray(kg),
-                token=int(token_buf[req.slot]), cur_len=req.swap_len))
+                token=int(token_buf[req.slot]), cur_len=req.swap_len,
+                kmin=None if kmin is None else np.asarray(kmin),
+                kmax=None if kmax is None else np.asarray(kmax)))
 
         # recycled pages may hold a previous tenant's Kg row; the
         # staleness contract needs a ZERO row on every partial trailing
@@ -302,8 +309,9 @@ class DecodeEngine:
         # iteration (LIFO reuse before the end-of-iteration sweep).
         dirty: set = set()
         # reserve admission never grows: every reuse goes through
-        # scatter_prefill (which zeroes the Kg rows itself) — no sweeps
-        gate_paged = pages.kg_pages is not None and admission == "lazy"
+        # scatter_prefill (which zeroes the Kg/meta rows itself) — no sweeps
+        gate_paged = admission == "lazy" and (
+            pages.kg_pages is not None or pages.kmin_pages is not None)
 
         def sweep_dirty(ids) -> None:
             nonlocal pages, dirty
@@ -318,7 +326,11 @@ class DecodeEngine:
                     pages = pg.restore_pages(
                         pages, jnp.asarray(entry.k), jnp.asarray(entry.v),
                         None if entry.kg is None else jnp.asarray(entry.kg),
-                        pg.pad_page_ids(req.pages))
+                        pg.pad_page_ids(req.pages),
+                        None if entry.kmin is None
+                        else jnp.asarray(entry.kmin),
+                        None if entry.kmax is None
+                        else jnp.asarray(entry.kmax))
                     token_buf[req.slot] = entry.token
                     req.swapped = False
                 else:
@@ -425,6 +437,10 @@ class DecodeEngine:
             "peak_pages_used": (sched.allocator.num_pages - 1
                                 - sched.allocator.min_free),
             "num_pages": num_pages, "page_size": ps,
+            # bucketed-prefill jit cache (bounded: one program per
+            # power-of-two page count ever seen by this engine)
+            "prefill_jit_programs": len(self._prefill_jit),
+            "prefill_buckets_pages": sorted(self._prefill_jit),
             # measured per-request selection telemetry (decode steps only;
             # empty — not zero — when telemetry is compiled out)
             "sparsity_by_rid": {rid: rho_sum[rid] / rho_n[rid]
@@ -437,24 +453,41 @@ class DecodeEngine:
     def _paged_prefill(self, pages: pg.PagedPages, req: Request, ps: int):
         """Contiguous prefill of one request, scattered into its pages.
 
-        max_len is the page-aligned prompt length so the cache slices
-        reshape into whole pages. Any pages beyond the prompt (upfront
-        ``reserve`` admission) only receive their (zeroed) Kg rows here —
-        their K/V fill during decode; under ``lazy`` admission the page
-        list covers exactly the prompt, and growth pages get their Kg rows
-        zeroed at allocation time (``pg.reset_kg_rows``). Returns
-        (pages, fp32 logits row) — the caller samples."""
+        Prompt lengths are rounded UP to power-of-two page buckets (ISSUE
+        5 satellite): tokens are right-padded to the bucket width and the
+        true length rides along as ``batch["lengths"]`` — causality keeps
+        real positions unaffected by pad tokens, ``lm_prefill`` gathers
+        the logits at the true last position, and ``scatter_prefill``
+        copies only the true prompt's pages (garbage keys in the trailing
+        page are masked by ``kv_len`` everywhere; its Kg/meta rows are
+        zeroed per the staleness contract). The jit cache is therefore
+        keyed on the BUCKET, not the prompt length: O(log max_len)
+        programs instead of one per distinct length (the page scatter is
+        bucket-keyed too — traced length + padded ids). Any pages beyond
+        the prompt (upfront ``reserve`` admission) get zeroed Kg/meta
+        rows and kv_len-masked filler K/V; under ``lazy`` admission
+        growth pages are zeroed at allocation time
+        (``pg.reset_kg_rows``). Returns (pages, fp32 logits row) — the
+        caller samples."""
         plen = req.prompt_len
         n_prompt = -(-plen // ps)
-        fn = self._prefill_jit.get(plen)
+        bucket = 1 << (n_prompt - 1).bit_length()       # pages, power of 2
+        fn = self._prefill_jit.get(bucket)
         if fn is None:
-            fn = self._prefill_jit[plen] = jax.jit(functools.partial(
-                self.api.prefill, cfg=self.cfg, max_len=n_prompt * ps))
+            fn = self._prefill_jit[bucket] = jax.jit(functools.partial(
+                self.api.prefill, cfg=self.cfg, max_len=bucket * ps,
+                options=self.options))
+        toks = np.zeros((1, bucket * ps), np.int32)
+        toks[0, :plen] = req.prompt
         logits, cstate = fn(self.params,
-                            {"tokens": jnp.asarray(req.prompt)[None]})
+                            {"tokens": jnp.asarray(toks),
+                             "lengths": jnp.asarray([plen], jnp.int32)})
+        # traced length + power-of-two-padded ids: the scatter compiles
+        # once per (cache bucket, id bucket), not once per prompt length
         pages = pg.scatter_prefill(
-            pages, cstate.k_cache, cstate.v_cache, cstate.kg_cache, plen,
-            jnp.asarray(req.pages, jnp.int32), ps)
+            pages, cstate.k_cache, cstate.v_cache, cstate.kg_cache,
+            jnp.asarray(plen, jnp.int32), pg.pad_page_ids(req.pages), ps,
+            kmin_cache=cstate.meta_kmin, kmax_cache=cstate.meta_kmax)
         return pages, np.asarray(logits[0], np.float32)
 
     def sparsity_stats(self, state=None) -> Dict[str, Any]:

@@ -84,12 +84,17 @@ class OffloadedKV(NamedTuple):
 class SwapEntry(NamedTuple):
     """One preempted request's host-resident state: page contents in
     LOGICAL page order plus the bits needed to resume decode exactly where
-    it stopped."""
+    it stopped. ``kmin``/``kmax`` are the selection-metadata page rows
+    (metadata-reading policies only) — they round-trip bitwise with the
+    rest so a resumed Quest decode selects exactly what an unpreempted
+    one would."""
     k: np.ndarray                 # [L, n_pages, Hkv, ps, Dh]
     v: np.ndarray                 # [L, n_pages, Hkv, ps, Dh]
     kg: Optional[np.ndarray]      # [L, n_pages, Hkv, Dg] | None
     token: int                    # last sampled token (re-fed on resume)
     cur_len: int                  # sequence length at preemption
+    kmin: Optional[np.ndarray] = None   # [L, n_pages, Hkv, Dh] | None
+    kmax: Optional[np.ndarray] = None   # [L, n_pages, Hkv, Dh] | None
 
 
 class HostSwapSpace:
@@ -116,7 +121,9 @@ class HostSwapSpace:
     @staticmethod
     def _nbytes(e: SwapEntry) -> int:
         return (e.k.nbytes + e.v.nbytes
-                + (e.kg.nbytes if e.kg is not None else 0))
+                + (e.kg.nbytes if e.kg is not None else 0)
+                + (e.kmin.nbytes if e.kmin is not None else 0)
+                + (e.kmax.nbytes if e.kmax is not None else 0))
 
     def put(self, rid, entry: SwapEntry) -> None:
         if rid in self._entries:

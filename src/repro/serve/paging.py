@@ -15,6 +15,7 @@ HEAD-MAJOR — ISSUE 2 invariant: decode consumes the pools natively, no
 page-pool-sized transpose anywhere on the hot path):
   k_pages / v_pages  [L, P, Hkv, ps, Dh]   post-rope keys / values
   kg_pages           [L, P, Hkv, Dg]       gate K-compression twin
+  kmin/kmax_pages    [L, P, Hkv, Dh] f32   selection-metadata twin (Quest)
   page_table         [n_slots, npt] int32  physical ids; NULL_PAGE = empty
   cur_len / active   [n_slots]             per-slot ragged lengths
 
@@ -44,63 +45,102 @@ NULL_PAGE = 0
 
 
 class PagedPages(NamedTuple):
-    """Device-side page pools, stacked over self-attention layers."""
+    """Device-side page pools, stacked over self-attention layers.
+
+    ``kmin_pages``/``kmax_pages`` are the paged twin of the selection-
+    metadata cache (core.metacache): ONE min/max row per physical page
+    (page == gate block), float32 for bitwise parity with the recompute
+    reference. Allocated only for metadata-reading policies (QuestPolicy)
+    and swept/swapped alongside ``kg_pages``."""
     k_pages: jnp.ndarray                 # [L, P, Hkv, ps, Dh]  (head-major)
     v_pages: jnp.ndarray                 # [L, P, Hkv, ps, Dh]
     kg_pages: Optional[jnp.ndarray]      # [L, P, Hkv, Dg]
+    kmin_pages: Optional[jnp.ndarray] = None   # [L, P, Hkv, Dh] float32
+    kmax_pages: Optional[jnp.ndarray] = None   # [L, P, Hkv, Dh] float32
 
 
 def init_pages(cfg: ModelConfig, num_pages: int, n_layers: int,
-               dtype=None) -> PagedPages:
+               dtype=None, with_meta: bool = False) -> PagedPages:
     dt = dtype or jnp.dtype(cfg.dtype)
     ps = cfg.gate.block_size
     hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
     kg = (jnp.zeros((n_layers, num_pages, hkv, cfg.gate.d_gate), dt)
           if cfg.gate.enabled else None)
+    def meta():
+        # two DISTINCT buffers: the pools are donated through the jitted
+        # step, and XLA rejects donating one buffer twice
+        return (jnp.zeros((n_layers, num_pages, hkv, dh), jnp.float32)
+                if with_meta else None)
     return PagedPages(
         k_pages=jnp.zeros((n_layers, num_pages, hkv, ps, dh), dt),
         v_pages=jnp.zeros((n_layers, num_pages, hkv, ps, dh), dt),
-        kg_pages=kg)
+        kg_pages=kg, kmin_pages=meta(), kmax_pages=meta())
 
 
-@functools.partial(jax.jit, static_argnames=("length", "block_size"),
+@functools.partial(jax.jit, static_argnames=("block_size",),
                    donate_argnums=(0,))
 def scatter_prefill(pages: PagedPages, k_cache: jnp.ndarray,
                     v_cache: jnp.ndarray, kg_cache: Optional[jnp.ndarray],
-                    length: int, page_ids: jnp.ndarray,
-                    block_size: int) -> PagedPages:
+                    length: jnp.ndarray, page_ids: jnp.ndarray,
+                    block_size: int,
+                    kmin_cache: Optional[jnp.ndarray] = None,
+                    kmax_cache: Optional[jnp.ndarray] = None) -> PagedPages:
     """Copy one request's contiguous prefill caches into its pages.
 
     k_cache/v_cache: HEAD-MAJOR [L, 1, Hkv, S_max, Dh] from ``lm_prefill``
-    with S_max >= n_pages * block_size; ``page_ids`` [n_reserved] int32
-    covers the request's FULL reservation (prompt pages + pages for future
-    decode tokens). kg rows beyond the ``length // block_size`` complete
-    blocks are zeroed — recycled pages may hold the previous tenant's
-    entries. (This scatter is prefill-time, so the page-major regrouping
-    here is the allowed one-time conversion.)
+    with S_max a whole number of pages; ``page_ids`` covers the request's
+    pages (prompt pages, plus the full reservation under upfront
+    admission), PADDED to a power-of-two with NULL_PAGE
+    (``pad_page_ids``) so — together with ``length`` being a TRACED array
+    (not a static) — the jit cache holds one program per (cache bucket,
+    id bucket) pair, not one per distinct prompt length (ISSUE 5
+    bucketing). Every cache page is copied; ids beyond the prompt are
+    either NULL (trash page) or reserved growth pages whose K/V reads are
+    masked by ``kv_len`` anyway. kg rows beyond the ``length //
+    block_size`` complete blocks are zeroed — recycled pages may hold the
+    previous tenant's entries — and the selection-metadata rows
+    (``kmin_cache``/``kmax_cache`` [L, 1, Hkv, nb, Dh] from a
+    metacache-building prefill) follow the exact same rule. (This scatter
+    is prefill-time, so the page-major regrouping here is the allowed
+    one-time conversion.)
     """
-    n_res = page_ids.shape[0]
-    n_prompt = -(-length // block_size)
-    kl = k_cache[:, 0, :, : n_prompt * block_size]      # [L, Hkv, T, Dh]
-    vl = v_cache[:, 0, :, : n_prompt * block_size]
-    nl, hkv, _, dh = kl.shape
-    kl = jnp.swapaxes(kl.reshape(nl, hkv, n_prompt, block_size, dh), 1, 2)
-    vl = jnp.swapaxes(vl.reshape(nl, hkv, n_prompt, block_size, dh), 1, 2)
-    k_pages = pages.k_pages.at[:, page_ids[:n_prompt]].set(
-        kl.astype(pages.k_pages.dtype))
-    v_pages = pages.v_pages.at[:, page_ids[:n_prompt]].set(
-        vl.astype(pages.v_pages.dtype))
+    n_ids = page_ids.shape[0]
+    nl, _, hkv, s_max, dh = k_cache.shape
+    n_cache = s_max // block_size
+    src = jnp.minimum(jnp.arange(n_ids), n_cache - 1)   # clamped row gather
+
+    def page_rows(cache):                # [L,1,Hkv,S,Dh] -> [L,n_ids,...]
+        rows = jnp.swapaxes(
+            cache[:, 0].reshape(nl, hkv, n_cache, block_size, dh), 1, 2)
+        return rows[:, src]
+
+    k_pages = pages.k_pages.at[:, page_ids].set(
+        page_rows(k_cache).astype(pages.k_pages.dtype))
+    v_pages = pages.v_pages.at[:, page_ids].set(
+        page_rows(v_cache).astype(pages.v_pages.dtype))
+    nbc = length // block_size           # traced: complete prompt blocks
+
+    def row_scatter(pool, rows_cache):
+        """Zero every listed page's row, then the ``nbc`` complete-block
+        rows from the contiguous cache (head-major [L,1,Hkv,nb,*])."""
+        new = jnp.zeros((nl, n_ids) + pool.shape[2:], pool.dtype)
+        if rows_cache is not None:
+            nb = rows_cache.shape[3]
+            srcr = jnp.minimum(jnp.arange(n_ids), nb - 1)
+            rows = jnp.swapaxes(rows_cache[:, 0], 1, 2)[:, srcr]
+            keep = (jnp.arange(n_ids) < nbc).reshape(
+                (1, n_ids) + (1,) * (pool.ndim - 2))
+            new = jnp.where(keep, rows.astype(pool.dtype), new)
+        return pool.at[:, page_ids].set(new)
+
     kg_pages = pages.kg_pages
     if kg_pages is not None:
-        nbc = length // block_size
-        kg_new = jnp.zeros((nl, n_res) + kg_pages.shape[2:], kg_pages.dtype)
-        if nbc and kg_cache is not None:
-            # kg_cache head-major [L, 1, Hkv, nb, Dg] -> per-page rows
-            kg_new = kg_new.at[:, :nbc].set(
-                jnp.swapaxes(kg_cache[:, 0, :, :nbc], 1, 2)
-                .astype(kg_pages.dtype))
-        kg_pages = kg_pages.at[:, page_ids].set(kg_new)
-    return PagedPages(k_pages, v_pages, kg_pages)
+        kg_pages = row_scatter(kg_pages, kg_cache)
+    kmin_pages, kmax_pages = pages.kmin_pages, pages.kmax_pages
+    if kmin_pages is not None:
+        kmin_pages = row_scatter(kmin_pages, kmin_cache)
+        kmax_pages = row_scatter(kmax_pages, kmax_cache)
+    return PagedPages(k_pages, v_pages, kg_pages, kmin_pages, kmax_pages)
 
 
 def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
@@ -149,6 +189,39 @@ def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                          kg_new.astype(kg_pages.dtype), kg_cur)
     kg_pages = kg_pages.at[phys_kg].set(kg_write)
     return k_pages, v_pages, kg_pages
+
+
+def append_meta_paged(kmin_pages: jnp.ndarray, kmax_pages: jnp.ndarray,
+                      k_pages: jnp.ndarray, page_table: jnp.ndarray,
+                      cur_len: jnp.ndarray, active: jnp.ndarray,
+                      page_size: int
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """ONE layer's paged twin of ``metacache.update_metacache``.
+
+    Called AFTER ``append_token_paged`` wrote the new token's key: when a
+    slot's page completes ((cur_len+1) % ps == 0) that page's key min/max
+    is finalized into its ``kmin_pages``/``kmax_pages`` row — reading
+    exactly one physical page per slot (O(page_size), the metadata analog
+    of the Kg finalize). Inactive rows route to the null page.
+    """
+    ps = page_size
+    n_slots = cur_len.shape[0]
+    sidx = jnp.arange(n_slots)
+    logical = cur_len // ps
+    phys = page_table[sidx, logical]                       # [S]
+    phys = jnp.where(active, phys, NULL_PAGE)
+    completed = active & (((cur_len + 1) % ps) == 0)       # [S]
+
+    from repro.core.metacache import _block_minmax
+    blk = k_pages[phys]                                    # [S, Hkv, ps, Dh]
+    mn_new, mx_new = _block_minmax(blk, jnp.ones((1, 1, ps, 1), bool))
+    phys_w = jnp.where(completed, phys, NULL_PAGE)
+    wm = completed[:, None, None]
+    kmin_pages = kmin_pages.at[phys_w].set(
+        jnp.where(wm, mn_new, kmin_pages[phys_w]))
+    kmax_pages = kmax_pages.at[phys_w].set(
+        jnp.where(wm, mx_new, kmax_pages[phys_w]))
+    return kmin_pages, kmax_pages
 
 
 def gather_kg(kg_pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
@@ -228,45 +301,59 @@ def pad_page_ids(ids: Sequence[int], *, min_len: int = 1) -> jnp.ndarray:
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def reset_kg_rows(pages: PagedPages, page_ids: jnp.ndarray) -> PagedPages:
-    """Zero the Kg rows of freshly (lazily) allocated pages.
+    """Zero the Kg AND selection-metadata rows of freshly (lazily)
+    allocated pages.
 
-    A recycled physical page still holds the previous tenant's Kg entry;
-    under upfront reservation ``scatter_prefill`` zeroed every reserved
-    page's row at admission, so lazy growth must do the same at allocation
-    time to keep the staleness contract (a partial trailing page reads a
-    ZERO row, exactly like the contiguous cache). K/V page contents need no
-    reset: every read is masked by the logical ``kv_len``.
+    A recycled physical page still holds the previous tenant's Kg /
+    min-max entries; under upfront reservation ``scatter_prefill`` zeroed
+    every reserved page's rows at admission, so lazy growth must do the
+    same at allocation time to keep the staleness contract (a partial
+    trailing page reads a ZERO row, exactly like the contiguous cache).
+    K/V page contents need no reset: every read is masked by the logical
+    ``kv_len``.
     """
-    if pages.kg_pages is None:
-        return pages
-    kg = pages.kg_pages.at[:, page_ids].set(0.0)
-    return pages._replace(kg_pages=kg)
+    out = pages
+    if pages.kg_pages is not None:
+        out = out._replace(kg_pages=out.kg_pages.at[:, page_ids].set(0.0))
+    if pages.kmin_pages is not None:
+        out = out._replace(
+            kmin_pages=out.kmin_pages.at[:, page_ids].set(0.0),
+            kmax_pages=out.kmax_pages.at[:, page_ids].set(0.0))
+    return out
 
 
 @jax.jit
 def extract_pages(pages: PagedPages, page_ids: jnp.ndarray
-                  ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray]]:
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray],
+                             Optional[jnp.ndarray], Optional[jnp.ndarray]]:
     """Gather one request's pages for swap-out (preemption).
 
     page_ids [n] physical ids in LOGICAL order -> (k [L,n,Hkv,ps,Dh],
-    v [L,n,Hkv,ps,Dh], kg [L,n,Hkv,Dg] | None). The caller device_gets the
-    result into the host swap space (serve.offload.HostSwapSpace).
+    v [L,n,Hkv,ps,Dh], kg [L,n,Hkv,Dg] | None, kmin [L,n,Hkv,Dh] | None,
+    kmax | None). The caller device_gets the result into the host swap
+    space (serve.offload.HostSwapSpace).
     """
     k = pages.k_pages[:, page_ids]
     v = pages.v_pages[:, page_ids]
     kg = pages.kg_pages[:, page_ids] if pages.kg_pages is not None else None
-    return k, v, kg
+    kmin = (pages.kmin_pages[:, page_ids]
+            if pages.kmin_pages is not None else None)
+    kmax = (pages.kmax_pages[:, page_ids]
+            if pages.kmax_pages is not None else None)
+    return k, v, kg, kmin, kmax
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
 def restore_pages(pages: PagedPages, k: jnp.ndarray, v: jnp.ndarray,
                   kg: Optional[jnp.ndarray],
-                  page_ids: jnp.ndarray) -> PagedPages:
+                  page_ids: jnp.ndarray,
+                  kmin: Optional[jnp.ndarray] = None,
+                  kmax: Optional[jnp.ndarray] = None) -> PagedPages:
     """Scatter swapped-out page contents into a fresh set of physical
     pages (re-admission after preemption). The new physical ids may differ
     from the original ones — decode math is placement-invariant (every
     access goes through the page table), so the round trip is bitwise
-    lossless."""
+    lossless; the selection-metadata rows ride along the same way."""
     k_pages = pages.k_pages.at[:, page_ids].set(
         k.astype(pages.k_pages.dtype))
     v_pages = pages.v_pages.at[:, page_ids].set(
@@ -274,4 +361,10 @@ def restore_pages(pages: PagedPages, k: jnp.ndarray, v: jnp.ndarray,
     kg_pages = pages.kg_pages
     if kg_pages is not None and kg is not None:
         kg_pages = kg_pages.at[:, page_ids].set(kg.astype(kg_pages.dtype))
-    return PagedPages(k_pages, v_pages, kg_pages)
+    kmin_pages, kmax_pages = pages.kmin_pages, pages.kmax_pages
+    if kmin_pages is not None and kmin is not None:
+        kmin_pages = kmin_pages.at[:, page_ids].set(
+            kmin.astype(kmin_pages.dtype))
+        kmax_pages = kmax_pages.at[:, page_ids].set(
+            kmax.astype(kmax_pages.dtype))
+    return PagedPages(k_pages, v_pages, kg_pages, kmin_pages, kmax_pages)

@@ -19,6 +19,12 @@ Usage (from repo root):
 Both modes merge their arrays into tests/golden_policy.npz. The two modes
 are separate processes because jax pins the device count at first init.
 
+Refresh history: the paged_rid* arrays were recaptured for ISSUE 5's
+serve-path prefill BUCKETING (prompts right-padded to power-of-two page
+buckets): the padded prefill changes XLA's fp reduction order, moving
+paged logits by <= 2.4e-7 while every TOKEN trajectory and the
+contiguous/sharded arrays stayed bit-identical.
+
 ``--verify`` (the CI golden-drift guard, ISSUE 4): recompute the mode's
 arrays and BITWISE-compare them against the committed npz instead of
 writing — exits non-zero on drift, so a stale golden is caught as its own

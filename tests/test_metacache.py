@@ -1,0 +1,366 @@
+"""Selection-metadata cache suite (ISSUE 5).
+
+Contracts:
+  1. The incremental metacache (core.metacache) is BITWISE equal to the
+     recompute-from-K-cache reference on every visible block, over 12+
+     decode steps, and QuestPolicy (cached) produces bitwise-identical
+     logits/tokens to QuestRecomputePolicy (the pre-PR O(S) path) on the
+     contiguous, paged, and preempt->resume serving paths.
+  2. QuestPolicy's decode step performs no O(S) cache read and no
+     cache-sized paged gather — enforced at the source level, the same
+     spirit as tests/test_layout.py.
+  3. Satellite bugfixes stay fixed: budget_select's telemetry mask is
+     order-independent (block 0 + -1 padding), update_kcache /
+     update_metacache never finalize an empty slot (cur_len == 0), and
+     build_quest_meta clamps n_blocks to its stored rows on
+     non-block-aligned caches.
+  4. serve()-path prefill bucketing: the jit cache is bounded by the
+     power-of-two page buckets, not the number of distinct prompt
+     lengths, and results are unchanged vs per-request decode.
+"""
+import dataclasses
+import functools
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.config import GateConfig, reduced
+from repro.core import kcache as kc
+from repro.core import metacache as mc
+from repro.core import quest
+from repro.core import sparsity as sp
+from repro.core.policy import (DecodeOptions, QuestPolicy,
+                               QuestRecomputePolicy)
+from repro.models import transformer as tf
+from repro.models.registry import get_api
+from repro.serve.engine import DecodeEngine
+
+jax.config.update("jax_platform_name", "cpu")
+
+CACHED = DecodeOptions(policy=QuestPolicy())
+RECOMPUTE = DecodeOptions(policy=QuestRecomputePolicy())
+
+
+def _tiny_cfg():
+    cfg = reduced(configs.get("qwen3_0_6b")).replace(dtype="float32")
+    return cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, token_budget=32))
+
+
+def _mk_requests(cfg, specs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"rid": i, "max_new_tokens": mn,
+             "tokens": rng.integers(0, cfg.vocab_size,
+                                    size=(pl,)).astype(np.int32)}
+            for i, (pl, mn) in enumerate(specs)]
+
+
+# ---------------------------------------------------------------------------
+# 1. incremental metacache == recompute reference, bitwise
+# ---------------------------------------------------------------------------
+
+def test_contiguous_metacache_bitwise_parity_14_steps():
+    """Cached vs recompute Quest over a 14-step contiguous rollout:
+    logits, tokens AND the metadata itself (every visible block, after
+    the trailing overlay) must be bitwise identical each step."""
+    cfg = _tiny_cfg()
+    bs = cfg.gate.block_size
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 41), 0,
+                              cfg.vocab_size)
+    _, st_c = api.prefill(params, {"tokens": toks}, cfg, 64, options=CACHED)
+    lg, st_r = api.prefill(params, {"tokens": toks}, cfg, 64)
+    tok_c = tok_r = jnp.argmax(lg, -1).astype(jnp.int32)
+    step_c = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg,
+                                       options=CACHED))
+    step_r = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg,
+                                       options=RECOMPUTE))
+    for i in range(14):
+        lc, st_c, _ = step_c(params, st_c, tok_c)
+        lr, st_r, _ = step_r(params, st_r, tok_r)
+        np.testing.assert_array_equal(np.asarray(lc), np.asarray(lr),
+                                      err_msg=f"step {i}: logits diverged")
+        tok_c = jnp.argmax(lc, -1).astype(jnp.int32)
+        tok_r = jnp.argmax(lr, -1).astype(jnp.int32)
+        np.testing.assert_array_equal(np.asarray(tok_c), np.asarray(tok_r))
+        # metadata parity: assemble the view QuestPolicy scores (cached
+        # entries + trailing overlay) and the recompute reference, layer
+        # by layer; compare every VISIBLE block bitwise
+        cur = np.asarray(st_c.cur_len)
+        for layer in range(st_c.k_cache.shape[0]):
+            kcache_l = st_c.k_cache[layer]
+            ref_min, ref_max = quest.quest_meta_decode(
+                kcache_l, st_c.cur_len, bs)
+            tmin, tmax, t_idx = mc.trailing_meta(kcache_l, st_c.cur_len, bs)
+            got_min, got_max = mc.overlay_trailing(
+                st_c.meta_kmin[layer], st_c.meta_kmax[layer],
+                tmin, tmax, t_idx)
+            for row in range(cur.shape[0]):
+                nvis = -(-int(cur[row]) // bs)
+                np.testing.assert_array_equal(
+                    np.asarray(got_min[row, :, :nvis]),
+                    np.asarray(ref_min[row, :, :nvis]),
+                    err_msg=f"step {i} layer {layer} row {row} kmin")
+                np.testing.assert_array_equal(
+                    np.asarray(got_max[row, :, :nvis]),
+                    np.asarray(ref_max[row, :, :nvis]),
+                    err_msg=f"step {i} layer {layer} row {row} kmax")
+
+
+def test_paged_serve_cached_equals_recompute_bitwise():
+    """QuestPolicy through the full paged serving stack == the O(S)
+    recompute policy, bitwise (tokens and logits), on ragged traffic."""
+    cfg = _tiny_cfg()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _mk_requests(cfg, [(21, 12), (17, 12), (30, 12)], seed=4)
+    eng_c = DecodeEngine(cfg, params, max_len=128, options=CACHED)
+    eng_r = DecodeEngine(cfg, params, max_len=128, options=RECOMPUTE)
+    res_c = eng_c.serve([dict(r) for r in reqs], n_slots=2,
+                        collect_logits=True)
+    res_r = eng_r.serve([dict(r) for r in reqs], n_slots=2,
+                        collect_logits=True)
+    for r in reqs:
+        rid = r["rid"]
+        assert res_c[rid] == res_r[rid], f"rid {rid} token mismatch"
+        np.testing.assert_array_equal(res_c["logits"][rid],
+                                      res_r["logits"][rid])
+        np.testing.assert_allclose(
+            res_c["stats"]["sparsity_by_rid"][rid],
+            res_r["stats"]["sparsity_by_rid"][rid], atol=1e-6)
+
+
+def test_paged_quest_preempt_resume_bitwise_lossless():
+    """Preempt -> swap -> re-admit with QuestPolicy: the min/max page
+    rows round-trip through serve.offload.HostSwapSpace bitwise, so a
+    preempted run reproduces the ample-pool run exactly."""
+    cfg = _tiny_cfg()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _mk_requests(cfg, [(20, 12), (18, 10), (22, 9)], seed=0)
+    eng = DecodeEngine(cfg, params, max_len=64, options=CACHED)
+    ample = eng.serve([dict(r) for r in reqs], n_slots=3,
+                      collect_logits=True)
+    assert ample["stats"]["preemptions"] == 0
+    tight = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=8,
+                      collect_logits=True)
+    assert tight["stats"]["preemptions"] > 0
+    assert tight["stats"]["retired"] == len(reqs)
+    for r in reqs:
+        rid = r["rid"]
+        assert tight[rid] == ample[rid], f"rid {rid} token mismatch"
+        np.testing.assert_array_equal(tight["logits"][rid],
+                                      ample["logits"][rid])
+
+
+def test_update_metacache_finalizes_on_boundary_only():
+    """A block's cache entry finalizes exactly when cur_len crosses its
+    boundary, bitwise-equal to the recompute entry; mid-block steps leave
+    the cache untouched."""
+    bs = 8
+    b, hkv, s, dh = 2, 2, 48, 4
+    k_cache = jax.random.normal(jax.random.PRNGKey(0), (b, hkv, s, dh),
+                                jnp.float32)
+    cache = mc.init_metacache(b, s // bs, hkv, dh)
+    for cur in range(1, 20):
+        cur_len = jnp.array([cur, max(cur - 3, 0)], jnp.int32)
+        cache = mc.update_metacache(cache, k_cache, cur_len, bs)
+        ref_min, ref_max = quest.quest_meta_decode(k_cache, cur_len, bs)
+        nc = np.asarray(cache.n_complete)
+        for row, cl in enumerate(np.asarray(cur_len)):
+            assert nc[row] == (0 if cl == 0 else cl // bs)
+            np.testing.assert_array_equal(
+                np.asarray(cache.kmin[row, :, :nc[row]]),
+                np.asarray(ref_min[row, :, :nc[row]]))
+            np.testing.assert_array_equal(
+                np.asarray(cache.kmax[row, :, :nc[row]]),
+                np.asarray(ref_max[row, :, :nc[row]]))
+
+
+# ---------------------------------------------------------------------------
+# 2. no O(S) read / no cache-sized gather on the QuestPolicy decode step
+# ---------------------------------------------------------------------------
+
+def test_quest_policy_select_has_no_cache_sized_read():
+    """Source-level guard (the ISSUE 5 acceptance twin of
+    test_layout's no-transpose grep): the cached QuestPolicy and every
+    metacache decode-path helper must not rebuild metadata from the K
+    cache (quest_meta_decode) or take the cache-sized paged gather
+    (gather_kv / _gathered_k). The trailing block uses block-sized
+    dynamic slices / single-page reads only."""
+    fns = (QuestPolicy.select, mc.update_metacache, mc.trailing_meta,
+           mc.trailing_meta_paged, mc.overlay_trailing)
+    for fn in fns:
+        src = inspect.getsource(fn)
+        for tok in ("gather_kv", "quest_meta_decode", "_gathered_k"):
+            assert tok not in src, f"{fn.__name__} contains {tok}"
+    # ... while the recompute REFERENCE is exactly that O(S) path
+    src = inspect.getsource(QuestRecomputePolicy.select)
+    assert "_gathered_k" in src and "quest_meta_decode" in src
+
+
+def test_quest_policy_without_meta_views_raises():
+    """No silent O(S) fallback: a QuestPolicy fed SelectionInputs without
+    the metacache views must fail loudly with guidance."""
+    from repro.core import policy as pol
+    cfg = _tiny_cfg()
+    h, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    new_len = jnp.array([17], jnp.int32)
+    inp = pol.SelectionInputs(
+        q_nope=jnp.zeros((1, 1, h, dh)), qr=jnp.zeros((1, 1, h, dh)),
+        pos=(new_len - 1)[:, None], new_len=new_len,
+        k_cache=jnp.zeros((1, hkv, 64, dh)))
+    with pytest.raises(ValueError, match="selection-metadata cache"):
+        QuestPolicy().select(inp._replace(k_cache=None,
+                                          kg=jnp.zeros((1, hkv, 8, 16))),
+                             cfg)
+    # k_cache alone (no meta_kmin) must also refuse
+    with pytest.raises(ValueError, match="selection-metadata cache"):
+        QuestPolicy().select(inp, cfg)
+
+
+# ---------------------------------------------------------------------------
+# 3. satellite regressions
+# ---------------------------------------------------------------------------
+
+def test_budget_select_mask_block0_with_padding():
+    """Order-independent telemetry mask: block 0 is selected AND the
+    index list carries -1 padding (k > visible blocks). The padding slots
+    clamp to index 0 — a .set(False) scatter could race the genuine
+    .set(True) for block 0; .max() cannot."""
+    cfg = GateConfig(block_size=8, token_budget=64,
+                     always_first_block=True, always_last_block=True)
+    nb = 8
+    scores = jnp.asarray(
+        np.linspace(1.0, 2.0, nb, dtype=np.float32))[None, None, :]
+    n_valid = jnp.array([2], jnp.int32)       # 8-slot list, 6 slots padded
+    idx, mask = sp.budget_select(scores, n_valid, cfg)
+    idx, mask = np.asarray(idx), np.asarray(mask)
+    assert (idx == -1).sum() == 6              # padding present
+    assert 0 in idx[0, 0]                      # block 0 genuinely selected
+    assert mask[0, 0, 0], "padding scatter corrupted block 0's mask bit"
+    # the mask is exactly the one-hot OR of the index list
+    ref = np.zeros(nb, bool)
+    for i in idx[0, 0]:
+        if i >= 0:
+            ref[i] = True
+    np.testing.assert_array_equal(mask[0, 0], ref)
+
+
+def test_update_kcache_empty_slot_writes_nothing():
+    """cur_len == 0 (empty/retired slot) must not be treated as a
+    completed block: Kg row 0 stays untouched and n_complete stays 0."""
+    cfg = GateConfig(block_size=4, d_gate=8)
+    b, hkv, s, dh = 2, 2, 16, 4
+    from repro.core.attngate import init_attngate
+    gate = init_attngate(jax.random.PRNGKey(0), n_kv_heads=hkv, group=2,
+                         head_dim=dh, cfg=cfg, dtype=jnp.float32)
+    k_cache = jax.random.normal(jax.random.PRNGKey(1), (b, hkv, s, dh),
+                                jnp.float32)
+    sentinel = jnp.full((b, hkv, s // 4, 8), 7.0, jnp.float32)
+    cache = kc.KCompressionCache(sentinel, jnp.zeros((b,), jnp.int32))
+    # row 0 empty (the bug case), row 1 completes block 0
+    out = kc.update_kcache(cache, gate, k_cache,
+                           jnp.array([0, 4], jnp.int32), cfg)
+    assert int(out.n_complete[0]) == 0
+    assert int(out.n_complete[1]) == 1
+    np.testing.assert_array_equal(np.asarray(out.kg[0]),
+                                  np.asarray(sentinel[0]))
+    assert not np.array_equal(np.asarray(out.kg[1, :, 0]),
+                              np.asarray(sentinel[1, :, 0]))
+    # same guard on the metadata twin
+    mcache = mc.SelectionMetaCache(sentinel[..., :4] * 0 + 7.0,
+                                   sentinel[..., :4] * 0 + 7.0,
+                                   jnp.zeros((b,), jnp.int32))
+    mout = mc.update_metacache(mcache, k_cache,
+                               jnp.array([0, 4], jnp.int32), 4)
+    assert int(mout.n_complete[0]) == 0 and int(mout.n_complete[1]) == 1
+    np.testing.assert_array_equal(np.asarray(mout.kmin[0]),
+                                  np.asarray(mcache.kmin[0]))
+
+
+def test_build_quest_meta_unaligned_length_clamps_n_blocks():
+    """kv_len == S with S not block-aligned: n_blocks must clamp to the
+    stored row count (S // bs) instead of indexing past the metadata, and
+    selection must still force the (clamped) trailing block."""
+    bs = 8
+    b, s, hkv, dh = 1, 44, 2, 4                 # 5 full blocks + 4 tokens
+    k_cache = jax.random.normal(jax.random.PRNGKey(0), (b, s, hkv, dh),
+                                jnp.float32)
+    kv_len = jnp.array([s], jnp.int32)
+    meta = quest.build_quest_meta(k_cache, kv_len, bs)
+    assert meta.kmin.shape[1] == s // bs
+    assert int(meta.n_blocks[0]) == s // bs     # clamped (ceil would be 6)
+    cfg = GateConfig(block_size=bs, token_budget=16)
+    q = jax.random.normal(jax.random.PRNGKey(1), (b, 1, 4, dh), jnp.float32)
+    idx, _ = quest.quest_select(q, meta, cfg)
+    sel = np.asarray(idx)[0, 0]
+    sel = sel[sel >= 0]
+    assert (sel < s // bs).all()
+    assert (s // bs - 1) in sel                 # trailing block forced
+
+
+# ---------------------------------------------------------------------------
+# 4. prefill bucketing
+# ---------------------------------------------------------------------------
+
+def test_serve_prefill_jit_cache_is_bucketed():
+    """7 distinct prompt lengths spanning 1..8 pages must compile at most
+    4 prefill programs (buckets 1, 2, 4, 8 pages) — and the stats report
+    the cache size."""
+    cfg = _tiny_cfg()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    specs = [(5, 2), (9, 2), (14, 2), (23, 2), (31, 2), (40, 2), (61, 2)]
+    reqs = _mk_requests(cfg, specs, seed=2)
+    eng = DecodeEngine(cfg, params, max_len=128)
+    from repro.serve import paging as pg
+    pg.scatter_prefill.clear_cache()
+    res = eng.serve(reqs, n_slots=2)
+    st = res["stats"]
+    assert st["retired"] == len(reqs)
+    assert st["prefill_jit_programs"] <= 4
+    # the page SCATTER is bucket-keyed too (traced length, padded ids) —
+    # 7 distinct prompt lengths must not mean 7 scatter programs
+    assert pg.scatter_prefill._cache_size() <= 4
+    assert st["prefill_buckets_pages"] == sorted(st["prefill_buckets_pages"])
+    assert all(bk & (bk - 1) == 0 for bk in st["prefill_buckets_pages"])
+    # the cache is keyed on buckets: a fresh length in an already-compiled
+    # bucket adds NO program
+    eng.serve(_mk_requests(cfg, [(12, 2)], seed=3), n_slots=1)
+    assert len(eng._prefill_jit) == st["prefill_jit_programs"]
+
+
+def test_bucketed_prefill_matches_unpadded_logits():
+    """The bucketed (right-padded + lengths) prefill must agree with the
+    exact-length prefill: same argmax token, logits within fp reduction
+    noise, and identical K/V cache content for the true positions."""
+    cfg = _tiny_cfg()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(11)
+    plen, bucket_len = 21, 32
+    prompt = rng.integers(0, cfg.vocab_size, size=(plen,)).astype(np.int32)
+    lg_exact, st_exact = api.prefill(
+        params, {"tokens": jnp.asarray(prompt)[None]}, cfg, bucket_len)
+    padded = np.zeros((1, bucket_len), np.int32)
+    padded[0, :plen] = prompt
+    lg_bkt, st_bkt = api.prefill(
+        params, {"tokens": jnp.asarray(padded),
+                 "lengths": jnp.asarray([plen], jnp.int32)}, cfg,
+        bucket_len)
+    assert int(jnp.argmax(lg_bkt, -1)[0]) == int(jnp.argmax(lg_exact, -1)[0])
+    np.testing.assert_allclose(np.asarray(lg_bkt), np.asarray(lg_exact),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(st_bkt.k_cache[:, :, :, :plen]),
+        np.asarray(st_exact.k_cache[:, :, :, :plen]), atol=1e-5, rtol=1e-5)
+    assert int(st_bkt.cur_len[0]) == plen
+    # Kg rows for blocks touching pad tokens are ZERO (staleness contract)
+    nbc = plen // cfg.gate.block_size
+    assert float(jnp.abs(st_bkt.kg_cache[:, 0, :, nbc:]).max()) == 0.0

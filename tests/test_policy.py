@@ -156,6 +156,14 @@ def test_policy_select_shape_and_causality(policy):
         qr=jax.random.normal(ks[1], (b, 1, h, dh), jnp.float32),
         pos=(new_len - 1)[:, None], new_len=new_len,
         k_cache=jax.random.normal(ks[2], (b, hkv, s_max, dh), jnp.float32))
+    if getattr(policy, "needs_meta", False):
+        # QuestPolicy consumes the selection-metadata cache (ISSUE 5);
+        # bulk-build it from the same K view the model's prefill would
+        from repro.core import metacache as mc
+        cache = mc.prefill_metacache(
+            mc.init_metacache(b, s_max // bs, hkv, dh), inp.k_cache,
+            new_len, bs)
+        inp = inp._replace(meta_kmin=cache.kmin, meta_kmax=cache.kmax)
     idx = np.asarray(policy.select(inp, cfg))
     k_budget = max(1, cfg.gate.token_budget // bs)
     assert idx.shape == (b, hkv, min(k_budget, s_max // bs))
@@ -238,7 +246,8 @@ def test_policy_paged_serve_quest():
     res = eng.serve(reqs, n_slots=2, collect_logits=True)
     for r in reqs:
         logits, st = api.prefill(
-            params, {"tokens": jnp.asarray(r["tokens"])[None]}, cfg, 128)
+            params, {"tokens": jnp.asarray(r["tokens"])[None]}, cfg, 128,
+            options=opts)    # builds the quest selection-metadata cache
         lgs = [np.asarray(logits[0], np.float32)]
         t = jnp.argmax(logits, -1).astype(jnp.int32)
         toks = [int(t[0])]
@@ -430,7 +439,7 @@ def test_serve_no_budget_no_mask_threshold_nongate():
     res = eng.serve([req], n_slots=1, collect_logits=True)
     logits, st = api.prefill(params,
                              {"tokens": jnp.asarray(req["tokens"])[None]},
-                             cfg, 128)
+                             cfg, 128, options=opts)
     lgs = [np.asarray(logits[0], np.float32)]
     t = jnp.argmax(logits, -1).astype(jnp.int32)
     toks = [int(t[0])]
