@@ -43,7 +43,8 @@ import numpy as np
 
 import repro.configs as configs
 from repro.config import TrainConfig, OptimConfig, reduced
-from repro.core.policy import DecodeOptions, DensePolicy, get_policy
+from repro.core.policy import (DecodeOptions, DensePolicy, SelectionSchedule,
+                               get_policy)
 from repro.data.pipeline import DataState, make_batch
 from repro.kernels import ops
 from repro.models import transformer as tf
@@ -637,11 +638,20 @@ def bench_policies():
     # "quest_cached" is the incremental selection-metadata cache path
     # (ISSUE 5) — the registry's default QuestPolicy. Comparing the two
     # rows IS the tentpole metric: same bitwise selections, O(bs) step.
-    sweep = (("dense", "dense"), ("gate", "gate"), ("oracle", "oracle"),
-             ("quest", "quest_recompute"), ("quest_cached", "quest"),
-             ("sliding_window", "sliding_window"))
-    for name, registry_name in sweep:
-        opts = DecodeOptions(policy=get_policy(registry_name))
+    # "gate_reuse" is the step-level selection plan (ISSUE 6): the gate
+    # scores ONCE at layer 0 and every later layer reuses the [B,Hkv,k]
+    # plan — same budget, same kernels, selection cost amortised across
+    # the stack. Comparing gate vs gate_reuse step_ms/agreement rows IS
+    # that tentpole's full-step metric (the micro-bench below isolates
+    # the selection term itself).
+    reuse_sched = SelectionSchedule(select_layer=0)
+    sweep = (("dense", "dense", None), ("gate", "gate", None),
+             ("gate_reuse", "gate", reuse_sched), ("oracle", "oracle", None),
+             ("quest", "quest_recompute", None), ("quest_cached", "quest", None),
+             ("sliding_window", "sliding_window", None))
+    for name, registry_name, sched in sweep:
+        opts = DecodeOptions(policy=get_policy(registry_name),
+                             schedule=sched or SelectionSchedule())
         step = jax.jit(functools.partial(tf.lm_decode_step, cfg=cfg,
                                          options=opts))
         if opts.policy.needs_meta:
@@ -714,6 +724,46 @@ def bench_policies():
             jax.block_until_ready(out)
             best = min(best, time.perf_counter() - t0)
         emit("policies", f"{label}_us", f"{best / n_it * 1e6:.1f}")
+
+    # micro-benchmark of the SELECTION term vs reuse interval (ISSUE 6):
+    # a SelectionSchedule with reuse interval N runs gate selection at
+    # ceil(L/N) of a nominal L=8-layer stack's layers each step (the rest
+    # reuse the plan). The full-step rows above bury that term under the
+    # tiny model's FLOPs; timing ceil(8/N) gate_select calls back-to-back
+    # at a decode-realistic context shows the per-step selection cost the
+    # plan removes — it must DROP as the interval grows.
+    n_nominal = 8
+    hg, dg = cfg.n_kv_heads, cfg.gate.d_gate
+    nb_sel = s_meta // bs
+    kg_sel = jax.random.normal(jax.random.PRNGKey(7),
+                               (BATCH, hg, nb_sel, dg), jnp.float32)
+    nv_sel = jnp.full((BATCH,), nb_sel - 1, jnp.int32)
+    # one distinct query per nominal layer so jit cannot CSE the calls
+    qg_sel = jax.random.normal(jax.random.PRNGKey(8),
+                               (n_nominal, BATCH, hg, dg), jnp.float32)
+    emit("policies", "selection_context_tokens", s_meta)
+
+    def _sel_stack(m):
+        def f(qgs):
+            acc = jnp.zeros((), jnp.int32)
+            for i in range(m):
+                idx = ops.gate_select(qgs[i], kg_sel, nv_sel, cfg.gate, None)
+                acc = acc + jnp.sum(jnp.maximum(idx[:, :, 0], 0))
+            return acc
+        return jax.jit(f)
+
+    for interval in (1, 2, 4, 8):
+        fn = _sel_stack(-(-n_nominal // interval))
+        jax.block_until_ready(fn(qg_sel))         # warm compile
+        n_it, best = 50, float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            for _ in range(n_it):
+                out = fn(qg_sel)
+            jax.block_until_ready(out)
+            best = min(best, time.perf_counter() - t0)
+        emit("policies", f"selection_reuse{interval}_us",
+             f"{best / n_it * 1e6:.1f}")
 
 
 def _write_json(path: str) -> None:

@@ -41,8 +41,11 @@ calibrated probabilities, so the threshold method does not apply to them.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional, Protocol, runtime_checkable
+import math
+from typing import (Any, Dict, NamedTuple, Optional, Protocol, Tuple,
+                    runtime_checkable)
 
+import jax
 import jax.numpy as jnp
 
 from repro.config import ModelConfig
@@ -51,6 +54,115 @@ from repro.core import sparsity as sp
 from repro.serve.sampling import GREEDY, SamplingParams
 
 KERNEL_IMPLS = ("ref", "pallas", "pallas_interpret", "sharded")
+
+# per-layer staging of a SelectionSchedule (jit-static ints; threaded as a
+# scan-xs array through the decode layer loop)
+STAGE_DENSE, STAGE_SELECT, STAGE_REUSE = 0, 1, 2
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionSchedule:
+    """STEP-LEVEL selection plan across the layer stack (jit-static).
+
+    Block selection is strongly correlated across layers and heads on
+    reasoning traces (TidalDecode; "Less Is More"), so selection need not
+    run in every layer: a schedule designates which layers COMPUTE a fresh
+    selection and which REUSE the step's current plan (the ``[B, Hkv, k]``
+    index list carried through the layer loop).
+
+      dense_first_n      leading layers run DENSE decode attention (their
+                         block choices are the least stable; they also
+                         seed no plan)
+      select_layer       the layer that computes the step's plan. None
+                         (default) = every sparse layer selects for itself
+                         — today's behavior, bitwise-pinned
+      correction_layers  later layers that RE-select, refreshing the plan
+                         (TidalDecode's re-selection layer)
+      unify_heads        max-reduce selection scores across KV heads so a
+                         single block list drives every head ("Less Is
+                         More" head-unified selection). Orthogonal to the
+                         layer staging; forces the jnp scoring path for
+                         the gate (the fused kernel scores per head)
+
+    Layers in ``[dense_first_n, select_layer)`` run dense as well: no plan
+    exists yet at that depth (the schedule validates the window but the
+    stage derivation makes the rule explicit). The DEFAULT schedule is the
+    trivial one — every layer selects, no unification — and takes the
+    exact pre-schedule code path (bitwise-identical to
+    tests/golden_policy.npz).
+    """
+    dense_first_n: int = 0
+    select_layer: Optional[int] = None
+    correction_layers: Tuple[int, ...] = ()
+    unify_heads: bool = False
+
+    def __post_init__(self):
+        if self.dense_first_n < 0:
+            raise ValueError(
+                f"dense_first_n must be >= 0: {self.dense_first_n}")
+        if self.select_layer is None:
+            if self.correction_layers:
+                raise ValueError("correction_layers require a select_layer "
+                                 "(no plan exists to correct)")
+            return
+        if self.select_layer < self.dense_first_n:
+            raise ValueError(
+                f"select_layer {self.select_layer} lies inside the dense "
+                f"prefix (dense_first_n={self.dense_first_n})")
+        cl = tuple(self.correction_layers)
+        if list(cl) != sorted(set(cl)):
+            raise ValueError(
+                f"correction_layers must be sorted and unique: {cl}")
+        if cl and cl[0] <= self.select_layer:
+            raise ValueError(
+                f"correction_layers must come after select_layer "
+                f"{self.select_layer}: {cl}")
+
+    @property
+    def is_trivial(self) -> bool:
+        """True for the default schedule: every layer selects for itself,
+        per-head — the pre-schedule decode path, bitwise-pinned."""
+        return (self.dense_first_n == 0 and self.select_layer is None
+                and not self.unify_heads)
+
+    @property
+    def needs_plan(self) -> bool:
+        """True when a selection plan must be CARRIED through the layer
+        loop (some layer runs dense or reuses). ``unify_heads`` alone does
+        not need a plan — every layer still selects for itself."""
+        return self.dense_first_n > 0 or self.select_layer is not None
+
+    def layer_stages(self, n_layers: int) -> Tuple[int, ...]:
+        """Per-layer stage (STAGE_DENSE/SELECT/REUSE) for an
+        ``n_layers``-deep stack — the jit-static staging array."""
+        if self.dense_first_n >= n_layers and self.select_layer is None \
+                and self.dense_first_n > 0:
+            raise ValueError(
+                f"dense_first_n={self.dense_first_n} covers the whole "
+                f"{n_layers}-layer stack; use DensePolicy instead")
+        if self.select_layer is not None and self.select_layer >= n_layers:
+            raise ValueError(
+                f"select_layer {self.select_layer} out of range for "
+                f"{n_layers} layers")
+        if self.correction_layers and \
+                self.correction_layers[-1] >= n_layers:
+            raise ValueError(
+                f"correction_layers {self.correction_layers} out of range "
+                f"for {n_layers} layers")
+        stages = []
+        for layer in range(n_layers):
+            if layer < self.dense_first_n:
+                stages.append(STAGE_DENSE)
+            elif self.select_layer is None:
+                stages.append(STAGE_SELECT)
+            elif layer == self.select_layer \
+                    or layer in self.correction_layers:
+                stages.append(STAGE_SELECT)
+            elif layer < self.select_layer:
+                stages.append(STAGE_DENSE)     # no plan exists yet
+            else:
+                stages.append(STAGE_REUSE)
+        return tuple(stages)
 
 
 def select_impl(kernel_impl: str) -> str:
@@ -122,8 +234,13 @@ class SelectionPolicy(Protocol):
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
-               max_selected: Optional[int] = None) -> jnp.ndarray:
-        """-> selected logical block ids [B, Hkv, k] int32, -1 padding."""
+               max_selected: Optional[int] = None,
+               unify_heads: bool = False) -> jnp.ndarray:
+        """-> selected logical block ids [B, Hkv, k] int32, -1 padding.
+
+        ``unify_heads`` (SelectionSchedule): max-reduce the policy's
+        selection scores across KV heads before ranking, so the returned
+        rows are IDENTICAL for every head (one plan drives all heads)."""
         ...
 
 
@@ -146,6 +263,17 @@ def _grouped_q(inp: SelectionInputs) -> jnp.ndarray:
     return inp.qr[:, 0].reshape(b, hkv, h // hkv, dh)
 
 
+def _unify_scores(scores: jnp.ndarray) -> jnp.ndarray:
+    """[B, Hkv, nb] -> [B, 1, nb]: the cross-head max — a block any head
+    wants, every head attends (SelectionSchedule.unify_heads)."""
+    return jnp.max(scores, axis=1, keepdims=True)
+
+
+def _broadcast_heads(idx: jnp.ndarray, hkv: int) -> jnp.ndarray:
+    """[B, 1, k] unified selection -> [B, Hkv, k] (the kernel contract)."""
+    return jnp.broadcast_to(idx, (idx.shape[0], hkv, idx.shape[-1]))
+
+
 @dataclasses.dataclass(frozen=True)
 class GatePolicy:
     """The paper's learned AttnGate (default). Contiguous decode scores the
@@ -158,12 +286,34 @@ class GatePolicy:
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
-               max_selected: Optional[int] = None) -> jnp.ndarray:
+               max_selected: Optional[int] = None,
+               unify_heads: bool = False) -> jnp.ndarray:
         from repro.core import attngate as ag
         from repro.kernels import ops
         qg = ag.gate_q(inp.gate_params, inp.q_nope, inp.pos, cfg.gate)[:, 0]
         n_valid = kc.visible_blocks(jnp.maximum(inp.new_len, 1),
                                     cfg.gate.block_size)
+        if unify_heads:
+            # the fused gate-select kernels score per head, so head
+            # unification always takes the jnp scoring path (same math as
+            # gate_select_ref, with the cross-head max before ranking)
+            from repro.models.common import NEG_INF
+            if inp.kg is not None:
+                kg = inp.kg
+            else:
+                from repro.serve import paging as pg
+                kg = pg.gather_kg(inp.kg_pages, inp.page_table)
+            nb = kg.shape[2]
+            scores = jnp.einsum("bhd,bhnd->bhn", qg.astype(jnp.float32),
+                                kg.astype(jnp.float32)) \
+                / math.sqrt(qg.shape[-1])
+            vmask = jnp.arange(nb)[None, None] < n_valid[:, None, None]
+            scores = _unify_scores(jnp.where(vmask, scores, NEG_INF))
+            if cfg.gate.method == "threshold":
+                scores = jax.nn.softmax(scores, axis=-1)
+            idx, _ = sp.select_blocks(scores, n_valid, cfg.gate,
+                                      max_selected)
+            return _broadcast_heads(idx, inp.n_kv_heads)
         if inp.kg is not None:
             return ops.gate_select(qg, inp.kg, n_valid, cfg.gate,
                                    max_selected, impl=impl)
@@ -191,7 +341,8 @@ class QuestPolicy:
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
-               max_selected: Optional[int] = None) -> jnp.ndarray:
+               max_selected: Optional[int] = None,
+               unify_heads: bool = False) -> jnp.ndarray:
         from repro.core import metacache as mc
         from repro.core import quest
         bs = cfg.gate.block_size
@@ -219,6 +370,10 @@ class QuestPolicy:
         n_valid = kc.visible_blocks(jnp.maximum(inp.new_len, 1), bs)
         scores = quest.quest_scores_grouped(_grouped_q(inp), kmin, kmax,
                                             n_valid)
+        if unify_heads:
+            idx, _ = sp.budget_select(_unify_scores(scores), n_valid,
+                                      cfg.gate, max_selected)
+            return _broadcast_heads(idx, inp.n_kv_heads)
         idx, _ = sp.budget_select(scores, n_valid, cfg.gate, max_selected)
         return idx
 
@@ -237,7 +392,8 @@ class QuestRecomputePolicy:
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
-               max_selected: Optional[int] = None) -> jnp.ndarray:
+               max_selected: Optional[int] = None,
+               unify_heads: bool = False) -> jnp.ndarray:
         from repro.core import quest
         bs = cfg.gate.block_size
         k_view = _gathered_k(inp)
@@ -245,6 +401,10 @@ class QuestRecomputePolicy:
         n_valid = kc.visible_blocks(jnp.maximum(inp.new_len, 1), bs)
         scores = quest.quest_scores_grouped(_grouped_q(inp), kmin, kmax,
                                             n_valid)
+        if unify_heads:
+            idx, _ = sp.budget_select(_unify_scores(scores), n_valid,
+                                      cfg.gate, max_selected)
+            return _broadcast_heads(idx, inp.n_kv_heads)
         idx, _ = sp.budget_select(scores, n_valid, cfg.gate, max_selected)
         return idx
 
@@ -261,12 +421,17 @@ class OraclePolicy:
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
-               max_selected: Optional[int] = None) -> jnp.ndarray:
+               max_selected: Optional[int] = None,
+               unify_heads: bool = False) -> jnp.ndarray:
         from repro.core import oracle
         bs = cfg.gate.block_size
         scores = oracle.oracle_scores_headmajor(
             _grouped_q(inp), _gathered_k(inp), inp.new_len, bs)
         n_valid = kc.visible_blocks(jnp.maximum(inp.new_len, 1), bs)
+        if unify_heads:
+            idx, _ = sp.budget_select(_unify_scores(scores), n_valid,
+                                      cfg.gate, max_selected)
+            return _broadcast_heads(idx, inp.n_kv_heads)
         idx, _ = sp.budget_select(scores, n_valid, cfg.gate, max_selected)
         return idx
 
@@ -280,7 +445,8 @@ class DensePolicy:
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
-               max_selected: Optional[int] = None) -> jnp.ndarray:
+               max_selected: Optional[int] = None,
+               unify_heads: bool = False) -> jnp.ndarray:
         raise NotImplementedError("DensePolicy performs no block selection")
 
 
@@ -307,11 +473,20 @@ class SlidingWindowPolicy:
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
-               max_selected: Optional[int] = None) -> jnp.ndarray:
+               max_selected: Optional[int] = None,
+               unify_heads: bool = False) -> jnp.ndarray:
+        # unify_heads is a no-op here: the pattern is position-only, so
+        # every KV head already gets the identical row
         bs = cfg.gate.block_size
         nb = inp.n_blocks(bs)
         k = min(sp.resolve_max_selected(cfg.gate, max_selected), nb)
-        n_valid = kc.visible_blocks(jnp.maximum(inp.new_len, 1), bs)  # [B]
+        # clamp visible_blocks (CEIL of new_len/bs) to the view's nb
+        # (FLOOR of the cache length): on a non-block-aligned contiguous
+        # cache the trailing partial block has no slot in the view, and an
+        # unclamped ceil would point the window past it — the same clamp
+        # rule quest.build_quest_meta applies (PR 5)
+        n_valid = jnp.minimum(
+            kc.visible_blocks(jnp.maximum(inp.new_len, 1), bs), nb)  # [B]
         sink = min(self.sink_blocks, max(k - 1, 0))
         ar = jnp.arange(k)[None, :]                               # [1, k]
         last = n_valid[:, None] - 1
@@ -327,6 +502,31 @@ class SlidingWindowPolicy:
         idx = jnp.where(valid, idx, -1).astype(jnp.int32)
         return jnp.broadcast_to(idx[:, None, :],
                                 (idx.shape[0], inp.n_kv_heads, k))
+
+
+def selection_width(policy: SelectionPolicy, cfg: ModelConfig, nb: int,
+                    max_selected: Optional[int] = None) -> int:
+    """STATIC width k of the [B, Hkv, k] index list ``policy.select`` will
+    return for an ``nb``-block view — the plan-buffer width a
+    SelectionSchedule carries through the layer loop.
+
+    Mirrors the per-policy width rules so the carried plan and a fresh
+    selection always shape-match:
+      * SlidingWindowPolicy: min(budget, nb) — no forced-block floor (the
+        trailing block is slot 0 by construction; see its docstring and
+        the width note in tests/test_policy.py)
+      * GatePolicy under method='threshold': min(budget, nb)
+        (sparsity.threshold_select applies no floor)
+      * everything else (budget_select / the fused kernel's n_selected):
+        min(max(budget, forced_floor), nb)
+    """
+    k = sp.resolve_max_selected(cfg.gate, max_selected)
+    if isinstance(policy, SlidingWindowPolicy):
+        return min(k, nb)
+    if isinstance(policy, GatePolicy) and cfg.gate.method == "threshold":
+        return min(k, nb)
+    min_k = int(cfg.gate.always_last_block) + int(cfg.gate.always_first_block)
+    return min(max(k, min_k), nb)
 
 
 POLICIES: Dict[str, Any] = {
@@ -373,6 +573,10 @@ class DecodeOptions:
                      list in ``split_k`` independent flash partials
                      (kernels.block_sparse_decode_paged_splitk). 1 = the
                      single-pass path, bitwise identical to unsharded.
+    schedule:        step-level SelectionSchedule (cross-layer plan reuse
+                     + cross-head unification). The default (trivial)
+                     schedule selects in every layer per head — the
+                     bitwise-pinned pre-schedule behavior.
     """
     policy: SelectionPolicy = GatePolicy()
     kernel_impl: str = "ref"
@@ -380,6 +584,7 @@ class DecodeOptions:
     budget_override: Optional[int] = None
     measure_sparsity: bool = True
     split_k: int = 1
+    schedule: SelectionSchedule = SelectionSchedule()
 
     def __post_init__(self):
         if self.kernel_impl not in KERNEL_IMPLS:
@@ -397,12 +602,33 @@ class DecodeOptions:
                 self.policy, (GatePolicy, DensePolicy)):
             raise ValueError("kernel_impl='sharded' supports GatePolicy "
                              "(distributed gate top-k) or DensePolicy only")
+        if not self.schedule.is_trivial and self.policy.dense:
+            raise ValueError("a non-trivial SelectionSchedule is "
+                             "meaningless under DensePolicy (no selection "
+                             "to schedule)")
+        if self.kernel_impl == "sharded" and (
+                self.schedule.dense_first_n > 0 or self.schedule.unify_heads
+                or (self.schedule.select_layer or 0) > 0):
+            raise ValueError(
+                "kernel_impl='sharded' supports plan REUSE schedules only "
+                "(select_layer=0 + correction_layers, per-head selection): "
+                "the shard_map decode body always runs block-sparse "
+                "attention, so no layer may stage DENSE. dense-prefix, "
+                "select_layer>0 and unify_heads schedules need "
+                "kernel_impl='ref'/'pallas'")
 
     def max_selected(self, cfg: ModelConfig) -> Optional[int]:
-        """Selected-list width override in BLOCKS (None = config budget)."""
+        """Selected-list width override in BLOCKS (None = config budget).
+
+        CEIL division: a budget_override that is not a multiple of the
+        block size rounds UP, so the request never receives fewer tokens
+        of attention than it asked for (a 100-token override at block 64
+        buys 2 blocks = 128 tokens, not 1 block = 64). The CONFIG budget
+        (sparsity.resolve_max_selected) intentionally keeps floor — see
+        the rationale there."""
         if self.budget_override is None:
             return None
-        return max(1, self.budget_override // cfg.gate.block_size)
+        return max(1, -(-self.budget_override // cfg.gate.block_size))
 
     def replace(self, **kw) -> "DecodeOptions":
         return dataclasses.replace(self, **kw)
@@ -410,9 +636,15 @@ class DecodeOptions:
 
 def default_options(cfg: ModelConfig) -> DecodeOptions:
     """GatePolicy when the config carries a gate, dense otherwise — the
-    old ``sparse=cfg.gate.enabled`` default."""
+    old ``sparse=cfg.gate.enabled`` default. ``cfg.gate.dense_first_layers``
+    (the paper's §5.2 hybrid dense layers, previously a config-only knob)
+    maps onto the schedule's dense prefix; 0 keeps the trivial
+    (bitwise-pinned) schedule."""
     gate_on = cfg.gate.enabled and cfg.has_attention and cfg.is_decoder
-    return DecodeOptions(policy=GatePolicy() if gate_on else DensePolicy())
+    if not gate_on:
+        return DecodeOptions(policy=DensePolicy())
+    return DecodeOptions(policy=GatePolicy(), schedule=SelectionSchedule(
+        dense_first_n=cfg.gate.dense_first_layers))
 
 
 DENSE_OPTIONS = DecodeOptions(policy=DensePolicy())

@@ -29,7 +29,15 @@ def resolve_max_selected(cfg: GateConfig,
     source of truth for the cap rule — shared by budget_select,
     select_blocks and the fused gate-select kernel so the three can never
     drift. An explicit zero/negative cap is a caller error, never a
-    silent fallback to the config budget."""
+    silent fallback to the config budget.
+
+    The CONFIG path floor-divides on purpose: the paper's budget method
+    defines k = budget // block_size (§3.1), the committed goldens pin
+    that width, and a config budget is a model-level hyperparameter whose
+    author controls the block size. Rounding only applies to RUNTIME
+    budget overrides (DecodeOptions.max_selected / the serve-path slot
+    caps), which ceil so a request never gets fewer tokens of attention
+    than it asked for."""
     if max_selected is not None:
         if max_selected <= 0:
             raise ValueError(
@@ -102,7 +110,15 @@ def threshold_select(probs: jnp.ndarray, n_valid_blocks: jnp.ndarray,
     top_vals, top_idx = jax.lax.top_k(ranked, k)
     sel_valid = top_vals > 0
     idx = jnp.where(sel_valid, top_idx, -1).astype(jnp.int32)
-    mask = admitted & valid
+    # the telemetry mask must describe the CAPPED list the kernel attends,
+    # not every admitted block: when the threshold admits more than the
+    # cap, `admitted & valid` would count blocks never read, overstating
+    # density. Scatter from the capped winners with the same
+    # order-independent `.max` (logical OR) as budget_select.
+    mask = jnp.zeros(p.shape, bool).at[
+        jnp.arange(p.shape[0])[:, None, None],
+        jnp.arange(p.shape[1])[None, :, None],
+        jnp.maximum(top_idx, 0)].max(sel_valid)
     return idx, mask
 
 

@@ -273,6 +273,16 @@ def paged_pool_pspecs(pages: Any, mesh: Mesh) -> Any:
     return jax.tree.map(one, pages)
 
 
+def selection_plan_pspec(mesh: Mesh) -> P:
+    """Spec for the step-level selection plan ([B|S, Hkv, k] block ids
+    carried through the layer loop under a SelectionSchedule): REPLICATED.
+    The plan is tiny (k ints per head-row), every consumer re-slices its
+    local heads inside the shard body (serve.sharded keeps its
+    boundary-pinning bitwise contract), and a head-sharded plan would
+    force GSPMD to re-partition the carried scan state each layer."""
+    return P()
+
+
 def decode_partition(mesh: Mesh, batch_size: int):
     """(batch_spec, seq_axes) for decode-state cells — MUST mirror
     decode_state_pspecs: batch over DP when divisible; the KV seq dim over

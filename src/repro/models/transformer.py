@@ -25,8 +25,9 @@ from repro.core import kcache as kc
 from repro.core import metacache as mc
 from repro.core import sparsity as sp
 from repro.core.distill import gate_kl_loss, ground_truth_from_blockmax
-from repro.core.policy import (DecodeOptions, SelectionInputs,
-                               default_options, select_impl)
+from repro.core.policy import (STAGE_DENSE, STAGE_SELECT, DecodeOptions,
+                               SelectionInputs, default_options, select_impl,
+                               selection_width)
 from repro.kernels import ops
 from repro.models import moe as moe_mod
 from repro.models.common import (NEG_INF, apply_rope, chunked_attention,
@@ -426,15 +427,26 @@ def _zero_layer_aux(batch: int):
 def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                      k_cache, v_cache, kg_cache, kg_n, cur_len,
                      options: DecodeOptions, meta_kmin=None, meta_kmax=None,
-                     meta_n=None, shard=None):
+                     meta_n=None, shard=None, stage=None, plan=None):
     """One token. x1 [B,1,d]; caches for ONE layer HEAD-MAJOR [B,Hkv,S,Dh].
-    Returns (out, new_layer_state, selection_aux).
+    Returns (out, new_layer_state, selection_aux) — or, when ``stage`` is
+    given, (out, new_layer_state, selection_aux, plan_out).
 
     ``options.policy`` picks the block-selection strategy (core.policy);
     ``options.kernel_impl='sharded'`` takes the sequence-parallel
     shard_map path (repro.serve.sharded): explicit split-K collectives
     instead of GSPMD resharding of the gathered cache — requires a mesh
     on ``shard`` and the gate policy (distributed gate top-k).
+
+    ``stage``/``plan`` (step-level SelectionSchedule, plan-carrying
+    schedules only): ``stage`` is this layer's staging id (a traced int32
+    scalar from the jit-static schedule array — STAGE_DENSE runs dense
+    attention, STAGE_SELECT computes a fresh selection, STAGE_REUSE
+    attends the carried ``plan`` [B, Hkv, k] as-is) and the returned
+    ``plan_out`` is the plan for the NEXT layer. The Kg / selection-
+    metadata caches advance only at selecting layers ("advance only for
+    the reader": a selecting layer advances every step so its view is
+    always current; dense/reuse layers never read theirs).
     """
     b = x1.shape[0]
     dh, hkv, g = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.gqa_group
@@ -494,6 +506,66 @@ def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
     v_cache = v_cache.at[bidx, :, cur_len].set(v[:, 0])
     new_len = cur_len + 1
 
+    if stage is not None and sparse_on:
+        # ---- staged path (plan-carrying SelectionSchedule) ------------
+        do_select = stage == STAGE_SELECT             # traced bool scalar
+        is_dense = stage == STAGE_DENSE
+
+        if policy.needs_gate and "gate" in p and kg_cache is not None:
+            def _adv_kg(kg, n):
+                cache = kc.update_kcache(
+                    kc.KCompressionCache(kg, n), p["gate"], k_cache,
+                    new_len, cfg.gate, cache_is_roped=True,
+                    rope_theta=cfg.rope_theta)
+                return cache.kg, cache.n_complete
+            kg_cache, kg_n = jax.lax.cond(
+                do_select, _adv_kg, lambda kg, n: (kg, n), kg_cache, kg_n)
+        if policy.needs_meta and meta_kmin is not None:
+            def _adv_meta(mn, mx, n):
+                return tuple(mc.update_metacache(
+                    mc.SelectionMetaCache(mn, mx, n), k_cache, new_len, bs))
+            meta_kmin, meta_kmax, meta_n = jax.lax.cond(
+                do_select, _adv_meta, lambda mn, mx, n: (mn, mx, n),
+                meta_kmin, meta_kmax, meta_n)
+
+        inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
+                              gate_params=p.get("gate"), kg=kg_cache,
+                              k_cache=k_cache, meta_kmin=meta_kmin,
+                              meta_kmax=meta_kmax)
+
+        def _fresh(cur):
+            del cur
+            return policy.select(
+                inp, cfg, impl=select_impl(options.kernel_impl),
+                max_selected=options.max_selected(cfg),
+                unify_heads=options.schedule.unify_heads).astype(jnp.int32)
+
+        idx = jax.lax.cond(do_select, _fresh, lambda cur: cur, plan)
+        qgrp = qr[:, 0].reshape(b, hkv, g, dh)
+
+        def _run_sparse(_):
+            o = ops.sparse_decode(qgrp, k_cache, v_cache, idx, new_len,
+                                  block_size=bs, impl=options.kernel_impl)
+            return o.reshape(b, 1, hkv * g, dh)
+
+        def _run_dense(_):
+            return decode_attention(
+                qr, k_cache, v_cache, new_len,
+                logit_softcap=cfg.attn_logit_softcap).reshape(
+                    b, 1, hkv * g, dh)
+
+        o = jax.lax.cond(is_dense, _run_dense, _run_sparse, None)
+        if options.measure_sparsity:
+            sel = _selection_aux(idx, kc.visible_blocks(
+                jnp.maximum(new_len, 1), bs), k_cache.shape[2] // bs)
+            den = _dense_aux(new_len, bs)
+            aux = tuple(jnp.where(is_dense, d, s) for s, d in zip(sel, den))
+        else:
+            aux = _zero_layer_aux(b)
+        out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
+        return out, (k_cache, v_cache, kg_cache, kg_n,
+                     meta_kmin, meta_kmax, meta_n), aux, idx
+
     if sparse_on:
         # the Kg cache only advances for the policy that reads it — a
         # quest/oracle/sliding rollout skips the per-step gate-K
@@ -517,7 +589,8 @@ def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                               k_cache=k_cache, meta_kmin=meta_kmin,
                               meta_kmax=meta_kmax)
         idx = policy.select(inp, cfg, impl=select_impl(options.kernel_impl),
-                            max_selected=options.max_selected(cfg))
+                            max_selected=options.max_selected(cfg),
+                            unify_heads=options.schedule.unify_heads)
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
         o = ops.sparse_decode(qgrp, k_cache, v_cache, idx, new_len,
                               block_size=bs, impl=options.kernel_impl)
@@ -531,20 +604,24 @@ def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         aux = (_dense_aux(new_len, bs) if options.measure_sparsity
                else _zero_layer_aux(b))
     out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-    return out, (k_cache, v_cache, kg_cache, kg_n,
-                 meta_kmin, meta_kmax, meta_n), aux
+    ret = (out, (k_cache, v_cache, kg_cache, kg_n,
+                 meta_kmin, meta_kmax, meta_n), aux)
+    # an ungated layer under a plan-carrying schedule (needs_gate policy
+    # without a gate): dense fallback, the plan passes through untouched
+    return ret + (plan,) if stage is not None else ret
 
 
 def block_decode(p: Params, x1, cfg: ModelConfig, layer_state, cur_len, *,
-                 options: DecodeOptions, shard=None):
+                 options: DecodeOptions, shard=None, stage=None, plan=None):
     k_cache, v_cache, kg_cache, kg_n, meta_kmin, meta_kmax, meta_n = \
         layer_state
     h = rms_norm(p["ln1"], x1, cfg.norm_eps)
-    attn_out, new_state, aux = attention_decode(
+    ret = attention_decode(
         p["attn"], h, cfg, k_cache=k_cache, v_cache=v_cache,
         kg_cache=kg_cache, kg_n=kg_n, cur_len=cur_len, options=options,
         meta_kmin=meta_kmin, meta_kmax=meta_kmax, meta_n=meta_n,
-        shard=shard)
+        shard=shard, stage=stage, plan=plan)
+    attn_out, new_state, aux = ret[:3]
     x1 = x1 + attn_out
     h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
     if "moe" in p:
@@ -554,6 +631,8 @@ def block_decode(p: Params, x1, cfg: ModelConfig, layer_state, cur_len, *,
         y = y.reshape(b, 1, -1)
     else:
         y = mlp(p["mlp"], h2, cfg.activation)
+    if stage is not None:
+        return x1 + y, new_state, aux, ret[3]
     return x1 + y, new_state, aux
 
 
@@ -614,7 +693,42 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
     layer_states = (state.k_cache, state.v_cache, state.kg_cache, state.kg_n,
                     state.meta_kmin, state.meta_kmax, state.meta_n)
 
-    if cfg.cross_attn_period:
+    if options.schedule.needs_plan:
+        # ---- step-level selection plan (SelectionSchedule) ------------
+        # staging is jit-static: the schedule becomes a [n_layers] int32
+        # array scanned alongside the layer params, the plan a carried
+        # [B, Hkv, k] index list reused/refreshed per the stage ids.
+        if cfg.cross_attn_period:
+            raise NotImplementedError(
+                "SelectionSchedule plans assume a uniform self-attn stack; "
+                "cross-attn unit families keep per-layer selection "
+                "(schedule=SelectionSchedule())")
+        if options.kernel_impl == "sharded":
+            raise NotImplementedError(
+                "the contiguous sharded path fuses selection into the "
+                "shard_map body (sharded_sparse_decode) and cannot carry a "
+                "plan; plan-carrying schedules run with kernel_impl="
+                "'ref'/'pallas', or use the paged sharded path")
+        stages = jnp.asarray(
+            options.schedule.layer_stages(n_self_layers(cfg)), jnp.int32)
+        nb = state.k_cache.shape[3] // cfg.gate.block_size
+        width = selection_width(options.policy, cfg, nb,
+                                options.max_selected(cfg))
+        plan0 = jnp.full((token.shape[0], cfg.n_kv_heads, width), -1,
+                         jnp.int32)
+
+        def plan_scan(carry, inp):
+            x1, plan = carry
+            layer_p, layer_state, stage = inp
+            y, new_state, aux, plan = block_decode(
+                layer_p, x1, cfg, layer_state, state.cur_len,
+                options=options, shard=shard, stage=stage, plan=plan)
+            return (y, plan), (new_state, aux)
+
+        (x1, _), (new_states, auxs) = layer_scan(
+            plan_scan, (x1, plan0), (params["blocks"], layer_states, stages),
+            unroll=not cfg.scan_layers)
+    elif cfg.cross_attn_period:
         n_units = cfg.num_layers // cfg.cross_attn_period
         n_self = cfg.cross_attn_period - 1
 
@@ -664,9 +778,16 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                            k_pages, v_pages, kg_pages, page_table, cur_len,
                            active, options: DecodeOptions,
                            budget_blocks=None, kmin_pages=None,
-                           kmax_pages=None, shard=None):
+                           kmax_pages=None, shard=None, stage=None,
+                           plan=None):
     """One token over paged KV. x1 [S,1,d]; pools for ONE layer HEAD-MAJOR
     [P, Hkv, ps, Dh]; page_table [S, npt]; cur_len/active [S] per-slot.
+
+    ``stage``/``plan``: per-layer staging of a step-level SelectionSchedule
+    and the carried [S, Hkv, k] plan — same contract as the contiguous
+    ``attention_decode``; when ``stage`` is given the return grows a 4th
+    element (the next layer's plan) and Kg / min-max metadata page rows
+    advance only at selecting layers.
 
     The gate path is identical to the contiguous ``attention_decode`` —
     same selection, same force-select of the trailing partial block — but
@@ -707,34 +828,112 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         from repro.serve.sharded import sharded_paged_decode
         qg = ag.gate_q(p["gate"], q_nope, pos, cfg.gate)[:, 0]  # [S,Hkv,Dg]
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
+        plan_kw = {}
+        if stage is not None:
+            # DecodeOptions validation pins sharded schedules to
+            # select_layer=0 (+ correction layers), so STAGE_DENSE never
+            # reaches this body — only fresh-vs-reuse blending remains
+            plan_kw = dict(reuse_idx=plan, do_select=(stage == STAGE_SELECT))
         o, k_pages, v_pages, kg_pages, idx = sharded_paged_decode(
             qg, qgrp, kr[:, 0], v[:, 0], k_pages, v_pages, kg_pages,
             page_table, cur_len, active, p["gate"]["wk"], mesh=mesh,
             cfg=cfg.gate, rope_theta=cfg.rope_theta,
             max_selected=options.max_selected(cfg),
             budget_blocks=budget_blocks, split_k=options.split_k,
-            inner_impl="pallas" if cfg.use_pallas else "ref")
+            inner_impl="pallas" if cfg.use_pallas else "ref", **plan_kw)
         new_len = cur_len + active.astype(jnp.int32)
         aux = (_selection_aux(idx, kc.visible_blocks(
                    jnp.maximum(new_len, 1), ps), page_table.shape[1])
                if options.measure_sparsity else _zero_layer_aux(b))
         out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-        return out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages), aux
+        ret = (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages), aux)
+        return ret + (idx,) if stage is not None else ret
 
     from repro.serve import paging as pg
+    staged = stage is not None and sparse_on
     # mirror the contiguous path: the Kg page rows only advance for the
-    # policy that reads them (append skips the gate projection on None)
+    # policy that reads them (append skips the gate projection on None);
+    # under a plan-carrying schedule the advance is further gated to
+    # selecting layers (cond on the stage id, below)
     k_pages, v_pages, kg_pages = pg.append_token_paged(
         k_pages, v_pages, kg_pages, kr[:, 0], v[:, 0], page_table, cur_len,
-        active, p.get("gate") if policy.needs_gate else None, cfg.gate,
-        rope_theta=cfg.rope_theta)
+        active,
+        p.get("gate") if (policy.needs_gate and not staged) else None,
+        cfg.gate, rope_theta=cfg.rope_theta)
     # ... and the min/max metadata page rows only for the policy that
     # reads THEM (QuestPolicy): finalize a page's row when it fills
-    if policy.needs_meta and kmin_pages is not None:
+    if policy.needs_meta and kmin_pages is not None and not staged:
         kmin_pages, kmax_pages = pg.append_meta_paged(
             kmin_pages, kmax_pages, k_pages, page_table, cur_len, active,
             ps)
     new_len = cur_len + active.astype(jnp.int32)
+
+    if staged:
+        # ---- staged path (plan-carrying SelectionSchedule) ------------
+        do_select = stage == STAGE_SELECT             # traced bool scalar
+        is_dense = stage == STAGE_DENSE
+
+        if policy.needs_gate and "gate" in p and kg_pages is not None:
+            kg_pages = jax.lax.cond(
+                do_select,
+                lambda kgp: pg.finalize_kg_paged(
+                    k_pages, kgp, page_table, cur_len, active, p["gate"],
+                    cfg.gate, rope_theta=cfg.rope_theta),
+                lambda kgp: kgp, kg_pages)
+        if policy.needs_meta and kmin_pages is not None:
+            def _adv_meta(mn, mx):
+                return pg.append_meta_paged(mn, mx, k_pages, page_table,
+                                            cur_len, active, ps)
+            kmin_pages, kmax_pages = jax.lax.cond(
+                do_select, _adv_meta, lambda mn, mx: (mn, mx),
+                kmin_pages, kmax_pages)
+
+        inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
+                              gate_params=p.get("gate"), kg_pages=kg_pages,
+                              k_pages=k_pages, page_table=page_table,
+                              kmin_pages=kmin_pages, kmax_pages=kmax_pages)
+
+        def _fresh(cur):
+            del cur
+            return policy.select(
+                inp, cfg, impl=select_impl(options.kernel_impl),
+                max_selected=options.max_selected(cfg),
+                unify_heads=options.schedule.unify_heads).astype(jnp.int32)
+
+        idx = jax.lax.cond(do_select, _fresh, lambda cur: cur, plan)
+        if budget_blocks is not None:
+            # the carried plan is already capped, so re-masking a reuse
+            # layer's idx is idempotent
+            slot_cap = jnp.arange(idx.shape[-1])[None, None, :] \
+                < budget_blocks[:, None, None]
+            idx = jnp.where(slot_cap, idx, -1)
+        qgrp = qr[:, 0].reshape(b, hkv, g, dh)
+
+        def _run_sparse(_):
+            o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx,
+                                        page_table, new_len, block_size=ps,
+                                        impl=options.kernel_impl)
+            return o.reshape(b, 1, hkv * g, dh)
+
+        def _run_dense(_):
+            k_ct = pg.gather_kv(k_pages, page_table)
+            v_ct = pg.gather_kv(v_pages, page_table)
+            return decode_attention(
+                qr, k_ct, v_ct, new_len,
+                logit_softcap=cfg.attn_logit_softcap).reshape(
+                    b, 1, hkv * g, dh)
+
+        o = jax.lax.cond(is_dense, _run_dense, _run_sparse, None)
+        if options.measure_sparsity:
+            sel = _selection_aux(idx, kc.visible_blocks(
+                jnp.maximum(new_len, 1), ps), page_table.shape[1])
+            den = _dense_aux(new_len, ps)
+            aux = tuple(jnp.where(is_dense, d, s) for s, d in zip(sel, den))
+        else:
+            aux = _zero_layer_aux(b)
+        out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
+        return (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages),
+                aux, idx)
 
     if sparse_on:
         inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
@@ -742,7 +941,8 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                               k_pages=k_pages, page_table=page_table,
                               kmin_pages=kmin_pages, kmax_pages=kmax_pages)
         idx = policy.select(inp, cfg, impl=select_impl(options.kernel_impl),
-                            max_selected=options.max_selected(cfg))
+                            max_selected=options.max_selected(cfg),
+                            unify_heads=options.schedule.unify_heads)
         if budget_blocks is not None:
             slot_cap = jnp.arange(idx.shape[-1])[None, None, :] \
                 < budget_blocks[:, None, None]
@@ -763,20 +963,25 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         aux = (_dense_aux(new_len, ps) if options.measure_sparsity
                else _zero_layer_aux(b))
     out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-    return out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages), aux
+    ret = (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages), aux)
+    # an ungated layer under a plan-carrying schedule: dense fallback, the
+    # plan passes through untouched (same contract as attention_decode)
+    return ret + (plan,) if stage is not None else ret
 
 
 def block_decode_paged(p: Params, x1, cfg: ModelConfig, layer_pages,
                        page_table, cur_len, active, *,
                        options: DecodeOptions, budget_blocks=None,
-                       shard=None):
+                       shard=None, stage=None, plan=None):
     k_pages, v_pages, kg_pages, kmin_pages, kmax_pages = layer_pages
     h = rms_norm(p["ln1"], x1, cfg.norm_eps)
-    attn_out, new_pages, aux = attention_decode_paged(
+    ret = attention_decode_paged(
         p["attn"], h, cfg, k_pages=k_pages, v_pages=v_pages,
         kg_pages=kg_pages, page_table=page_table, cur_len=cur_len,
         active=active, options=options, budget_blocks=budget_blocks,
-        kmin_pages=kmin_pages, kmax_pages=kmax_pages, shard=shard)
+        kmin_pages=kmin_pages, kmax_pages=kmax_pages, shard=shard,
+        stage=stage, plan=plan)
+    attn_out, new_pages, aux = ret[:3]
     x1 = x1 + attn_out
     h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
     if "moe" in p:
@@ -786,6 +991,8 @@ def block_decode_paged(p: Params, x1, cfg: ModelConfig, layer_pages,
         y = y.reshape(b, 1, -1)
     else:
         y = mlp(p["mlp"], h2, cfg.activation)
+    if stage is not None:
+        return x1 + y, new_pages, aux, ret[3]
     return x1 + y, new_pages, aux
 
 
@@ -812,16 +1019,41 @@ def lm_decode_step_paged(params: Params, pages, token: jnp.ndarray,
     from repro.serve.paging import PagedPages
     x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
 
-    def self_scan(x1, inp):
-        layer_p, layer_pages = inp
-        y, new_pages, aux = block_decode_paged(
-            layer_p, x1, cfg, layer_pages, page_table, cur_len, active,
-            options=options, budget_blocks=budget_blocks, shard=shard)
-        return y, (new_pages, aux)
+    if options.schedule.needs_plan:
+        # step-level selection plan: same staging as lm_decode_step, the
+        # carried plan sized [n_slots, Hkv, k] against the page table's
+        # logical-block count
+        stages = jnp.asarray(
+            options.schedule.layer_stages(n_self_layers(cfg)), jnp.int32)
+        width = selection_width(options.policy, cfg, page_table.shape[1],
+                                options.max_selected(cfg))
+        plan0 = jnp.full((token.shape[0], cfg.n_kv_heads, width), -1,
+                         jnp.int32)
 
-    x1, (new_pages, auxs) = layer_scan(self_scan, x1,
-                                       (params["blocks"], tuple(pages)),
-                                       unroll=not cfg.scan_layers)
+        def plan_scan(carry, inp):
+            x1, plan = carry
+            layer_p, layer_pages, stage = inp
+            y, new_pages, aux, plan = block_decode_paged(
+                layer_p, x1, cfg, layer_pages, page_table, cur_len, active,
+                options=options, budget_blocks=budget_blocks, shard=shard,
+                stage=stage, plan=plan)
+            return (y, plan), (new_pages, aux)
+
+        (x1, _), (new_pages, auxs) = layer_scan(
+            plan_scan, (x1, plan0),
+            (params["blocks"], tuple(pages), stages),
+            unroll=not cfg.scan_layers)
+    else:
+        def self_scan(x1, inp):
+            layer_p, layer_pages = inp
+            y, new_pages, aux = block_decode_paged(
+                layer_p, x1, cfg, layer_pages, page_table, cur_len, active,
+                options=options, budget_blocks=budget_blocks, shard=shard)
+            return y, (new_pages, aux)
+
+        x1, (new_pages, auxs) = layer_scan(self_scan, x1,
+                                           (params["blocks"], tuple(pages)),
+                                           unroll=not cfg.scan_layers)
     x1 = rms_norm(params["final_norm"], x1, cfg.norm_eps)
     if cfg.tie_embeddings:
         logits = x1 @ params["embed"]["w"].T

@@ -211,8 +211,11 @@ class DecodeEngine:
         # a "budget" (otherwise no mask exists at all — zero risk of
         # clipping a policy whose list is wider than the config budget).
         # Slots without an override get a never-binding sentinel; override
-        # caps are floored so the force-selected first/last blocks (which
-        # rank ahead of every scored block by construction) survive.
+        # caps CEIL to blocks (a request never gets fewer tokens of
+        # attention than it asked for — the same rounding as
+        # DecodeOptions.max_selected) and are floored so the force-selected
+        # first/last blocks (which rank ahead of every scored block by
+        # construction) survive.
         use_budget = any(b is not None for b in budget_of.values())
         no_cap = np.int32(2 ** 30)
         floor = max(1, int(cfg.gate.always_first_block)
@@ -224,7 +227,7 @@ class DecodeEngine:
             b = budget_of[rid]
             if b is None:
                 return int(no_cap)
-            return max(floor, int(b) // ps)
+            return max(floor, -(-int(b) // ps))
 
         # host-side per-slot sampling runs ONLY while a LIVE request is
         # stochastic; otherwise (and again once every stochastic request

@@ -173,6 +173,33 @@ def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     if kg_pages is None or gate_params is None:
         return k_pages, v_pages, kg_pages
 
+    kg_pages = finalize_kg_paged(k_pages, kg_pages, page_table, cur_len,
+                                 active, gate_params, cfg,
+                                 rope_theta=rope_theta)
+    return k_pages, v_pages, kg_pages
+
+
+def finalize_kg_paged(k_pages: jnp.ndarray, kg_pages: jnp.ndarray,
+                      page_table: jnp.ndarray, cur_len: jnp.ndarray,
+                      active: jnp.ndarray, gate_params: Dict,
+                      cfg: GateConfig, *, rope_theta: float = 10000.0
+                      ) -> jnp.ndarray:
+    """Finalize the Kg row of each slot's just-completed page.
+
+    Called AFTER the new token's key is written: when a slot's page
+    completes ((cur_len+1) % ps == 0) the page's keys are rotated back to
+    the pre-rope frame (same trick as kcache.update_kcache) and
+    pooled+projected into that page's ``kg_pages`` row. Inactive /
+    incomplete slots route the write to the null page. Split out from
+    ``append_token_paged`` so a SelectionSchedule can gate the Kg advance
+    (selecting layers only) independently of the K/V append, which always
+    happens.
+    """
+    ps = cfg.block_size
+    sidx = jnp.arange(cur_len.shape[0])
+    logical = cur_len // ps
+    phys = page_table[sidx, logical]                       # [S]
+    phys = jnp.where(active, phys, NULL_PAGE)
     completed = active & (((cur_len + 1) % ps) == 0)       # [S]
 
     def one_slot(page_k, lg):
@@ -187,8 +214,7 @@ def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     kg_cur = kg_pages[phys_kg]
     kg_write = jnp.where(completed[:, None, None],
                          kg_new.astype(kg_pages.dtype), kg_cur)
-    kg_pages = kg_pages.at[phys_kg].set(kg_write)
-    return k_pages, v_pages, kg_pages
+    return kg_pages.at[phys_kg].set(kg_write)
 
 
 def append_meta_paged(kmin_pages: jnp.ndarray, kmax_pages: jnp.ndarray,

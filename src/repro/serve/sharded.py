@@ -261,6 +261,8 @@ def sharded_paged_decode(
         budget_blocks: Optional[jnp.ndarray] = None,
         split_k: int = 1,
         inner_impl: str = "ref",
+        reuse_idx: Optional[jnp.ndarray] = None,   # [S, Hkv, k] carried plan
+        do_select: Optional[jnp.ndarray] = None,   # [] bool: fresh vs reuse
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One PAGED decode step for ONE layer on a sharded mesh.
 
@@ -284,6 +286,16 @@ def sharded_paged_decode(
     Returns (o [S,Hkv,G,Dh], k_pages, v_pages, kg_pages, idx [S,Hkv,k])
     with pools updated in place (same shardings); ``idx`` is the gathered
     selection for telemetry.
+
+    ``reuse_idx``/``do_select`` (step-level SelectionSchedule): when given,
+    the step blends ``jnp.where(do_select, fresh, reuse_idx)`` INSIDE the
+    shard body, before the budget cap — on a reuse layer the carried plan
+    drives the block-sparse attention and the returned ``idx`` is the plan.
+    The fresh selection (and the Kg page finalize) still runs every layer
+    on this path: the blend keeps the budgeted/unbudgeted one-compiled-
+    program property and the bitwise paged==paged x sharded contract, at
+    the cost of not saving the gate score here (the reuse win on this path
+    is accuracy-surface parity with the local paths, not selection FLOPs).
     """
     from repro.core import kcache as kc
     from repro.kernels import ops
@@ -310,12 +322,17 @@ def sharded_paged_decode(
     qg, qgrp, kr_new, v_new = (
         jax.lax.with_sharding_constraint(x, rep)
         for x in (qg, qgrp, kr_new, v_new))
+    if reuse_idx is not None:
+        # the plan was gathered replicated on the producing layer; pin it
+        # so the head-axis reshard below is an exact slice
+        reuse_idx = jax.lax.with_sharding_constraint(reuse_idx, rep)
 
     spec_h3 = P(None, MODEL, None)
     spec_h4 = P(None, MODEL, None, None)
     rep1, rep2 = P(None), P(None, None)
 
-    def local(qg, qgrp, kr_new, v_new, kp, vp, kgp, pt, cl, act, bb, wk):
+    def local(qg, qgrp, kr_new, v_new, kp, vp, kgp, pt, cl, act, bb, wk,
+              *plan):
         kp, vp, kgp = pg.append_token_paged(
             kp, vp, kgp, kr_new, v_new, pt, cl, act, {"wk": wk}, cfg,
             rope_theta=rope_theta)
@@ -323,6 +340,9 @@ def sharded_paged_decode(
         n_valid = kc.visible_blocks(jnp.maximum(new_len, 1), cfg.block_size)
         idx = ops.gate_select_paged(qg, kgp, pt, n_valid, cfg, max_selected,
                                     impl="ref")
+        if plan:
+            reuse, do_sel = plan
+            idx = jnp.where(do_sel, idx, reuse)
         cap = jnp.arange(idx.shape[-1])[None, None, :] < bb[:, None, None]
         idx = jnp.where(cap, idx, -1)
         if split_k > 1:
@@ -335,14 +355,17 @@ def sharded_paged_decode(
                                         impl=inner_impl)
         return o, kp, vp, kgp, idx
 
+    in_specs = (spec_h3, spec_h4, spec_h3, spec_h3, spec_h4, spec_h4,
+                spec_h3, rep2, rep1, rep1, rep1, P(MODEL, None, None))
+    args = (qg, qgrp, kr_new, v_new, k_pages, v_pages, kg_pages,
+            page_table, cur_len, active, budget_blocks, gate_wk)
+    if reuse_idx is not None:
+        in_specs = in_specs + (spec_h3, P())
+        args = args + (reuse_idx, jnp.asarray(do_select, bool))
     fn = shard_map(
-        local, mesh,
-        in_specs=(spec_h3, spec_h4, spec_h3, spec_h3, spec_h4, spec_h4,
-                  spec_h3, rep2, rep1, rep1, rep1, P(MODEL, None, None)),
+        local, mesh, in_specs=in_specs,
         out_specs=(spec_h4, spec_h4, spec_h4, spec_h3, spec_h3))
-    o, k_pages, v_pages, kg_pages, idx = fn(
-        qg, qgrp, kr_new, v_new, k_pages, v_pages, kg_pages,
-        page_table, cur_len, active, budget_blocks, gate_wk)
+    o, k_pages, v_pages, kg_pages, idx = fn(*args)
     # gather o/idx back to replicated (an exact all-gather) BEFORE they
     # feed dense compute: a head-sharded o would make GSPMD partition the
     # wo projection's contraction dim (psum -> reordered reduction ->

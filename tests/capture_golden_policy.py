@@ -23,7 +23,12 @@ Refresh history: the paged_rid* arrays were recaptured for ISSUE 5's
 serve-path prefill BUCKETING (prompts right-padded to power-of-two page
 buckets): the padded prefill changes XLA's fp reduction order, moving
 paged logits by <= 2.4e-7 while every TOKEN trajectory and the
-contiguous/sharded arrays stayed bit-identical.
+contiguous/sharded arrays stayed bit-identical. ISSUE 6's
+``DecodeOptions.max_selected`` rounding change (budget overrides now CEIL
+to blocks instead of floor) moved NO goldens: every golden workload uses
+the config ``token_budget`` (which keeps the paper's floor semantics via
+``resolve_max_selected``), never a runtime ``budget_override`` — both
+capture modes re-verified bitwise after the change.
 
 ``--verify`` (the CI golden-drift guard, ISSUE 4): recompute the mode's
 arrays and BITWISE-compare them against the committed npz instead of

@@ -194,6 +194,65 @@ def paged_sharded_parity():
     print("paged_sharded_parity OK")
 
 
+def paged_sharded_schedule_parity():
+    """Step-level SelectionSchedule on the paged x sharded path (ISSUE 6):
+    an all-select schedule (the dynamic plan machinery selecting at every
+    layer) must be BITWISE equal to the static default, and a reuse
+    schedule must be BITWISE equal to the same reuse schedule on the
+    unsharded paged engine (the head-shard blend happens inside the shard
+    body before the budget cap, preserving the paged==paged x sharded
+    contract)."""
+    import dataclasses
+    import jax
+    import numpy as np
+    import repro.configs as configs
+    from repro.config import reduced
+    from repro.core.policy import DecodeOptions, SelectionSchedule
+    from repro.distributed import sharding as shd
+    from repro.models.registry import get_api
+    from repro.serve.engine import DecodeEngine
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))   # Hkv=2 over model=2
+    cfg = reduced(configs.get("qwen3_0_6b")).replace(dtype="float32")
+    cfg = cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, token_budget=32))
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    specs = [(21, 8), (13, 10), (30, 6)]
+    reqs = [{"rid": i, "max_new_tokens": mn,
+             "tokens": rng.integers(0, cfg.vocab_size,
+                                    size=(pl,)).astype(np.int32)}
+            for i, (pl, mn) in enumerate(specs)]
+    all_sel = SelectionSchedule(
+        select_layer=0, correction_layers=tuple(range(1, cfg.num_layers)))
+    reuse = SelectionSchedule(select_layer=0)
+    shard = shd.make_shard_fn(mesh)
+
+    def serve(options, sharded):
+        eng = DecodeEngine(cfg, params, max_len=64, options=options,
+                           shard=shard if sharded else None)
+        return eng.serve([dict(r) for r in reqs], n_slots=2,
+                         collect_logits=True)
+
+    with mesh:
+        base = serve(DecodeOptions(kernel_impl="sharded"), True)
+        dyn = serve(DecodeOptions(kernel_impl="sharded", schedule=all_sel),
+                    True)
+        sh_reuse = serve(DecodeOptions(kernel_impl="sharded",
+                                       schedule=reuse), True)
+    local_reuse = serve(DecodeOptions(schedule=reuse), False)
+    for r in reqs:
+        rid = r["rid"]
+        assert dyn[rid] == base[rid], f"rid {rid} all-select mismatch"
+        np.testing.assert_array_equal(dyn["logits"][rid],
+                                      base["logits"][rid])
+        assert sh_reuse[rid] == local_reuse[rid], f"rid {rid} reuse"
+        np.testing.assert_array_equal(sh_reuse["logits"][rid],
+                                      local_reuse["logits"][rid])
+    print("paged_sharded_schedule_parity OK")
+
+
 def moe_sharded_parity():
     import dataclasses
     import jax, jax.numpy as jnp
