@@ -33,6 +33,7 @@ from repro.core.policy import DecodeOptions, get_policy
 from repro.data.pipeline import DataState, make_batch
 from repro.models.registry import get_api
 from repro.serve.engine import DecodeEngine
+from repro.serve.eviction import EvictionConfig
 from repro.serve.sampling import SamplingParams
 
 
@@ -67,6 +68,11 @@ def main():
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="page-pool size; undersize it to watch lazy "
                          "admission preempt+swap instead of stalling")
+    ap.add_argument("--eviction", action="store_true",
+                    help="with --paged and an undersized --pool-pages: "
+                         "evict cold pages (RaaS victim model, ghost-row "
+                         "metadata, optimistic replay on re-touch) before "
+                         "falling back to whole-request preemption")
     args = ap.parse_args()
 
     cfg = reduced(configs.get(args.arch))
@@ -98,9 +104,11 @@ def main():
         # HALF the token budget (runtime mask — same compiled step)
         reqs[0]["budget"] = max(cfg.gate.block_size, args.budget // 2)
         eng = DecodeEngine(cfg, params, max_len=max_len, options=opts)
+        ev = EvictionConfig() if args.eviction else None
         t0 = time.perf_counter()
         res = eng.serve(reqs, n_slots=max(2, args.batch // 2),
-                        num_pages=args.pool_pages, admission=args.admission)
+                        num_pages=args.pool_pages, admission=args.admission,
+                        eviction=ev)
         wall = time.perf_counter() - t0
         st = res["stats"]
         print(f"arch={cfg.arch_id} policy={args.policy} paged serve "
@@ -114,6 +122,11 @@ def main():
               f"admission stalls {st['admission_stalls']}, "
               f"preemptions {st['preemptions']} "
               f"({st['retired_preempted']} requests finished after a swap)")
+        if args.eviction:
+            print(f"eviction: {st['evictions']} pages evicted, "
+                  f"{st['page_restores']} restored on re-touch, "
+                  f"{st['replay_steps']} replayed steps, "
+                  f"swap peak {st['swap']['peak_host_bytes']} host bytes")
         print("measured sparsity by request (req 0 at half budget): "
               + ", ".join(f"{rid}: {rho:.3f}" for rid, rho in
                           sorted(st["sparsity_by_rid"].items())))

@@ -39,6 +39,7 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class SelectionMetaCache(NamedTuple):
@@ -166,6 +167,42 @@ def trailing_meta_paged(k_pages: jnp.ndarray, page_table: jnp.ndarray,
     valid = (jnp.arange(ps)[None, :] < rem[:, None])[:, None, :, None]
     tmin, tmax = _block_minmax(blk, valid)
     return tmin, tmax, t_idx
+
+
+class BlockHeat:
+    """Host-side recency/mass twin of the selection metadata (ISSUE 7).
+
+    RaaS-style (arXiv 2502.11147) retention signal for the page-eviction
+    victim model: per (slot, logical block), the step of the LAST time any
+    head selected the block (``last_touch``, the timestamp rows PR 5's
+    substrate was built for) and an exponential moving average of its
+    selection mass (``ema`` — how often the block keeps being re-touched).
+    Updated once per COMMITTED decode step from the touched-pages
+    telemetry the jitted step already emits; replayed (discarded) runs are
+    never observed, so the signal matches what the request actually
+    attended to. Plain numpy on purpose: the victim model runs on the
+    host between steps, exactly like the scheduler."""
+
+    def __init__(self, n_slots: int, n_blocks: int, decay: float = 0.8):
+        self.decay = float(decay)
+        self.step = 0
+        self.last_touch = np.full((n_slots, n_blocks), -1, np.int64)
+        self.ema = np.zeros((n_slots, n_blocks), np.float32)
+
+    def observe(self, touched: np.ndarray, active: np.ndarray) -> None:
+        """touched [n_slots, n_blocks] bool (any layer, any head selected
+        the block this step); active [n_slots] bool."""
+        self.step += 1
+        t = touched & active[:, None]
+        self.ema[active] *= self.decay
+        self.ema[t] += 1.0
+        self.last_touch[t] = self.step
+
+    def reset_row(self, slot: int) -> None:
+        """A slot changed tenants (admission/retire/preempt): heat from
+        the previous request must not bias the new one's victim model."""
+        self.last_touch[slot] = -1
+        self.ema[slot] = 0.0
 
 
 def overlay_trailing(kmin: jnp.ndarray, kmax: jnp.ndarray,

@@ -227,10 +227,16 @@ class SelectionPolicy(Protocol):
     ``needs_meta``: reads the incremental selection-metadata cache
     (core.metacache) — the model threads/advances it only for these
     policies, the same advance-only-for-the-reader rule as the Kg cache.
+    ``reads_full_kv``: selection itself reads the whole K cache (dense
+    attention, or a cache-sized reference gather) — such policies cannot
+    run with RaaS page eviction (ISSUE 7), which assumes only SELECTED
+    blocks' K/V are ever read so evicted pages are detectable by the
+    touched-pages telemetry.
     """
     dense: bool
     needs_gate: bool
     needs_meta: bool
+    reads_full_kv: bool
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -283,6 +289,7 @@ class GatePolicy:
     dense = False
     needs_gate = True
     needs_meta = False
+    reads_full_kv = False
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -338,6 +345,7 @@ class QuestPolicy:
     dense = False
     needs_gate = False
     needs_meta = True
+    reads_full_kv = False
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -389,6 +397,7 @@ class QuestRecomputePolicy:
     dense = False
     needs_gate = False
     needs_meta = False
+    reads_full_kv = True
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -418,6 +427,7 @@ class OraclePolicy:
     dense = False
     needs_gate = False
     needs_meta = False
+    reads_full_kv = True
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -442,6 +452,7 @@ class DensePolicy:
     dense = True
     needs_gate = False
     needs_meta = False
+    reads_full_kv = True
 
     def select(self, inp: SelectionInputs, cfg: ModelConfig, *,
                impl: str = "ref",
@@ -466,6 +477,7 @@ class SlidingWindowPolicy:
     dense = False
     needs_gate = False
     needs_meta = False
+    reads_full_kv = False
 
     def __post_init__(self):
         if self.sink_blocks < 0:
@@ -577,6 +589,13 @@ class DecodeOptions:
                      + cross-head unification). The default (trivial)
                      schedule selects in every layer per head — the
                      bitwise-pinned pre-schedule behavior.
+    track_evictions: paged decode only — emit a per-step ``touched_pages``
+                     [n_slots, npt] bool aux (which logical blocks any
+                     layer/head attended to) and clamp K/V page-table
+                     reads into the physical pool, so the serving engine
+                     can run RaaS page eviction with optimistic
+                     execution + replay (ISSUE 7). Off by default: it is
+                     a separate jit program.
     """
     policy: SelectionPolicy = GatePolicy()
     kernel_impl: str = "ref"
@@ -585,6 +604,7 @@ class DecodeOptions:
     measure_sparsity: bool = True
     split_k: int = 1
     schedule: SelectionSchedule = SelectionSchedule()
+    track_evictions: bool = False
 
     def __post_init__(self):
         if self.kernel_impl not in KERNEL_IMPLS:
@@ -616,6 +636,23 @@ class DecodeOptions:
                 "attention, so no layer may stage DENSE. dense-prefix, "
                 "select_layer>0 and unify_heads schedules need "
                 "kernel_impl='ref'/'pallas'")
+        if self.track_evictions and getattr(self.policy, "reads_full_kv",
+                                            True):
+            raise ValueError(
+                "track_evictions (RaaS page eviction) requires a policy "
+                "that only reads SELECTED blocks' K/V "
+                f"(reads_full_kv=False); {type(self.policy).__name__} "
+                "reads the full cache, so evicted pages would be silently "
+                "read as garbage")
+        if self.track_evictions and (
+                self.schedule.dense_first_n > 0
+                or (self.schedule.select_layer or 0) > 0):
+            raise ValueError(
+                "track_evictions cannot run with a schedule that stages "
+                "any layer DENSE (dense_first_n > 0 or select_layer > 0): "
+                "DENSE-staged layers read every visible block, so every "
+                "evicted page would fault every step (evict/restore "
+                "thrash)")
 
     def max_selected(self, cfg: ModelConfig) -> Optional[int]:
         """Selected-list width override in BLOCKS (None = config budget).

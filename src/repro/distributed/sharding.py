@@ -261,7 +261,17 @@ def paged_pool_pspecs(pages: Any, mesh: Mesh) -> Any:
     [L, P, Hkv, Dh] (ISSUE 5) all put 'model' on axis 2 — while the page
     table and per-slot metadata stay replicated (they are host numpy
     anyway). Falls back to replication per-axis when Hkv doesn't divide
-    the mesh (sanitize_spec)."""
+    the mesh (sanitize_spec).
+
+    Evicted-page state under the paged x sharded rule (ISSUE 7): ghost
+    rows (``init_pages(..., ghost_rows=N)`` extends the kg/kmin/kmax
+    pools' page axis) ride the SAME head-sharded specs — the page axis
+    (1) is never the sharded one, so a pool with ghost rows shards
+    identically and a ghost id is valid on every shard. The page table
+    stays replicated host numpy, so repointing a logical block at a ghost
+    row (evict) or back at a physical page (restore) needs no
+    collective; K/V attention reads go through the engine-clamped
+    ``pt_kv`` twin (see serve.sharded.sharded_paged_decode)."""
     def one(leaf):
         if leaf.ndim == 5:                       # [L, P, Hkv, ps, Dh]
             spec = P(None, None, MODEL, None, None)

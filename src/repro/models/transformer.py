@@ -424,6 +424,27 @@ def _zero_layer_aux(batch: int):
     return jnp.zeros((), jnp.float32), z, z, z
 
 
+def _touched_pages(idx: jnp.ndarray, nb: int) -> jnp.ndarray:
+    """Selected block ids [B, Hkv, k] -> touched mask [B, nb] bool: which
+    logical blocks ANY head read this layer. The RaaS eviction signal
+    (DecodeOptions.track_evictions): the serving engine intersects this
+    with its evicted-page mask to detect a selected-but-evicted block
+    (fault -> restore -> replay) and feeds it to the BlockHeat recency
+    model."""
+    b = idx.shape[0]
+    cnt = jnp.zeros((b, nb), jnp.int32).at[
+        jnp.arange(b)[:, None, None], jnp.maximum(idx, 0)].add(
+        (idx >= 0).astype(jnp.int32))
+    return cnt > 0
+
+
+def _dense_touched(new_len: jnp.ndarray, block_size: int, nb: int
+                   ) -> jnp.ndarray:
+    """Dense decode touches every visible block."""
+    vis = kc.visible_blocks(jnp.maximum(new_len, 1), block_size)   # [B]
+    return jnp.arange(nb)[None, :] < vis[:, None]
+
+
 def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                      k_cache, v_cache, kg_cache, kg_n, cur_len,
                      options: DecodeOptions, meta_kmin=None, meta_kmax=None,
@@ -653,12 +674,18 @@ def cross_block_decode(p: Params, x1, cfg: ModelConfig, ck, cv):
 
 def aggregate_decode_aux(auxs) -> Dict[str, jnp.ndarray]:
     """Stacked per-layer (rho, rho_rows [B], sel [B], vis [B]) -> the
-    decode-step aux dict every ModelApi.decode_step returns."""
-    rho, rho_rows, sel, vis = auxs
-    return {"sparsity": jnp.mean(rho),
-            "sparsity_rows": jnp.mean(rho_rows, axis=0),
-            "sel_blocks": jnp.mean(sel, axis=0),
-            "vis_blocks": jnp.mean(vis, axis=0)}
+    decode-step aux dict every ModelApi.decode_step returns. A 5th
+    element (touched-pages masks [L, B, nb] under
+    DecodeOptions.track_evictions) ORs over layers: a block is touched if
+    ANY layer's selection read it."""
+    rho, rho_rows, sel, vis = auxs[:4]
+    out = {"sparsity": jnp.mean(rho),
+           "sparsity_rows": jnp.mean(rho_rows, axis=0),
+           "sel_blocks": jnp.mean(sel, axis=0),
+           "vis_blocks": jnp.mean(vis, axis=0)}
+    if len(auxs) > 4:
+        out["touched_pages"] = jnp.any(auxs[4], axis=0)
+    return out
 
 
 def zero_decode_aux(batch: int) -> Dict[str, jnp.ndarray]:
@@ -823,6 +850,16 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         raise ValueError(
             "kernel_impl='sharded' on the paged path needs a mesh-aware "
             "engine: construct DecodeEngine(..., shard=make_shard_fn(mesh))")
+    npt = page_table.shape[1]
+    # RaaS eviction (ISSUE 7): the page table may hold GHOST ids (>= pool
+    # size) for evicted blocks — valid rows of the extended kg/kmin/kmax
+    # pools, so SELECTION reads them through the raw table unchanged, but
+    # out-of-bounds for the K/V pools. Attention consumers read through a
+    # clamped twin; a selected-evicted block is caught by the
+    # touched-pages aux and the step replayed after restore.
+    pt_kv = (jnp.minimum(page_table, k_pages.shape[0] - 1)
+             if options.track_evictions else page_table)
+
     if sparse_on and options.kernel_impl == "sharded" and policy.needs_gate \
             and "gate" in p:
         from repro.serve.sharded import sharded_paged_decode
@@ -834,6 +871,8 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
             # select_layer=0 (+ correction layers), so STAGE_DENSE never
             # reaches this body — only fresh-vs-reuse blending remains
             plan_kw = dict(reuse_idx=plan, do_select=(stage == STAGE_SELECT))
+        if options.track_evictions:
+            plan_kw["pt_kv"] = pt_kv
         o, k_pages, v_pages, kg_pages, idx = sharded_paged_decode(
             qg, qgrp, kr[:, 0], v[:, 0], k_pages, v_pages, kg_pages,
             page_table, cur_len, active, p["gate"]["wk"], mesh=mesh,
@@ -843,8 +882,10 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
             inner_impl="pallas" if cfg.use_pallas else "ref", **plan_kw)
         new_len = cur_len + active.astype(jnp.int32)
         aux = (_selection_aux(idx, kc.visible_blocks(
-                   jnp.maximum(new_len, 1), ps), page_table.shape[1])
+                   jnp.maximum(new_len, 1), ps), npt)
                if options.measure_sparsity else _zero_layer_aux(b))
+        if options.track_evictions:
+            aux = aux + (_touched_pages(idx, npt),)
         out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
         ret = (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages), aux)
         return ret + (idx,) if stage is not None else ret
@@ -911,13 +952,13 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
 
         def _run_sparse(_):
             o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx,
-                                        page_table, new_len, block_size=ps,
+                                        pt_kv, new_len, block_size=ps,
                                         impl=options.kernel_impl)
             return o.reshape(b, 1, hkv * g, dh)
 
         def _run_dense(_):
-            k_ct = pg.gather_kv(k_pages, page_table)
-            v_ct = pg.gather_kv(v_pages, page_table)
+            k_ct = pg.gather_kv(k_pages, pt_kv)
+            v_ct = pg.gather_kv(v_pages, pt_kv)
             return decode_attention(
                 qr, k_ct, v_ct, new_len,
                 logit_softcap=cfg.attn_logit_softcap).reshape(
@@ -926,11 +967,15 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         o = jax.lax.cond(is_dense, _run_dense, _run_sparse, None)
         if options.measure_sparsity:
             sel = _selection_aux(idx, kc.visible_blocks(
-                jnp.maximum(new_len, 1), ps), page_table.shape[1])
+                jnp.maximum(new_len, 1), ps), npt)
             den = _dense_aux(new_len, ps)
             aux = tuple(jnp.where(is_dense, d, s) for s, d in zip(sel, den))
         else:
             aux = _zero_layer_aux(b)
+        if options.track_evictions:
+            tch = jnp.where(is_dense, _dense_touched(new_len, ps, npt),
+                            _touched_pages(idx, npt))
+            aux = aux + (tch,)
         out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
         return (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages),
                 aux, idx)
@@ -948,20 +993,24 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                 < budget_blocks[:, None, None]
             idx = jnp.where(slot_cap, idx, -1)
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
-        o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx, page_table,
+        o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx, pt_kv,
                                     new_len, block_size=ps,
                                     impl=options.kernel_impl)
         o = o.reshape(b, 1, hkv * g, dh)
         aux = (_selection_aux(idx, kc.visible_blocks(
-                   jnp.maximum(new_len, 1), ps), page_table.shape[1])
+                   jnp.maximum(new_len, 1), ps), npt)
                if options.measure_sparsity else _zero_layer_aux(b))
+        if options.track_evictions:
+            aux = aux + (_touched_pages(idx, npt),)
     else:
-        k_ct = pg.gather_kv(k_pages, page_table)           # [S,Hkv,npt*ps,Dh]
-        v_ct = pg.gather_kv(v_pages, page_table)
+        k_ct = pg.gather_kv(k_pages, pt_kv)                # [S,Hkv,npt*ps,Dh]
+        v_ct = pg.gather_kv(v_pages, pt_kv)
         o = decode_attention(qr, k_ct, v_ct, new_len,
                              logit_softcap=cfg.attn_logit_softcap)
         aux = (_dense_aux(new_len, ps) if options.measure_sparsity
                else _zero_layer_aux(b))
+        if options.track_evictions:
+            aux = aux + (_dense_touched(new_len, ps, npt),)
     out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
     ret = (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages), aux)
     # an ungated layer under a plan-carrying schedule: dense fallback, the

@@ -43,7 +43,9 @@ from repro.core.policy import DecodeOptions, default_options
 from repro.models.registry import get_api
 from repro.serve import paging as pg
 from repro.serve import sampling as smp
-from repro.serve.offload import HostSwapSpace, SwapEntry
+from repro.serve.eviction import EvictionConfig, EvictionManager
+from repro.serve.offload import (HostSwapSpace, SwapConfig, SwapEntry,
+                                 SwapError)
 from repro.serve.scheduler import Request, Scheduler, pages_needed
 
 
@@ -69,7 +71,10 @@ class DecodeEngine:
         # the decode state is donated: KV/Kg cache updates alias in place
         self._step = jax.jit(functools.partial(
             self._decode_step, options=self.options), donate_argnums=(1,))
-        self._paged_step = None     # built lazily on first serve()
+        # paged decode steps, built lazily on first serve(): one program
+        # per track_evictions flavor (plain, and the eviction-telemetry
+        # variant serve(eviction=...) compiles)
+        self._paged_steps: Dict[bool, Any] = {}
         # serve()-path prefill, jitted per POWER-OF-TWO page bucket (ISSUE
         # 5: prompts are right-padded to the bucket, so the cache holds
         # O(log max_len) programs instead of one per distinct length)
@@ -141,7 +146,10 @@ class DecodeEngine:
               collect_logits: bool = False,
               max_steps: Optional[int] = None,
               sample_seed: int = 0, admission: str = "lazy",
-              watermark: int = 0) -> ServeResult:
+              watermark: int = 0,
+              eviction: Optional[EvictionConfig] = None,
+              swap_config: Optional[SwapConfig] = None,
+              faults=None) -> ServeResult:
         """Continuous-batching decode over a paged KV cache.
 
         requests: each ``{"tokens": 1-D int array, "max_new_tokens": int}``
@@ -162,6 +170,30 @@ class DecodeEngine:
         bitwise-identically. ``watermark`` pages are held back from lazy
         admission as growth headroom. ``"reserve"`` is the PR-1 upfront
         full-lifetime reservation (no growth, no preemption).
+
+        Memory pressure & failure semantics (ISSUE 7):
+
+        ``eviction`` — an ``EvictionConfig`` (or ``True`` for defaults)
+        turns on RaaS-style PAGE eviction: when the pool runs dry, the
+        coldest full pages of running requests (per-block attention
+        recency/mass) are swapped out individually before any whole
+        request is preempted; a step that selects an evicted page is
+        detected via ``track_evictions`` telemetry, the page restored,
+        and the step replayed — bitwise-equal to an unconstrained run
+        (see serve.eviction). Requires lazy admission and a selective
+        policy (the options layer validates).
+
+        ``swap_config`` — a ``SwapConfig`` bounding the host swap tier in
+        bytes, with optional spill-to-disk below it (LRU demotion).
+
+        ``faults`` — a ``serve.faults.FaultInjector`` driving
+        deterministic failures through the alloc/swap/disk/logits seams.
+        Post-validation, serve() never raises for per-request trouble:
+        a request that hits an unrecoverable fault (permanently
+        unreadable swap entry, non-finite logits, admission stall,
+        step-limit watchdog) is retired with ``status="error"`` and its
+        PARTIAL tokens are still returned; the rest of the batch is
+        bitwise-unaffected. ``stats["errors"]`` maps rid -> reason.
 
         Returns ``ServeResult``: rid -> generated token ids (length
         ``max_new_tokens``), ``res["stats"]`` has throughput, scheduler
@@ -196,14 +228,28 @@ class DecodeEngine:
         base_key = jax.random.PRNGKey(sample_seed)
         self._last_aux = self._last_active = None   # stats reflect THIS run
 
+        if eviction is True:
+            eviction = EvictionConfig()
+        eviction_options = self.options
+        if eviction is not None:
+            if admission != "lazy":
+                raise ValueError(
+                    "eviction requires admission='lazy' (reserve admission "
+                    "never runs out of pages mid-flight)")
+            # validates policy/schedule compatibility up front
+            # (reads_full_kv, dense-staged layers — see DecodeOptions)
+            eviction_options = self.options.replace(track_evictions=True)
+
         npt = max(pages_needed(r.prompt_len, r.max_new_tokens, ps)
                   for r in reqs)
         if num_pages is None:
             # enough for every slot to hold a worst-case sequence (+null)
             num_pages = n_slots * npt + 1
         sched = Scheduler(n_slots, num_pages, ps, npt,
-                          admission=admission, watermark=watermark)
-        swap = HostSwapSpace()
+                          admission=admission, watermark=watermark,
+                          eviction_enabled=eviction is not None,
+                          faults=faults)
+        swap = HostSwapSpace(config=swap_config, faults=faults)
         for r in reqs:
             sched.submit(r)
 
@@ -254,8 +300,13 @@ class DecodeEngine:
         nl = jax.tree.leaves(self.params["blocks"])[0].shape[0]
         # min/max metadata pools only for the policy that reads them
         # (needs_meta is part of the SelectionPolicy protocol)
+        ghosts = 0
+        if eviction is not None:
+            ghosts = (eviction.ghost_rows if eviction.ghost_rows is not None
+                      else n_slots * npt)
         pages = pg.init_pages(cfg, num_pages, nl,
-                              with_meta=self.options.policy.needs_meta)
+                              with_meta=self.options.policy.needs_meta,
+                              ghost_rows=ghosts)
         mesh = getattr(self.shard, "mesh", None)
         if mesh is not None and self.options.kernel_impl == "sharded":
             # paged x sharded: keep the pools resident head-sharded so the
@@ -265,11 +316,22 @@ class DecodeEngine:
             pages = jax.device_put(pages, jax.tree.map(
                 lambda s: NamedSharding(mesh, s),
                 paged_pool_pspecs(pages, mesh)))
-        if self._paged_step is None:   # one jit per engine: repeat serve()
-            self._paged_step = jax.jit(functools.partial(
-                self.api.decode_step_paged, cfg=cfg, options=self.options,
-                shard=self.shard), donate_argnums=(1,))
-        step = self._paged_step
+        track = eviction is not None
+        step = self._paged_steps.get(track)
+        if step is None:   # one jit per flavor per engine: repeat serve()
+            step = self._paged_steps[track] = jax.jit(functools.partial(
+                self.api.decode_step_paged, cfg=cfg,
+                options=eviction_options, shard=self.shard),
+                donate_argnums=(1,))
+        evmgr = None
+        if eviction is not None:
+            evmgr = EvictionManager(
+                sched, swap, num_phys=num_pages, ghost_rows=ghosts,
+                page_size=ps,
+                page_bytes=(pages.k_pages.nbytes + pages.v_pages.nbytes)
+                // num_pages,
+                always_first_block=cfg.gate.always_first_block,
+                config=eviction)
 
         token_buf = np.zeros((n_slots,), np.int32)
         rho_sum: Dict[Any, float] = {r.rid: 0.0 for r in reqs}
@@ -281,6 +343,22 @@ class DecodeEngine:
         limit = max_steps if max_steps is not None else sum(
             r.max_new_tokens for r in reqs) + len(reqs) + 8
 
+        # requests whose swap-out/restore hit a permanent fault inside a
+        # scheduler callback (where failing in place would corrupt the
+        # preemption bookkeeping) — failed right after the callback chain
+        # unwinds, before the next step runs
+        pending_failures: list = []
+
+        def fail_req(req: Request, reason: str) -> None:
+            sched.fail(req, reason)
+            swap.discard(req.rid)
+
+        def flush_failures() -> None:
+            while pending_failures:
+                req, reason = pending_failures.pop()
+                if req.rid not in sched.finished:
+                    fail_req(req, reason)
+
         def swap_out(req: Request) -> None:
             """Preemption callback: capture the victim's device pages (and
             its pending token) into host swap space BEFORE they are freed.
@@ -288,19 +366,57 @@ class DecodeEngine:
             scatter. Only CONTENT pages are captured — a growth page
             allocated for the not-yet-written next token is dropped (it is
             empty; re-admission re-grows it), keeping the swap footprint
-            equal to what re-admission will allocate."""
+            equal to what re-admission will allocate.
+
+            Preempt x evict merge: blocks of the victim that page eviction
+            already moved to host swap are stitched back into the single
+            SwapEntry from their PageEntries (the device ghost rows only
+            mirror gate/meta state; K/V truth for an evicted page lives on
+            the host), so resume takes the unchanged — bitwise-pinned —
+            whole-request restore path. A permanent swap fault here marks
+            the victim failed instead of raising through the scheduler."""
             n_content = max(1, -(-req.swap_len // ps))
+            content = req.pages[:n_content]
+            # ghost ids carry no K/V — extract through the trash page and
+            # overwrite those blocks from their host PageEntries below
+            phys_ids = [p if p < num_pages else pg.NULL_PAGE
+                        for p in content]
             # power-of-two id padding (trash-page ids): bounds the jit
             # cache of extract/restore to O(log pool) programs; re-admission
             # pads the same n_content to the same bucket, so shapes match
             k, v, kg, kmin, kmax = pg.extract_pages(
-                pages, pg.pad_page_ids(req.pages[:n_content]))
-            swap.put(req.rid, SwapEntry(
-                k=np.asarray(k), v=np.asarray(v),
-                kg=None if kg is None else np.asarray(kg),
-                token=int(token_buf[req.slot]), cur_len=req.swap_len,
-                kmin=None if kmin is None else np.asarray(kmin),
-                kmax=None if kmax is None else np.asarray(kmax)))
+                pages, pg.pad_page_ids(phys_ids))
+            k, v = np.array(k), np.array(v)
+            kg = None if kg is None else np.array(kg)
+            kmin = None if kmin is None else np.array(kmin)
+            kmax = None if kmax is None else np.array(kmax)
+            reason = None
+            if evmgr is not None:
+                blocks = evmgr.evicted.pop(req.rid, None) or {}
+                for lb, ghost in sorted(blocks.items()):
+                    evmgr.ghost_free.append(ghost)
+                    try:
+                        pe = swap.pop(("page", req.rid, lb))
+                    except SwapError:
+                        reason = "restore_failed"
+                        continue
+                    k[:, lb] = pe.k[:, 0]
+                    v[:, lb] = pe.v[:, 0]
+                    if kg is not None and pe.kg is not None:
+                        kg[:, lb] = pe.kg[:, 0]
+                    if kmin is not None and pe.kmin is not None:
+                        kmin[:, lb] = pe.kmin[:, 0]
+                        kmax[:, lb] = pe.kmax[:, 0]
+            if reason is None:
+                try:
+                    swap.put(req.rid, SwapEntry(
+                        k=k, v=v, kg=kg,
+                        token=int(token_buf[req.slot]),
+                        cur_len=req.swap_len, kmin=kmin, kmax=kmax))
+                except SwapError:
+                    reason = "swap_put_failed"
+            if reason is not None:
+                pending_failures.append((req, reason))
 
         # recycled pages may hold a previous tenant's Kg row; the
         # staleness contract needs a ZERO row on every partial trailing
@@ -322,10 +438,47 @@ class DecodeEngine:
                 pages = pg.reset_kg_rows(pages, pg.pad_page_ids(sorted(ids)))
             dirty.difference_update(ids)
 
+        def mark_live(ids) -> None:
+            """Pages just (re)written with live content: pull them out of
+            both pending-zero queues so a later sweep cannot clobber the
+            fresh gate rows (a page can be freed and reused within one
+            iteration — retire-at-admission, eviction, replay restore)."""
+            live = set(ids)
+            dirty.difference_update(live)
+            sched.released = [p for p in sched.released if p not in live]
+
+        if evmgr is not None:
+            def evict_cb(n: int) -> int:
+                nonlocal pages
+                pages, freed = evmgr.evict(pages, n)
+                return freed
+
+            def release_filter(req: Request):
+                # heat rows are per-slot state; the slot is being vacated
+                if req.slot >= 0 and sched.slots[req.slot] is req:
+                    evmgr.heat.reset_row(req.slot)
+                evmgr.forget(req)    # drop host entries, reclaim ghosts
+                return [p for p in req.pages if p < num_pages]
+
+            sched.evict_cb = evict_cb
+            sched.release_filter = release_filter
+            evmgr.mark_clean = mark_live
+
+        def fail_unfinished(reason: str) -> None:
+            for r in reqs:
+                if r.rid not in sched.finished:
+                    fail_req(r, reason)
+
         while sched.has_work():
             for req in sched.admissions():
                 if req.swapped:            # resume: restore, don't prefill
-                    entry = swap.pop(req.rid)
+                    try:
+                        entry = swap.pop(req.rid)
+                    except SwapError:
+                        # permanently unreadable swap entry: the request's
+                        # KV is gone — fail IT, keep serving the others
+                        fail_req(req, "restore_failed")
+                        continue
                     pages = pg.restore_pages(
                         pages, jnp.asarray(entry.k), jnp.asarray(entry.v),
                         None if entry.kg is None else jnp.asarray(entry.kg),
@@ -343,11 +496,14 @@ class DecodeEngine:
                     if collect_logits:
                         req.out_logits.append(lg)
                     token_buf[req.slot] = first
-                dirty.difference_update(req.pages)   # content written
+                mark_live(req.pages)                 # content written
                 if budget_blocks is not None:
                     budget_blocks[req.slot] = slot_cap(req.rid)
                 sched.retire_if_done(req)
+            if evmgr is not None:
+                pages = evmgr.enforce_caps(pages)
             fresh = sched.prepare_step(swap_out)   # lazy growth + preemption
+            flush_failures()
             dirty.update(sched.drain_released())
             sweep_dirty([p for p in fresh if p in dirty])
             if not sched.active.any():
@@ -358,28 +514,102 @@ class DecodeEngine:
                 # declaring a stall
                 idle_spins += 1
                 if idle_spins > 1:
-                    raise RuntimeError(
-                        "scheduler stalled: pending requests but no active "
-                        "slots and admission failed")
+                    # no-progress watchdog: admission is stuck (e.g. the
+                    # allocator keeps faulting). Fail the head-of-line
+                    # request — each firing unblocks the queue by one, so
+                    # the loop always terminates — instead of raising away
+                    # everyone's partial results.
+                    fail_req(sched.pending[0], "admission_stall")
+                    idle_spins = 0
                 continue
             idle_spins = 0
             active_now = int(sched.active.sum())
             active_sum += active_now
             active_max = max(active_max, active_now)
-            slot_reqs = list(sched.slots)   # before retirement mutates it
-            logits, pages, aux = step(self.params, pages,
-                                      jnp.asarray(token_buf),
-                                      jnp.asarray(sched.page_table),
-                                      jnp.asarray(sched.cur_len),
-                                      jnp.asarray(sched.active),
-                                      budget_blocks=(
-                                          jnp.asarray(budget_blocks)
-                                          if budget_blocks is not None
-                                          else None))
+            replays = 0
+            while True:
+                logits, pages, aux = step(self.params, pages,
+                                          jnp.asarray(token_buf),
+                                          jnp.asarray(sched.page_table),
+                                          jnp.asarray(sched.cur_len),
+                                          jnp.asarray(sched.active),
+                                          budget_blocks=(
+                                              jnp.asarray(budget_blocks)
+                                              if budget_blocks is not None
+                                              else None))
+                if evmgr is None:
+                    break
+                touched = np.asarray(aux["touched_pages"], bool)
+                faulted = (touched & (sched.page_table >= num_pages)
+                           & sched.active[:, None])
+                if not faulted.any():
+                    # victim model feeds on FAULT-FREE steps only (replay
+                    # reads are restore traffic, not attention heat)
+                    evmgr.heat.observe(touched, sched.active)
+                    break
+                # optimistic execution faulted: some row selected a block
+                # whose K/V is evicted (its gate/meta ghost rows scored it
+                # normally). Restore the pages and RE-RUN the step; page
+                # writes are idempotent (the trailing append rewrites the
+                # same values at the same positions before any read), so
+                # the replay is bitwise equal to a never-faulted step.
+                evmgr.n_replays += 1
+                replays += 1
+                if replays > evmgr.config.max_replays:
+                    # evict/restore thrash: fail the faulted requests. The
+                    # surviving rows of this run never read a ghost, so
+                    # their logits are valid as-is.
+                    for slot in np.nonzero(faulted.any(axis=1))[0]:
+                        if sched.slots[slot] is not None:
+                            fail_req(sched.slots[slot], "restore_thrash")
+                    break
+                # pin every page ANY active row touched (plus trailing):
+                # restoring row A must not evict what row B's replay reads,
+                # or the replay loop could ping-pong forever
+                pinned = set()
+                for slot in np.nonzero(sched.active)[0]:
+                    r = sched.slots[slot]
+                    for lb in np.nonzero(touched[slot])[0]:
+                        pinned.add((r.rid, int(lb)))
+                    pinned.add((r.rid, int(sched.cur_len[slot]) // ps))
+                for slot in np.nonzero(faulted.any(axis=1))[0]:
+                    r = sched.slots[slot]
+                    if r is None or not sched.active[slot]:
+                        continue    # preempted while restoring another row
+                    lbs = [int(x) for x in np.nonzero(faulted[slot])[0]]
+                    pages, ok = evmgr.restore(pages, r, lbs, pinned=pinned,
+                                              swap_out=swap_out)
+                    if not ok:
+                        fail_req(r, "restore_failed")
+                flush_failures()
+                dirty.update(sched.drain_released())
+                if not sched.active.any():
+                    break
+            if not sched.active.any():
+                # every row failed or was preempted mid-replay; count the
+                # spin against the step limit so injected-fault storms
+                # still terminate
+                n_steps += 1
+                if n_steps > limit:
+                    fail_unfinished("step_limit")
+                    break
+                continue
             self._last_aux = aux
             # idle/retired slots decode garbage rows (rho=0): remember who
             # was live so sparsity_stats() averages ACTIVE rows only
             self._last_active = sched.active.copy()
+            slot_reqs = list(sched.slots)   # before retirement mutates it
+            # per-request failure isolation: a non-finite logits row (a
+            # poisoned request, or an injected "logits" fault) is retired
+            # with an error instead of sampling garbage into the batch
+            finite = np.array(jnp.isfinite(logits).all(axis=-1))
+            if faults is not None and faults.fire("logits"):
+                act = np.nonzero(sched.active)[0]
+                if act.size:
+                    finite[act[0]] = False
+            bad = (~finite) & sched.active
+            for slot in np.nonzero(bad)[0]:
+                fail_req(sched.slots[slot], "non_finite_logits")
             stoch = any_stochastic(slot_reqs)
             lg_np = (np.asarray(logits, np.float32)
                      if (collect_logits or stoch) else None)
@@ -403,7 +633,11 @@ class DecodeEngine:
             token_buf = np.where(sched.active, nxt, 0).astype(np.int32)
             n_steps += 1
             if n_steps > limit:
-                raise RuntimeError("serve(): step limit exceeded")
+                # step-limit watchdog: fail whatever is unfinished with
+                # partial results + telemetry instead of raising away the
+                # finished requests' outputs
+                fail_unfinished("step_limit")
+                break
         wall = time.perf_counter() - t0
 
         out = ServeResult()
@@ -435,6 +669,15 @@ class DecodeEngine:
             "resumed": sched.n_resumed,
             "swapped_out_bytes": swap.bytes_out,
             "swapped_in_bytes": swap.bytes_in,
+            # ISSUE 7: failure isolation + memory-pressure telemetry
+            "failed": sched.n_failed,
+            "errors": {r.rid: r.error for r in sched.finished.values()
+                       if r.status != "ok"},
+            "swap": swap.stats(),
+            "faults": None if faults is None else faults.stats(),
+            "evictions": 0 if evmgr is None else evmgr.n_evicted,
+            "page_restores": 0 if evmgr is None else evmgr.n_page_restores,
+            "replay_steps": 0 if evmgr is None else evmgr.n_replays,
             "mean_active_slots": active_sum / max(n_steps, 1),
             "max_active_slots": active_max,
             "peak_pages_used": (sched.allocator.num_pages - 1

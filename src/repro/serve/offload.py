@@ -9,7 +9,14 @@ surface for when offload wins) and a functional simulator used in tests.
 ``HostSwapSpace`` is the host-side buffer the paged serving engine swaps
 preempted requests' pages into (ISSUE 4): page contents (K/V/Kg), the
 request's last sampled token and its current length, keyed by request id.
-The same PCIe cost model above prices a swap: one page round trip costs
+Since ISSUE 7 it is TIERED and BOUNDED: an optional
+``SwapConfig.host_capacity_bytes`` caps the in-memory tier, with LRU
+demotion to an on-disk ``.npz`` tier (``disk_dir``) and promotion back on
+``pop`` — so preemption under heavy traffic can never OOM the host — and
+single evicted pages (``PageEntry``, keyed ``("page", rid, lb)``) share
+the same store as whole-request ``SwapEntry``s. Transfers retry with
+bounded backoff through an optional ``FaultInjector``. The same PCIe cost
+model above prices a swap: one page round trip costs
 ``2 * ps * Hkv * Dh * bytes`` each way at PCIE_BW.
 
 Derived model per token (one layer, one sequence):
@@ -20,12 +27,17 @@ Derived model per token (one layer, one sequence):
 """
 from __future__ import annotations
 
-from typing import Dict, NamedTuple, Optional
+import dataclasses
+import os
+import time
+from collections import OrderedDict
+from typing import Dict, Hashable, NamedTuple, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.config import ModelConfig
+from repro.serve.faults import FaultInjector
 
 HBM_BW = 819e9
 PCIE_BW = 32e9          # host<->device, ~PCIe gen4 x16 effective
@@ -97,43 +109,248 @@ class SwapEntry(NamedTuple):
     kmax: Optional[np.ndarray] = None   # [L, n_pages, Hkv, Dh] | None
 
 
+class PageEntry(NamedTuple):
+    """One EVICTED page of a still-running request (RaaS eviction,
+    ISSUE 7): single-page K/V content plus the gate/metadata rows so an
+    evict→restore round trip is bitwise-lossless, exactly like whole-
+    request preemption. Keyed in ``HostSwapSpace`` as
+    ``("page", rid, logical_block)``."""
+    k: np.ndarray                 # [L, 1, Hkv, ps, Dh]
+    v: np.ndarray                 # [L, 1, Hkv, ps, Dh]
+    kg: Optional[np.ndarray] = None     # [L, 1, Hkv, Dg] | None
+    kmin: Optional[np.ndarray] = None   # [L, 1, Hkv, Dh] | None
+    kmax: Optional[np.ndarray] = None   # [L, 1, Hkv, Dh] | None
+
+
+@dataclasses.dataclass(frozen=True)
+class SwapConfig:
+    """Capacity bounds + retry policy for ``HostSwapSpace``.
+
+    ``host_capacity_bytes=None`` keeps the pre-ISSUE-7 behavior (an
+    unbounded in-memory dict). With a bound set, inserts that would
+    exceed it LRU-demote the oldest host entries to ``disk_dir`` (which
+    must then be configured — exceeding the host bound with no disk tier
+    is a ``SwapCapacityError``); ``disk_capacity_bytes`` optionally
+    bounds the disk tier too. Transfers retry up to ``retries`` extra
+    attempts with exponential backoff starting at ``backoff_s``."""
+    host_capacity_bytes: Optional[int] = None
+    disk_dir: Optional[str] = None
+    disk_capacity_bytes: Optional[int] = None
+    retries: int = 3
+    backoff_s: float = 0.0
+
+
+class SwapError(RuntimeError):
+    """Base class for swap-space failures (after retries exhausted)."""
+
+
+class SwapIOError(SwapError):
+    """A (possibly injected) transfer error that outlived every retry."""
+
+
+class SwapCapacityError(SwapError):
+    """Entry does not fit within the configured tier capacity bounds."""
+
+
+class SwapLookupError(SwapError, KeyError):
+    """Descriptive missing-key error (subclasses KeyError for compat)."""
+
+
+# np.savez round-trip registry: entry type name -> NamedTuple class.
+_ENTRY_KINDS = {"SwapEntry": SwapEntry, "PageEntry": PageEntry}
+
+
+def _pack_entry(entry) -> Dict[str, np.ndarray]:
+    out = {"__kind__": np.asarray(type(entry).__name__)}
+    for name, val in zip(entry._fields, entry):
+        if val is None:
+            continue
+        out[name] = np.asarray(val)
+    return out
+
+
+def _unpack_entry(data) -> NamedTuple:
+    kind = _ENTRY_KINDS[str(data["__kind__"])]
+    kw = {f: data[f] for f in kind._fields if f in data.files}
+    for f in ("token", "cur_len"):          # 0-d arrays back to python ints
+        if f in kw:
+            kw[f] = int(kw[f])
+    return kind(**kw)
+
+
 class HostSwapSpace:
-    """Host buffer for preempted requests' pages (one entry per rid).
+    """Tiered host buffer for preempted requests / evicted pages.
 
     The serving engine ``put``s a SwapEntry at preemption (after
-    device_get) and ``pop``s it at re-admission; byte counters feed the
+    device_get) or a PageEntry at page eviction, and ``pop``s it at
+    re-admission / restore-on-re-touch. Two tiers: a host-memory
+    OrderedDict (LRU order = insertion order, refreshed on demotion
+    scans) bounded by ``SwapConfig.host_capacity_bytes``, and an on-disk
+    ``.npz`` tier below it. Byte/operation counters per tier feed the
     swap telemetry in ``DecodeEngine.serve()`` stats.
     """
 
-    def __init__(self):
-        self._entries: Dict[int, SwapEntry] = {}
+    def __init__(self, config: Optional[SwapConfig] = None,
+                 faults: Optional[FaultInjector] = None):
+        self.config = config if config is not None else SwapConfig()
+        self.faults = faults
+        self._host: "OrderedDict[Hashable, NamedTuple]" = OrderedDict()
+        self._disk: Dict[Hashable, str] = {}
+        self._disk_seq = 0
+        # legacy counters (whole-store traffic, any tier)
         self.swapped_out = 0
         self.swapped_in = 0
         self.bytes_out = 0
         self.bytes_in = 0
+        # per-tier accounting (ISSUE 7)
+        self.host_bytes = 0
+        self.disk_bytes = 0
+        self.peak_host_bytes = 0
+        self.peak_disk_bytes = 0
+        self.demotions = 0
+        self.promotions = 0
+        self.retries_used = 0
 
     def __len__(self) -> int:
-        return len(self._entries)
+        return len(self._host) + len(self._disk)
 
-    def __contains__(self, rid) -> bool:
-        return rid in self._entries
+    def __contains__(self, key) -> bool:
+        return key in self._host or key in self._disk
+
+    def keys(self):
+        return list(self._host) + list(self._disk)
 
     @staticmethod
-    def _nbytes(e: SwapEntry) -> int:
-        return (e.k.nbytes + e.v.nbytes
-                + (e.kg.nbytes if e.kg is not None else 0)
-                + (e.kmin.nbytes if e.kmin is not None else 0)
-                + (e.kmax.nbytes if e.kmax is not None else 0))
+    def _nbytes(e) -> int:
+        return sum(v.nbytes for v in e if isinstance(v, np.ndarray))
 
-    def put(self, rid, entry: SwapEntry) -> None:
-        if rid in self._entries:
-            raise ValueError(f"rid {rid} already swapped out")
-        self._entries[rid] = entry
+    def _attempt(self, site: str) -> None:
+        """One logical transfer: retry injected failures with backoff;
+        raise SwapIOError once the budget is spent. Each attempt consumes
+        one FaultInjector call index at ``site``."""
+        if self.faults is None:
+            return
+        for attempt in range(self.config.retries + 1):
+            if not self.faults.fire(site):
+                return
+            if attempt < self.config.retries:
+                self.retries_used += 1
+                if self.config.backoff_s > 0:
+                    time.sleep(self.config.backoff_s * (2 ** attempt))
+        raise SwapIOError(
+            f"swap {site} failed after {self.config.retries + 1} attempts")
+
+    # -- disk tier ---------------------------------------------------------
+
+    def _write_disk(self, key, entry, nb: int) -> None:
+        cfg = self.config
+        if cfg.disk_dir is None:
+            raise SwapCapacityError(
+                f"host swap capacity {cfg.host_capacity_bytes} bytes "
+                f"exceeded by entry {key!r} ({nb} bytes) and no disk tier "
+                "is configured (SwapConfig.disk_dir)")
+        if (cfg.disk_capacity_bytes is not None
+                and self.disk_bytes + nb > cfg.disk_capacity_bytes):
+            raise SwapCapacityError(
+                f"disk swap tier full: {self.disk_bytes} + {nb} bytes "
+                f"exceeds bound {cfg.disk_capacity_bytes} (entry {key!r})")
+        self._attempt("disk_write")
+        os.makedirs(cfg.disk_dir, exist_ok=True)
+        path = os.path.join(cfg.disk_dir, f"swap_{self._disk_seq}.npz")
+        self._disk_seq += 1
+        np.savez(path, **_pack_entry(entry))
+        self._disk[key] = path
+        self.disk_bytes += nb
+        self.peak_disk_bytes = max(self.peak_disk_bytes, self.disk_bytes)
+
+    def _read_disk(self, key):
+        self._attempt("disk_read")
+        path = self._disk.pop(key)
+        with np.load(path) as data:
+            entry = _unpack_entry(data)
+        os.remove(path)
+        self.disk_bytes -= self._nbytes(entry)
+        self.promotions += 1
+        return entry
+
+    def _demote_oldest(self) -> None:
+        key, entry = self._host.popitem(last=False)       # LRU = oldest put
+        nb = self._nbytes(entry)
+        try:
+            self._write_disk(key, entry, nb)
+        except SwapError:
+            self._host[key] = entry                       # undo, re-raise
+            self._host.move_to_end(key, last=False)
+            raise
+        self.host_bytes -= nb
+        self.demotions += 1
+
+    # -- public API --------------------------------------------------------
+
+    def put(self, key, entry) -> None:
+        if key in self:
+            raise ValueError(
+                f"swap entry {key!r} already resident; held keys: "
+                f"{sorted(map(repr, self.keys()))}")
+        self._attempt("swap_put")
+        nb = self._nbytes(entry)
+        cap = self.config.host_capacity_bytes
+        if cap is not None and nb > cap:
+            self._write_disk(key, entry, nb)              # never fits in host
+        else:
+            # demote BEFORE insert so host_bytes never exceeds the bound
+            while cap is not None and self._host and \
+                    self.host_bytes + nb > cap:
+                self._demote_oldest()
+            self._host[key] = entry
+            self.host_bytes += nb
+            self.peak_host_bytes = max(self.peak_host_bytes, self.host_bytes)
         self.swapped_out += 1
-        self.bytes_out += self._nbytes(entry)
+        self.bytes_out += nb
 
-    def pop(self, rid) -> SwapEntry:
-        entry = self._entries.pop(rid)
+    def pop(self, key):
+        if key not in self:
+            raise SwapLookupError(
+                f"no swap entry for key {key!r}; resident keys: "
+                f"{sorted(map(repr, self.keys()))}")
+        self._attempt("swap_pop")
+        if key in self._host:
+            entry = self._host.pop(key)
+            self.host_bytes -= self._nbytes(entry)
+        else:
+            entry = self._read_disk(key)                  # promotion
         self.swapped_in += 1
         self.bytes_in += self._nbytes(entry)
         return entry
+
+    def discard(self, key) -> None:
+        """Drop an entry without restoring it (failed/aborted request).
+        Missing keys are a no-op — discard is cleanup, not lookup."""
+        if key in self._host:
+            entry = self._host.pop(key)
+            self.host_bytes -= self._nbytes(entry)
+        elif key in self._disk:
+            path = self._disk.pop(key)
+            try:
+                with np.load(path) as data:
+                    # 0-d entries (kind tag, token, cur_len) are metadata,
+                    # not accounted bytes
+                    self.disk_bytes -= sum(
+                        data[f].nbytes for f in data.files
+                        if data[f].ndim > 0)
+                os.remove(path)
+            except OSError:  # pragma: no cover - best-effort cleanup
+                pass
+
+    def stats(self) -> Dict[str, int]:
+        return {
+            "host_entries": len(self._host),
+            "disk_entries": len(self._disk),
+            "host_bytes": self.host_bytes,
+            "disk_bytes": self.disk_bytes,
+            "peak_host_bytes": self.peak_host_bytes,
+            "peak_disk_bytes": self.peak_disk_bytes,
+            "demotions": self.demotions,
+            "promotions": self.promotions,
+            "retries_used": self.retries_used,
+        }

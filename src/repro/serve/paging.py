@@ -60,16 +60,28 @@ class PagedPages(NamedTuple):
 
 
 def init_pages(cfg: ModelConfig, num_pages: int, n_layers: int,
-               dtype=None, with_meta: bool = False) -> PagedPages:
+               dtype=None, with_meta: bool = False,
+               ghost_rows: int = 0) -> PagedPages:
+    """Allocate the pools. ``ghost_rows`` (RaaS eviction, ISSUE 7) extends
+    ONLY the gate/metadata pools (kg/kmin/kmax) by extra rows with ids in
+    ``[num_pages, num_pages + ghost_rows)``: an evicted page's K/V leaves
+    the device but its selection-side rows are parked in a ghost row and
+    the page table repointed there, so selection math reads evicted
+    blocks' scores/metadata through the table UNCHANGED — bitwise
+    identical to the unevicted run — while the K/V rows are reclaimed.
+    K/V pools never grow: attention consumers clamp ghost ids to the pool
+    (optimistic execution; a selected-evicted block is detected via the
+    touched-pages telemetry and replayed after restore)."""
     dt = dtype or jnp.dtype(cfg.dtype)
     ps = cfg.gate.block_size
     hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
-    kg = (jnp.zeros((n_layers, num_pages, hkv, cfg.gate.d_gate), dt)
+    gate_rows = num_pages + ghost_rows
+    kg = (jnp.zeros((n_layers, gate_rows, hkv, cfg.gate.d_gate), dt)
           if cfg.gate.enabled else None)
     def meta():
         # two DISTINCT buffers: the pools are donated through the jitted
         # step, and XLA rejects donating one buffer twice
-        return (jnp.zeros((n_layers, num_pages, hkv, dh), jnp.float32)
+        return (jnp.zeros((n_layers, gate_rows, hkv, dh), jnp.float32)
                 if with_meta else None)
     return PagedPages(
         k_pages=jnp.zeros((n_layers, num_pages, hkv, ps, dh), dt),
@@ -345,6 +357,28 @@ def reset_kg_rows(pages: PagedPages, page_ids: jnp.ndarray) -> PagedPages:
         out = out._replace(
             kmin_pages=out.kmin_pages.at[:, page_ids].set(0.0),
             kmax_pages=out.kmax_pages.at[:, page_ids].set(0.0))
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def copy_gate_rows(pages: PagedPages, src_ids: jnp.ndarray,
+                   dst_ids: jnp.ndarray) -> PagedPages:
+    """Copy gate/metadata rows (kg/kmin/kmax) from ``src_ids`` to
+    ``dst_ids`` — the evict-time park of a page's selection-side state
+    into a ghost row (and nothing else: K/V rows are extracted to host by
+    ``extract_pages`` and then simply reclaimed). Both id lists are padded
+    with NULL_PAGE by the caller; the padding copies row 0 onto itself,
+    which is inert."""
+    out = pages
+    if pages.kg_pages is not None:
+        out = out._replace(kg_pages=out.kg_pages.at[:, dst_ids].set(
+            out.kg_pages[:, src_ids]))
+    if pages.kmin_pages is not None:
+        out = out._replace(
+            kmin_pages=out.kmin_pages.at[:, dst_ids].set(
+                out.kmin_pages[:, src_ids]),
+            kmax_pages=out.kmax_pages.at[:, dst_ids].set(
+                out.kmax_pages[:, src_ids]))
     return out
 
 

@@ -63,6 +63,12 @@ class Request:
     swapped: bool = False
     swap_len: int = 0                # cur_len at preemption
     n_preemptions: int = 0
+    # failure isolation (ISSUE 7): a request that hits an unrecoverable
+    # per-request fault (non-finite logits, permanent restore failure,
+    # watchdog abort) is retired with status="error" and the reason in
+    # ``error``; its partial out_tokens still reach the caller
+    status: str = "ok"
+    error: Optional[str] = None
 
     @property
     def prompt_len(self) -> int:
@@ -88,7 +94,8 @@ def pages_needed(prompt_len: int, max_new_tokens: int, page_size: int) -> int:
 class Scheduler:
     def __init__(self, n_slots: int, num_pages: int, page_size: int,
                  max_pages_per_seq: int, *, admission: str = "lazy",
-                 watermark: int = 0):
+                 watermark: int = 0, eviction_enabled: bool = False,
+                 faults=None):
         if admission not in ADMISSION_MODES:
             raise ValueError(f"admission {admission!r} not in "
                              f"{ADMISSION_MODES}")
@@ -99,6 +106,18 @@ class Scheduler:
         self.max_pages_per_seq = max_pages_per_seq
         self.admission = admission
         self.watermark = watermark
+        # ISSUE 7 seams, wired by the engine when eviction is on:
+        #   eviction_enabled — relaxes the full-lifetime admission bound
+        #     (growth past the pool is absorbed by page eviction) and makes
+        #     _pick_victim skip victims whose resume need can't fit
+        #   evict_cb(n) -> pages actually freed — try page-granular eviction
+        #     before falling back to whole-request preemption
+        #   release_filter(req) -> physical page ids to free — ghost ids of
+        #     evicted pages must never reach PageAllocator.free
+        self.eviction_enabled = eviction_enabled
+        self.evict_cb: Optional[Callable[[int], int]] = None
+        self.release_filter: Optional[Callable[[Request], List[int]]] = None
+        self.faults = faults
         self.allocator = PageAllocator(num_pages)
         self.page_table = np.full((n_slots, max_pages_per_seq), NULL_PAGE,
                                   np.int32)
@@ -116,7 +135,17 @@ class Scheduler:
         self.n_resumed = 0                 # swap-in re-admissions
         self.n_retired = 0
         self.n_preemptions = 0
+        self.n_failed = 0                  # requests retired with an error
         self.admission_stalls = 0          # steps a head-of-line req waited
+
+    def _alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate through the fault-injection seam: an injected
+        ``page_alloc`` fault reports exhaustion even when pages are free,
+        which the callers already survive (admission retries next
+        iteration; growth falls back to eviction/preemption)."""
+        if self.faults is not None and self.faults.fire("page_alloc"):
+            return None
+        return self.allocator.alloc(n)
 
     # -- submission ---------------------------------------------------------
 
@@ -132,10 +161,28 @@ class Scheduler:
             raise ValueError(
                 f"request {req.rid} needs {need} pages > table width "
                 f"{self.max_pages_per_seq}")
-        if need > self.allocator.num_pages - 1:
+        pool = self.allocator.num_pages - 1       # page 0 is the NULL page
+        if self.admission == "lazy":
+            # lazy admission only reserves the pages held RIGHT NOW, but it
+            # also holds ``watermark`` pages back as growth headroom — a
+            # request whose admission need exceeds (pool - watermark) can
+            # NEVER be admitted and would head-of-line-block the queue
+            # forever. Fail fast instead of stalling silently.
+            adm = req.pages_held(self.page_size)
+            if adm > pool - self.watermark:
+                raise ValueError(
+                    f"request {req.rid} needs {adm} pages at admission but "
+                    f"only {pool - self.watermark} can ever be free for "
+                    f"admission (pool {pool} minus watermark "
+                    f"{self.watermark}) — it would head-of-line-block the "
+                    f"queue forever")
+        if need > pool and not (self.admission == "lazy"
+                                and self.eviction_enabled):
+            # with page eviction on, growth past the pool is absorbed by
+            # evicting cold pages, so only the admission need must fit
             raise ValueError(
                 f"request {req.rid} needs {need} pages but the pool only has "
-                f"{self.allocator.num_pages - 1} — it can never be admitted")
+                f"{pool} — it can never be admitted")
         self.pending.append(req)
 
     def has_work(self) -> bool:
@@ -175,7 +222,7 @@ class Scheduler:
             headroom = (self.watermark
                         if self.admission == "lazy" and not req.swapped
                         else 0)
-            ids = (self.allocator.alloc(need)
+            ids = (self._alloc(need)
                    if self.allocator.num_free - need >= headroom else None)
             if ids is None:
                 self.admission_stalls += 1
@@ -218,9 +265,21 @@ class Scheduler:
                 continue
             needed = int(self.cur_len[slot]) // self.page_size + 1
             while len(req.pages) < needed:
-                ids = self.allocator.alloc(1)
+                ids = self._alloc(1)
                 if ids is None:
+                    # graceful degradation order (ISSUE 7): evict cold
+                    # PAGES of running requests first; only preempt a
+                    # whole request when eviction can't free anything
+                    if (self.evict_cb is not None
+                            and self.evict_cb(1) > 0):
+                        continue
                     victim = self._pick_victim()
+                    if victim is None:
+                        # eviction mode, every victim unresumable and
+                        # nothing evictable — fail THIS request rather
+                        # than poisoning the batch or stalling forever
+                        self.fail(req, "pool_exhausted")
+                        break
                     self._preempt(victim, swap_out)
                     if victim is req:
                         break               # the grower itself was evicted
@@ -230,18 +289,43 @@ class Scheduler:
                 fresh.extend(ids)
         return fresh
 
-    def _pick_victim(self) -> Request:
+    def _pick_victim(self, exclude: Optional[Request] = None
+                     ) -> Optional[Request]:
         """Fewest-generated-tokens victim (least progress lost per page
-        freed); ties break to the LOWEST slot for determinism."""
+        freed); ties break to the LOWEST slot for determinism.
+
+        Under eviction the admission bound is relaxed, so a long request's
+        resume need (ceil(content / page_size)) may exceed the pool — such
+        a request is skipped (preempting it would strand it in pending
+        forever); returns None when no resumable victim exists. ``exclude``
+        protects the request a replay is currently restoring.
+        """
         best: Optional[Request] = None
+        pool = self.allocator.num_pages - 1
         for slot in range(self.n_slots):
             req = self.slots[slot]
-            if req is None or not self.active[slot]:
+            if req is None or not self.active[slot] or req is exclude:
                 continue
+            if self.eviction_enabled:
+                resume = max(1, -(-int(self.cur_len[slot]) // self.page_size))
+                if resume > pool:
+                    continue
             if best is None or len(req.out_tokens) < len(best.out_tokens):
                 best = req
-        assert best is not None, "preemption with no active slots"
+        if not self.eviction_enabled:
+            assert best is not None, "preemption with no active slots"
         return best
+
+    def _release(self, req: Request) -> None:
+        """Free a request's pages, routing through the engine's
+        release_filter so ghost ids of evicted pages (which are table
+        aliases, not allocator pages) never hit PageAllocator.free."""
+        pages = (self.release_filter(req) if self.release_filter is not None
+                 else req.pages)
+        if pages:
+            self.allocator.free(pages)
+            self.released.extend(pages)
+        req.pages = []
 
     def _preempt(self, req: Request,
                  swap_out: Optional[Callable[[Request], None]]) -> None:
@@ -249,9 +333,7 @@ class Scheduler:
         req.swap_len = int(self.cur_len[slot])
         if swap_out is not None:
             swap_out(req)                  # capture BEFORE pages are freed
-        self.allocator.free(req.pages)
-        self.released.extend(req.pages)
-        req.pages = []
+        self._release(req)
         req.swapped = True
         req.n_preemptions += 1
         self.n_preemptions += 1
@@ -296,9 +378,7 @@ class Scheduler:
 
     def _retire(self, slot: int) -> Request:
         req = self.slots[slot]
-        self.allocator.free(req.pages)
-        self.released.extend(req.pages)
-        req.pages = []
+        self._release(req)
         self.slots[slot] = None
         self.active[slot] = False
         self.cur_len[slot] = 0
@@ -306,3 +386,34 @@ class Scheduler:
         self.finished[req.rid] = req
         self.n_retired += 1
         return req
+
+    # -- failure isolation ---------------------------------------------------
+
+    def fail(self, req: Request, reason: str) -> None:
+        """Retire ONE request with an error status instead of raising.
+
+        Works on a request in any state (active slot, pending queue,
+        swapped-out). Its pages are freed, its partial outputs are kept,
+        and the rest of the batch is untouched — a poisoned request never
+        takes the serving loop down. Failed requests count in ``n_failed``,
+        NOT ``n_retired`` (retired means completed cleanly).
+        """
+        req.status = "error"
+        req.error = reason
+        slot = req.slot
+        if slot >= 0 and self.slots[slot] is req:
+            self._release(req)
+            self.slots[slot] = None
+            self.active[slot] = False
+            self.cur_len[slot] = 0
+            self.page_table[slot] = NULL_PAGE
+            req.slot = -1
+        else:
+            try:
+                self.pending.remove(req)
+            except ValueError:
+                pass
+            self._release(req)             # forget any evicted-page state
+        req.swapped = False
+        self.finished[req.rid] = req
+        self.n_failed += 1

@@ -263,6 +263,7 @@ def sharded_paged_decode(
         inner_impl: str = "ref",
         reuse_idx: Optional[jnp.ndarray] = None,   # [S, Hkv, k] carried plan
         do_select: Optional[jnp.ndarray] = None,   # [] bool: fresh vs reuse
+        pt_kv: Optional[jnp.ndarray] = None,       # [S, npt] clamped table
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """One PAGED decode step for ONE layer on a sharded mesh.
 
@@ -296,6 +297,17 @@ def sharded_paged_decode(
     program property and the bitwise paged==paged x sharded contract, at
     the cost of not saving the gate score here (the reuse win on this path
     is accuracy-surface parity with the local paths, not selection FLOPs).
+
+    ``pt_kv`` (RaaS eviction, ISSUE 7): a clamped twin of the page table
+    used ONLY by the block-sparse K/V attention gather. Under eviction the
+    raw table may hold ghost ids (>= pool size, valid in the EXTENDED kg
+    pool only) — selection and the trailing-page append keep reading the
+    raw table (ghost rows shard over heads exactly like physical rows, and
+    the trailing page is pinned resident), while attention reads in-bounds
+    through the clamp; a selected-evicted block is replayed by the engine
+    after restore. Replicated like the table itself, so the
+    zero-collectives property is untouched. None = the raw table
+    (pre-eviction behavior, bitwise unchanged).
     """
     from repro.core import kcache as kc
     from repro.kernels import ops
@@ -331,8 +343,11 @@ def sharded_paged_decode(
     spec_h4 = P(None, MODEL, None, None)
     rep1, rep2 = P(None), P(None, None)
 
-    def local(qg, qgrp, kr_new, v_new, kp, vp, kgp, pt, cl, act, bb, wk,
-              *plan):
+    if pt_kv is None:
+        pt_kv = page_table
+
+    def local(qg, qgrp, kr_new, v_new, kp, vp, kgp, pt, ptk, cl, act, bb,
+              wk, *plan):
         kp, vp, kgp = pg.append_token_paged(
             kp, vp, kgp, kr_new, v_new, pt, cl, act, {"wk": wk}, cfg,
             rope_theta=rope_theta)
@@ -347,18 +362,18 @@ def sharded_paged_decode(
         idx = jnp.where(cap, idx, -1)
         if split_k > 1:
             o = ops.paged_sparse_decode_splitk(
-                qgrp, kp, vp, idx, pt, new_len, block_size=cfg.block_size,
+                qgrp, kp, vp, idx, ptk, new_len, block_size=cfg.block_size,
                 num_splits=split_k, impl=inner_impl)
         else:
-            o = ops.paged_sparse_decode(qgrp, kp, vp, idx, pt, new_len,
+            o = ops.paged_sparse_decode(qgrp, kp, vp, idx, ptk, new_len,
                                         block_size=cfg.block_size,
                                         impl=inner_impl)
         return o, kp, vp, kgp, idx
 
     in_specs = (spec_h3, spec_h4, spec_h3, spec_h3, spec_h4, spec_h4,
-                spec_h3, rep2, rep1, rep1, rep1, P(MODEL, None, None))
+                spec_h3, rep2, rep2, rep1, rep1, rep1, P(MODEL, None, None))
     args = (qg, qgrp, kr_new, v_new, k_pages, v_pages, kg_pages,
-            page_table, cur_len, active, budget_blocks, gate_wk)
+            page_table, pt_kv, cur_len, active, budget_blocks, gate_wk)
     if reuse_idx is not None:
         in_specs = in_specs + (spec_h3, P())
         args = args + (reuse_idx, jnp.asarray(do_select, bool))

@@ -253,6 +253,55 @@ def paged_sharded_schedule_parity():
     print("paged_sharded_schedule_parity OK")
 
 
+def paged_sharded_eviction_parity():
+    """RaaS page eviction on the paged x sharded decode path (ISSUE 7):
+    a half-pool run with eviction on must be BITWISE equal to the ample
+    sharded run — ghost-row gate metadata and the clamped K/V table
+    behave identically when KV heads are sharded over the model axis."""
+    import dataclasses
+    import jax
+    import numpy as np
+    import repro.configs as configs
+    from repro.config import reduced
+    from repro.core.policy import DecodeOptions
+    from repro.distributed import sharding as shd
+    from repro.models.registry import get_api
+    from repro.serve.engine import DecodeEngine
+    from repro.serve.eviction import EvictionConfig
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))   # Hkv=2 over model=2
+    cfg = reduced(configs.get("qwen3_0_6b")).replace(dtype="float32")
+    cfg = cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, token_budget=16))
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    specs = [(40, 25), (38, 24), (41, 22)]
+    reqs = [{"rid": i, "max_new_tokens": mn,
+             "tokens": rng.integers(0, cfg.vocab_size,
+                                    size=(pl,)).astype(np.int32)}
+            for i, (pl, mn) in enumerate(specs)]
+    shard = shd.make_shard_fn(mesh)
+    opts = DecodeOptions(kernel_impl="sharded")
+    with mesh:
+        eng = DecodeEngine(cfg, params, max_len=128, options=opts,
+                           shard=shard)
+        ample = eng.serve([dict(r) for r in reqs], n_slots=3,
+                          collect_logits=True)
+        pool = 1 + (ample["stats"]["peak_pages_used"] + 1) // 2
+        res = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=pool,
+                        collect_logits=True, eviction=EvictionConfig())
+    st = res["stats"]
+    assert st["retired"] == len(reqs) and st["failed"] == 0, st["errors"]
+    assert st["evictions"] > 0, st
+    for r in reqs:
+        rid = r["rid"]
+        assert res[rid] == ample[rid], f"rid {rid} token mismatch"
+        np.testing.assert_array_equal(res["logits"][rid],
+                                      ample["logits"][rid])
+    print("paged_sharded_eviction_parity OK")
+
+
 def moe_sharded_parity():
     import dataclasses
     import jax, jax.numpy as jnp

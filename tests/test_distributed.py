@@ -43,6 +43,12 @@ def test_paged_sharded_parity():
     _run("paged_sharded_parity")
 
 
+def test_paged_sharded_eviction_parity():
+    """ISSUE 7 acceptance: page eviction at ~half pool on the sharded
+    paged engine stays bitwise equal to the ample sharded run."""
+    _run("paged_sharded_eviction_parity")
+
+
 def test_moe_sharded_parity():
     _run("moe_sharded_parity")
 

@@ -1,0 +1,189 @@
+"""RaaS page eviction under memory pressure (ISSUE 7 tentpole).
+
+Acceptance contract: with a pool around HALF the live KV, serve() with
+eviction on must complete every request with tokens AND logits bitwise
+equal to an unconstrained run, while preempting strictly fewer whole
+requests than the eviction-off baseline at the same pool size — pages
+degrade before requests do. The host swap tier must never exceed its
+byte bound (spill-to-disk absorbs the rest).
+
+The selection geometry is steered via the gate token budget: with
+``always_first_block``/``always_last_block`` on, a 2-block budget never
+reads middle blocks (perfectly cold pages — eviction never faults),
+while a wider budget makes scored middle blocks come and go (exercising
+the optimistic-execution fault -> restore -> replay path).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.config import reduced
+from repro.core.metacache import BlockHeat
+from repro.core.policy import DecodeOptions, DensePolicy, QuestPolicy
+from repro.models.registry import get_api
+from repro.serve.engine import DecodeEngine
+from repro.serve.eviction import EvictionConfig
+from repro.serve.offload import SwapConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(token_budget=16, method="budget"):
+    cfg = reduced(configs.get("qwen3_0_6b")).replace(dtype="float32")
+    return cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, token_budget=token_budget,
+        method=method, threshold=2e-2))
+
+
+def _mk_requests(cfg, specs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"rid": i, "max_new_tokens": mn,
+             "tokens": rng.integers(0, cfg.vocab_size,
+                                    size=(pl,)).astype(np.int32)}
+            for i, (pl, mn) in enumerate(specs)]
+
+
+def _engine(cfg, options=None, max_len=128):
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return DecodeEngine(cfg, params, max_len=max_len, options=options)
+
+
+def _assert_bitwise(res_a, res_b, reqs):
+    for r in reqs:
+        rid = r["rid"]
+        assert res_a[rid] == res_b[rid], f"rid {rid} token mismatch"
+        np.testing.assert_array_equal(res_a["logits"][rid],
+                                      res_b["logits"][rid])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: bitwise under ~50% pool, fewer preemptions than baseline
+# ---------------------------------------------------------------------------
+
+def test_eviction_bitwise_at_half_pool_with_fewer_preemptions():
+    cfg = _cfg(token_budget=16)         # first+last only: cold middles
+    eng = _engine(cfg)
+    specs = [(40, 25), (38, 24), (41, 22)]
+    reqs = _mk_requests(cfg, specs)
+    ample = eng.serve([dict(r) for r in reqs], n_slots=3,
+                      collect_logits=True)
+    assert ample["stats"]["preemptions"] == 0
+    # live KV at peak ~= 3 sequences x 9 pages; squeeze to about half
+    pool = 1 + (ample["stats"]["peak_pages_used"] + 1) // 2
+    base = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=pool,
+                     collect_logits=True)
+    assert base["stats"]["retired"] == len(reqs)
+    assert base["stats"]["preemptions"] > 0       # pressure is real
+    res = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=pool,
+                    collect_logits=True, eviction=EvictionConfig())
+    st = res["stats"]
+    assert st["retired"] == len(reqs) and st["failed"] == 0
+    assert st["errors"] == {}
+    assert st["evictions"] > 0
+    # pages degraded before requests did
+    assert st["preemptions"] < base["stats"]["preemptions"]
+    _assert_bitwise(res, ample, reqs)
+
+
+def test_eviction_resident_cap_forces_replay_roundtrip():
+    """A per-request resident cap low enough that SCORED middle blocks
+    keep getting evicted guarantees optimistic-execution faults: the step
+    touches a ghost, the page is restored, the step replays — and the
+    result is still bitwise identical to the unconstrained run."""
+    cfg = _cfg(token_budget=32)         # first+last + scored middles
+    eng = _engine(cfg)
+    specs = [(61, 10)]
+    reqs = _mk_requests(cfg, specs, seed=3)
+    ample = eng.serve([dict(r) for r in reqs], n_slots=1,
+                      collect_logits=True)
+    res = eng.serve([dict(r) for r in reqs], n_slots=1,
+                    collect_logits=True,
+                    eviction=EvictionConfig(max_resident_pages=3))
+    st = res["stats"]
+    assert st["retired"] == 1 and st["failed"] == 0
+    assert st["evictions"] > 0
+    assert st["replay_steps"] > 0 and st["page_restores"] > 0
+    _assert_bitwise(res, ample, reqs)
+
+
+def test_eviction_bounded_host_swap_spills_to_disk(tmp_path):
+    """Pressure run with a host swap tier too small for the evicted
+    pages: LRU entries demote to the disk tier, host_bytes never exceeds
+    the bound, and every restore (promotion) is still bitwise."""
+    cfg = _cfg(token_budget=16)
+    eng = _engine(cfg)
+    specs = [(40, 25), (38, 24), (41, 22)]
+    reqs = _mk_requests(cfg, specs)
+    ample = eng.serve([dict(r) for r in reqs], n_slots=3,
+                      collect_logits=True)
+    pool = 1 + (ample["stats"]["peak_pages_used"] + 1) // 2
+    # probe the unbounded run's peak host footprint, then halve it so the
+    # bounded run MUST demote to disk to keep serving
+    probe = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=pool,
+                      collect_logits=True, eviction=EvictionConfig())
+    assert probe["stats"]["swap"]["peak_host_bytes"] > 0
+    cap = max(1, probe["stats"]["swap"]["peak_host_bytes"] // 2)
+    res = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=pool,
+                    collect_logits=True, eviction=EvictionConfig(),
+                    swap_config=SwapConfig(
+                        host_capacity_bytes=cap,
+                        disk_dir=str(tmp_path / "swap")))
+    st = res["stats"]
+    assert st["retired"] == len(reqs) and st["failed"] == 0
+    assert st["swap"]["peak_host_bytes"] <= cap
+    assert st["swap"]["demotions"] > 0
+    assert st["swap"]["host_entries"] == 0 and st["swap"]["disk_entries"] == 0
+    _assert_bitwise(res, ample, reqs)
+
+
+def test_eviction_quest_metadata_rides_ghost_rows():
+    """QuestPolicy reads per-block min/max metadata through the RAW page
+    table — evicted blocks keep scoring from their ghost rows, so the
+    pressure run stays bitwise."""
+    cfg = _cfg(token_budget=16)
+    eng = _engine(cfg, options=DecodeOptions(policy=QuestPolicy()))
+    specs = [(40, 25), (38, 24), (41, 22)]
+    reqs = _mk_requests(cfg, specs, seed=1)
+    ample = eng.serve([dict(r) for r in reqs], n_slots=3,
+                      collect_logits=True)
+    pool = 1 + (ample["stats"]["peak_pages_used"] + 1) // 2
+    res = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=pool,
+                    collect_logits=True, eviction=EvictionConfig())
+    st = res["stats"]
+    assert st["retired"] == len(reqs) and st["failed"] == 0
+    assert st["evictions"] > 0
+    _assert_bitwise(res, ample, reqs)
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+def test_eviction_rejects_incompatible_modes():
+    cfg = _cfg()
+    eng = _engine(cfg)
+    reqs = _mk_requests(cfg, [(20, 4)])
+    with pytest.raises(ValueError, match="lazy"):
+        eng.serve(reqs, admission="reserve", eviction=EvictionConfig())
+    dense = _engine(cfg, options=DecodeOptions(policy=DensePolicy()))
+    with pytest.raises(ValueError, match="reads_full_kv|SELECTED"):
+        dense.serve(reqs, eviction=EvictionConfig())
+
+
+def test_block_heat_recency_and_mass():
+    h = BlockHeat(2, 4, decay=0.5)
+    touched = np.zeros((2, 4), bool)
+    touched[0, 1] = touched[1, 2] = True
+    active = np.array([True, False])
+    h.observe(touched, active)
+    assert h.ema[0, 1] == 1.0                 # touched & active
+    assert h.ema[1, 2] == 0.0                 # inactive row ignored
+    assert h.last_touch[0, 1] == 1 and h.last_touch[1, 2] == -1
+    h.observe(np.zeros((2, 4), bool), active)
+    assert h.ema[0, 1] == 0.5                 # decayed, untouched
+    h.reset_row(0)
+    assert h.ema[0].sum() == 0 and (h.last_touch[0] == -1).all()

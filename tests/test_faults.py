@@ -1,0 +1,307 @@
+"""Fault-injection harness + failure isolation (ISSUE 7).
+
+Contract under test: after argument validation, ``serve()`` RETURNS —
+never raises — no matter what the injector throws at the alloc / swap /
+disk / logits seams. A request hit by an unrecoverable fault is retired
+with an explicit ``status="error"`` reason and its partial tokens; every
+unaffected request's tokens AND logits stay bitwise identical to a
+fault-free run. Transient faults (fewer consecutive failures than the
+retry budget) are absorbed invisibly, modulo ``retries_used`` telemetry.
+"""
+import numpy as np
+import pytest
+
+import jax
+
+import repro.configs as configs
+import dataclasses
+from repro.config import reduced
+from repro.models.registry import get_api
+from repro.serve.engine import DecodeEngine
+from repro.serve.eviction import EvictionConfig
+from repro.serve.faults import FaultInjector
+from repro.serve.offload import (HostSwapSpace, PageEntry, SwapConfig,
+                                 SwapEntry, SwapIOError, SwapCapacityError,
+                                 SwapLookupError)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(token_budget=32):
+    cfg = reduced(configs.get("qwen3_0_6b")).replace(dtype="float32")
+    return cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, token_budget=token_budget,
+        method="budget", threshold=2e-2))
+
+
+def _mk_requests(cfg, specs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"rid": i, "max_new_tokens": mn,
+             "tokens": rng.integers(0, cfg.vocab_size,
+                                    size=(pl,)).astype(np.int32)}
+            for i, (pl, mn) in enumerate(specs)]
+
+
+def _engine(cfg, max_len=128):
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return DecodeEngine(cfg, params, max_len=max_len)
+
+
+def _entry(seed=0, pages=2):
+    rng = np.random.default_rng(seed)
+    shp = (2, pages, 2, 8, 4)
+    return SwapEntry(k=rng.normal(size=shp).astype(np.float32),
+                     v=rng.normal(size=shp).astype(np.float32),
+                     kg=rng.normal(size=(2, pages, 2, 16)
+                                   ).astype(np.float32),
+                     token=7, cur_len=13)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector
+# ---------------------------------------------------------------------------
+
+def test_fault_injector_plan_and_counters():
+    fi = FaultInjector({"swap_put": [0, 2], "page_alloc": {1}})
+    assert [fi.fire("swap_put") for _ in range(4)] == [True, False, True,
+                                                      False]
+    assert not fi.fire("page_alloc") and fi.fire("page_alloc")
+    st = fi.stats()
+    assert st["calls"]["swap_put"] == 4 and st["fired"]["swap_put"] == 2
+    assert st["fired"]["page_alloc"] == 1
+    assert fi.fire("logits") is False            # unplanned site: clean
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultInjector({"warp_core": [0]})
+    with pytest.raises(ValueError, match="negative"):
+        FaultInjector({"swap_put": [-1]})
+
+
+# ---------------------------------------------------------------------------
+# tiered swap space (satellites: descriptive errors, disk round-trip)
+# ---------------------------------------------------------------------------
+
+def test_swap_lookup_errors_are_descriptive():
+    swap = HostSwapSpace()
+    swap.put(3, _entry())
+    with pytest.raises(SwapLookupError, match=r"no swap entry for key 7"):
+        swap.pop(7)
+    with pytest.raises(KeyError):                # back-compat subclass
+        swap.pop(7)
+    try:
+        swap.pop(("page", 1, 2))
+    except SwapLookupError as e:
+        assert "('page', 1, 2)" in str(e) and "3" in str(e)
+    with pytest.raises(ValueError, match=r"already resident.*3"):
+        swap.put(3, _entry())
+
+
+def test_swap_disk_tier_roundtrip_bitwise(tmp_path):
+    a, b = _entry(seed=1), _entry(seed=2)
+    cap = HostSwapSpace._nbytes(a) + 1           # room for exactly one
+    swap = HostSwapSpace(SwapConfig(host_capacity_bytes=cap,
+                                    disk_dir=str(tmp_path)))
+    swap.put("a", a)
+    swap.put("b", b)                             # demotes "a" to disk
+    st = swap.stats()
+    assert st["demotions"] == 1 and st["disk_entries"] == 1
+    assert st["host_bytes"] <= cap and st["peak_host_bytes"] <= cap
+    pe = PageEntry(k=a.k[:, :1], v=a.v[:, :1], kg=a.kg[:, :1])
+    swap.put(("page", 0, 1), pe)                 # demotes "b" too
+    assert swap.stats()["disk_entries"] == 2
+    got_a = swap.pop("a")                        # disk promotion
+    np.testing.assert_array_equal(got_a.k, a.k)
+    np.testing.assert_array_equal(got_a.v, a.v)
+    np.testing.assert_array_equal(got_a.kg, a.kg)
+    assert got_a.token == a.token and got_a.cur_len == a.cur_len
+    assert got_a.kmin is None
+    got_p = swap.pop(("page", 0, 1))                  # still host-resident
+    assert isinstance(got_p, PageEntry)
+    np.testing.assert_array_equal(got_p.k, pe.k)
+    np.testing.assert_array_equal(swap.pop("b").k, b.k)
+    assert swap.stats()["promotions"] == 2
+    assert len(swap) == 0 and swap.disk_bytes == 0 and swap.host_bytes == 0
+
+
+def test_swap_capacity_errors():
+    e = _entry()
+    swap = HostSwapSpace(SwapConfig(host_capacity_bytes=10))  # no disk tier
+    with pytest.raises(SwapCapacityError, match="no disk tier"):
+        swap.put("x", e)
+    assert "x" not in swap and swap.host_bytes == 0
+
+
+def test_swap_disk_capacity_bound(tmp_path):
+    e = _entry()
+    nb = HostSwapSpace._nbytes(e)
+    swap = HostSwapSpace(SwapConfig(host_capacity_bytes=nb + 1,
+                                    disk_dir=str(tmp_path),
+                                    disk_capacity_bytes=nb + 1))
+    swap.put("a", _entry(seed=1))
+    swap.put("b", _entry(seed=2))                # a -> disk (fits)
+    with pytest.raises(SwapCapacityError, match="disk swap tier full"):
+        swap.put("c", _entry(seed=3))            # b can't demote
+    # the failed insert must not lose "b" (undo on demotion failure)
+    np.testing.assert_array_equal(swap.pop("b").k, _entry(seed=2).k)
+
+
+def test_swap_transient_faults_retried():
+    fi = FaultInjector({"swap_put": [0], "swap_pop": [0]})
+    swap = HostSwapSpace(SwapConfig(retries=2), faults=fi)
+    e = _entry()
+    swap.put("a", e)                             # attempt 0 fails, 1 wins
+    got = swap.pop("a")                          # same for the pop
+    np.testing.assert_array_equal(got.k, e.k)
+    assert swap.retries_used == 2
+
+
+def test_swap_permanent_fault_raises_after_budget():
+    fi = FaultInjector({"swap_put": range(4)})
+    swap = HostSwapSpace(SwapConfig(retries=3), faults=fi)
+    with pytest.raises(SwapIOError, match="after 4 attempts"):
+        swap.put("a", _entry())
+    assert "a" not in swap
+    swap.put("b", _entry())                      # injector spent: clean
+
+
+def test_swap_transient_disk_fault_retried(tmp_path):
+    fi = FaultInjector({"disk_write": [0], "disk_read": [0]})
+    e = _entry()
+    # host cap smaller than the entry: put/pop must take the disk path
+    swap = HostSwapSpace(SwapConfig(host_capacity_bytes=10,
+                                    disk_dir=str(tmp_path), retries=1),
+                         faults=fi)
+    swap.put("a", e)                             # disk write retried once
+    got = swap.pop("a")                          # disk read retried once
+    np.testing.assert_array_equal(got.v, e.v)
+    assert swap.retries_used == 2
+
+
+# ---------------------------------------------------------------------------
+# serve() under injected faults: never raises, unaffected rows bitwise
+# ---------------------------------------------------------------------------
+
+def _clean_run(eng, reqs, **kw):
+    return eng.serve([dict(r) for r in reqs], collect_logits=True, **kw)
+
+
+def _assert_unaffected_bitwise(res, clean, reqs):
+    for r in reqs:
+        rid = r["rid"]
+        if rid in res["stats"]["errors"]:
+            continue
+        assert res[rid] == clean[rid], f"rid {rid} tokens drifted"
+        np.testing.assert_array_equal(res["logits"][rid],
+                                      clean["logits"][rid])
+
+
+def test_serve_survives_alloc_faults_bitwise():
+    """Injected allocator failures degrade to stalls/preemptions — both
+    bitwise-preserving — so every request still completes EXACTLY."""
+    cfg = _cfg()
+    eng = _engine(cfg)
+    reqs = _mk_requests(cfg, [(20, 8), (18, 7), (22, 6)])
+    clean = _clean_run(eng, reqs, n_slots=2)
+    res = eng.serve([dict(r) for r in reqs], n_slots=2, collect_logits=True,
+                    faults=FaultInjector({"page_alloc": [1, 4, 6]}))
+    st = res["stats"]
+    assert st["retired"] == 3 and st["failed"] == 0
+    assert st["faults"]["fired"]["page_alloc"] == 3
+    _assert_unaffected_bitwise(res, clean, reqs)
+
+
+def test_serve_swap_put_permanent_fault_isolates_victim():
+    """A victim whose preemption capture permanently fails is retired
+    with an error; everyone else finishes bitwise-unchanged."""
+    cfg = _cfg(token_budget=16)
+    eng = _engine(cfg)
+    reqs = _mk_requests(cfg, [(40, 25), (38, 24), (41, 22)])
+    clean = _clean_run(eng, reqs, n_slots=3)
+    # squeeze the pool to ~half the live KV: genuine preemption pressure
+    pool = 1 + (clean["stats"]["peak_pages_used"] + 1) // 2
+    res = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=pool,
+                    collect_logits=True,
+                    faults=FaultInjector({"swap_put": range(4)}))
+    st = res["stats"]
+    assert st["failed"] == 1
+    assert list(st["errors"].values()) == ["swap_put_failed"]
+    assert st["retired"] == 2
+    (vid,) = st["errors"]
+    assert len(res[vid]) < dict((r["rid"], r["max_new_tokens"])
+                                for r in reqs)[vid]   # partial results
+    _assert_unaffected_bitwise(res, clean, reqs)
+
+
+def test_serve_injected_nonfinite_logits_isolates_request():
+    cfg = _cfg()
+    eng = _engine(cfg)
+    reqs = _mk_requests(cfg, [(20, 8), (18, 7)])
+    clean = _clean_run(eng, reqs, n_slots=2)
+    res = eng.serve([dict(r) for r in reqs], n_slots=2, collect_logits=True,
+                    faults=FaultInjector({"logits": [1]}))
+    st = res["stats"]
+    assert st["failed"] == 1 and st["retired"] == 1
+    ((vid, reason),) = st["errors"].items()
+    assert reason == "non_finite_logits"
+    assert 0 < len(res[vid]) < dict((r["rid"], r["max_new_tokens"])
+                                    for r in reqs)[vid]
+    _assert_unaffected_bitwise(res, clean, reqs)
+
+
+def test_serve_restore_fault_fails_request_not_batch():
+    """Permanent swap_pop failure during an eviction replay restore: the
+    faulted request retires with restore_failed, serve() returns."""
+    cfg = _cfg(token_budget=32)
+    eng = _engine(cfg)
+    reqs = _mk_requests(cfg, [(61, 10)], seed=3)
+    res = eng.serve([dict(r) for r in reqs], n_slots=1, collect_logits=True,
+                    eviction=EvictionConfig(max_resident_pages=3),
+                    faults=FaultInjector({"swap_pop": range(4)}))
+    st = res["stats"]
+    assert st["failed"] == 1 and st["retired"] == 0
+    assert list(st["errors"].values()) == ["restore_failed"]
+    assert len(res[0]) >= 1                      # partial tokens returned
+
+
+def test_serve_step_limit_returns_partials():
+    cfg = _cfg()
+    eng = _engine(cfg)
+    reqs = _mk_requests(cfg, [(12, 10), (14, 9)])
+    res = eng.serve([dict(r) for r in reqs], n_slots=2, max_steps=3)
+    st = res["stats"]
+    assert st["failed"] == 2 and st["retired"] == 0
+    assert set(st["errors"].values()) == {"step_limit"}
+    for r in reqs:
+        assert 0 < len(res[r["rid"]]) < r["max_new_tokens"]
+
+
+def test_serve_admission_stall_watchdog_fails_head_of_line():
+    cfg = _cfg()
+    eng = _engine(cfg)
+    reqs = _mk_requests(cfg, [(12, 4)])
+    res = eng.serve(reqs, n_slots=1,
+                    faults=FaultInjector({"page_alloc": range(64)}))
+    st = res["stats"]
+    assert st["failed"] == 1 and st["errors"] == {0: "admission_stall"}
+    assert res[0] == []                          # never admitted
+
+
+def test_serve_fault_storm_always_returns():
+    """Sweep fault plans across every site; serve() must always return
+    with retired + failed == len(requests)."""
+    cfg = _cfg()
+    eng = _engine(cfg)
+    reqs = _mk_requests(cfg, [(20, 8), (18, 7), (22, 6)])
+    plans = [
+        {"page_alloc": range(0, 40, 2)},
+        {"page_alloc": [2], "swap_put": range(8)},
+        {"swap_put": [0], "swap_pop": [0], "page_alloc": [2, 3]},
+        {"logits": [0, 2, 4]},
+    ]
+    for plan in plans:
+        res = eng.serve([dict(r) for r in reqs], n_slots=2,
+                        faults=FaultInjector(plan))
+        st = res["stats"]
+        assert st["retired"] + st["failed"] == len(reqs), plan
+        for r in reqs:
+            assert r["rid"] in res, plan

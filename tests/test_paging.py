@@ -104,12 +104,24 @@ def test_scheduler_lazy_admission_and_watermark():
                       max_new_tokens=7))
     (b,) = lz.admissions()
     assert len(b.pages) == 3
-    # watermark: 5 usable pages, watermark 3 -> a 3-page prompt must wait
+    # watermark: 5 usable pages, watermark 3 -> a 3-page prompt can NEVER
+    # be admitted (only pool - watermark = 2 can ever be free for
+    # admission); submit fails fast instead of head-of-line-blocking the
+    # queue forever (ISSUE 7 satellite)
     wm = Scheduler(n_slots=2, num_pages=6, page_size=4,
                    max_pages_per_seq=4, admission="lazy", watermark=3)
-    wm.submit(Request(rid=1, prompt=np.zeros(10, np.int32),
+    with pytest.raises(ValueError, match="head-of-line"):
+        wm.submit(Request(rid=1, prompt=np.zeros(10, np.int32),
+                          max_new_tokens=2))
+    # a prompt that FITS under the watermark but finds the pool busy
+    # still waits (transient stall, counted in telemetry)
+    wm.submit(Request(rid=2, prompt=np.zeros(8, np.int32),
                       max_new_tokens=2))
-    assert wm.admissions() == []
+    (a2,) = wm.admissions()
+    assert len(a2.pages) == 2
+    wm.submit(Request(rid=3, prompt=np.zeros(8, np.int32),
+                      max_new_tokens=2))
+    assert wm.admissions() == []              # 3 free - 2 < watermark 3
     assert wm.admission_stalls == 1
 
 
