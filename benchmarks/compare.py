@@ -7,10 +7,14 @@ be a comment in the CI workflow ("a reintroduced cache-sized copy shows up
 as a step-latency jump"), promoted to enforcement.
 
 Gated metrics: every ``*_step_ms`` key in the gated sections (default:
-``decode`` and ``policies``). Throughput/sparsity/count keys are reported
-for context but never gate — CPU CI wall-clock is noisy, per-step latency
-at fixed workload is the stable signal, and the 1.5x default threshold
-sits far above observed runner jitter while still catching a structural
+``decode`` and ``policies``), plus — ISSUE 8 — the traffic section's
+per-tier ``*_tpot_p50_ms`` latency keys (median time-per-output-token
+through the streaming frontend; best-of-3 like step_ms, and p50 rather
+than p99 because tail wall-clock on shared CI runners is jitter, not
+signal). Throughput/sparsity/count keys are reported for context but
+never gate — CPU CI wall-clock is noisy, per-step latency at fixed
+workload is the stable signal, and the 1.5x default threshold sits far
+above observed runner jitter while still catching a structural
 regression (an extra cache-sized copy is >2x at these sizes).
 
 Exit codes: 0 pass, 1 regression, 2 unusable inputs (missing file /
@@ -35,7 +39,8 @@ import json
 import sys
 from typing import Dict, List, Tuple
 
-GATE_SUFFIX = "_step_ms"
+GATE_SUFFIXES = ("_step_ms", "_tpot_p50_ms")
+GATE_SUFFIX = GATE_SUFFIXES[0]           # kept: pinned by older callers
 
 
 def load(path: str) -> Dict:
@@ -60,7 +65,7 @@ def gate(baseline: Dict, fresh: Dict, *, sections: List[str],
         base_sec = baseline["sections"].get(sec, {})
         fresh_sec = fresh["sections"].get(sec, {})
         for key in sorted(fresh_sec):
-            if not key.endswith(GATE_SUFFIX):
+            if not key.endswith(GATE_SUFFIXES):
                 continue
             new = fresh_sec[key]
             old = base_sec.get(key)

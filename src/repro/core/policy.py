@@ -42,8 +42,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import (Any, Dict, NamedTuple, Optional, Protocol, Tuple,
-                    runtime_checkable)
+from typing import (Any, Dict, NamedTuple, Optional, Protocol, Sequence,
+                    Tuple, runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -685,3 +685,107 @@ def default_options(cfg: ModelConfig) -> DecodeOptions:
 
 
 DENSE_OPTIONS = DecodeOptions(policy=DensePolicy())
+
+
+# -- SLO tiers (ISSUE 8) -----------------------------------------------------
+#
+# A tenant tier maps onto the serving engine's RUNTIME-MASKABLE knobs only
+# — per-request token budget (a per-slot mask over the selected-block
+# list), per-request SamplingParams (host-side sampler), per-request
+# reserve admission, and scheduler priority. None of these touch the
+# jitted step's static arguments, so EVERY tier shares one compiled
+# program per serve() call: the tier -> options mapping is jit-static by
+# construction. Anything that WOULD recompile (policy class, kernel impl,
+# schedule) deliberately has no per-tier field.
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """One tenant tier's serving contract.
+
+    priority:  admission order (higher first; FIFO within a tier) AND
+               preemption/eviction protection (victims are picked lowest
+               priority first — a latency-tier request is never preempted
+               or page-evicted while a throughput-tier victim exists).
+    admission: "reserve" pins the request's full-lifetime page budget at
+               admission (it can never stall mid-decode; the latency
+               contract), "lazy" admits on current occupancy and grows
+               on demand (the throughput contract — more concurrency,
+               preemptible).
+    budget:    per-request token budget override (runtime mask; None =
+               the engine options' budget). Latency tiers typically run
+               dense-ish (large budget), throughput tiers aggressively
+               sparse (small budget).
+    sampling:  per-request SamplingParams (None = engine default).
+    """
+    name: str = "default"
+    priority: int = 0
+    admission: str = "lazy"
+    budget: Optional[int] = None
+    sampling: Optional[SamplingParams] = None
+
+    def __post_init__(self):
+        if self.admission not in ("lazy", "reserve"):
+            raise ValueError(f"tier {self.name!r}: admission "
+                             f"{self.admission!r} not in ('lazy', 'reserve')")
+        if self.budget is not None and self.budget <= 0:
+            raise ValueError(f"tier {self.name!r}: budget must be positive: "
+                             f"{self.budget}")
+
+    def request_fields(self) -> dict:
+        """The per-request dict fields the serving engine understands —
+        merge into a request dict to place it in this tier."""
+        out = {"tier": self.name, "priority": self.priority,
+               "reserve": self.admission == "reserve"}
+        if self.budget is not None:
+            out["budget"] = self.budget
+        if self.sampling is not None:
+            out["sampling"] = self.sampling
+        return out
+
+
+class TierPolicy:
+    """tier name -> TierSpec registry with a default fallback.
+
+    ``apply(request_dict, tier)`` returns a NEW request dict carrying the
+    tier's engine fields; explicit per-request overrides in the input
+    dict win over the tier (a caller can still hand-tune one request).
+    """
+
+    def __init__(self, tiers: Sequence[TierSpec] = (),
+                 default: Optional[TierSpec] = None):
+        self.default = default if default is not None else TierSpec()
+        self.tiers: Dict[str, TierSpec] = {t.name: t for t in tiers}
+        if len(self.tiers) != len(tiers):
+            names = [t.name for t in tiers]
+            raise ValueError(f"duplicate tier names: {sorted(names)}")
+
+    def get(self, name: Optional[str]) -> TierSpec:
+        if name is None:
+            return self.default
+        try:
+            return self.tiers[name]
+        except KeyError:
+            raise ValueError(f"unknown tier {name!r}; have "
+                             f"{sorted(self.tiers)}") from None
+
+    def apply(self, request: dict, tier: Optional[str] = None) -> dict:
+        spec = self.get(tier if tier is not None else request.get("tier"))
+        merged = dict(spec.request_fields())
+        merged.update({k: v for k, v in request.items() if k != "tier"})
+        merged["tier"] = spec.name
+        return merged
+
+
+def default_tiers(cfg: ModelConfig) -> TierPolicy:
+    """The two-tier split the paper's serving story implies: a
+    latency-critical tier (reserved pages, priority, near-dense budget)
+    and a best-effort throughput tier (lazy admission, preemptible,
+    aggressive sparsity). Budgets scale with the config's token budget so
+    the tiers stay meaningful across reduced test configs."""
+    base = max(cfg.gate.token_budget, cfg.gate.block_size)
+    return TierPolicy(tiers=(
+        TierSpec(name="latency", priority=10, admission="reserve",
+                 budget=4 * base),
+        TierSpec(name="throughput", priority=0, admission="lazy",
+                 budget=base),
+    ), default=TierSpec())

@@ -149,16 +149,35 @@ class DecodeEngine:
               watermark: int = 0,
               eviction: Optional[EvictionConfig] = None,
               swap_config: Optional[SwapConfig] = None,
-              faults=None) -> ServeResult:
+              faults=None, arrivals=None, on_token=None,
+              table_pages: Optional[int] = None) -> ServeResult:
         """Continuous-batching decode over a paged KV cache.
 
         requests: each ``{"tokens": 1-D int array, "max_new_tokens": int}``
         plus optional per-request overrides — ``"rid"`` (id), ``"sampling"``
-        (SamplingParams replacing ``options.sampling`` for that request)
-        and ``"budget"`` (token budget, applied as a runtime per-slot mask
+        (SamplingParams replacing ``options.sampling`` for that request),
+        ``"budget"`` (token budget, applied as a runtime per-slot mask
         over the selected-block list; floored so the force-selected
         first/last blocks survive, and a cap beyond the compiled selection
-        width is naturally a no-op). Admission is FIFO.
+        width is naturally a no-op), ``"tier"``/``"priority"``/``"reserve"``
+        (SLO-tier fields, ISSUE 8: priority orders admission and protects
+        against preemption; reserve=True gives THIS request the upfront
+        full-lifetime page reservation under a lazy scheduler). Admission
+        is priority-then-FIFO (plain FIFO when every priority is 0).
+
+        Open-loop traffic (ISSUE 8): ``arrivals`` is an object with
+        ``pull(step) -> list of request dicts`` and an ``exhausted``
+        property (see serve.traffic.StepArrivals) — requests join the
+        running batch mid-decode at their arrival step on the VIRTUAL
+        clock (decode-loop iterations), so a fixed trace replays to
+        bitwise-identical token streams. With ``arrivals``, ``requests``
+        may be empty, and ``max_steps`` + ``table_pages`` (page-table
+        width, >= any arriving request's lifetime pages) are REQUIRED —
+        the engine cannot size them from an arrival process it has not
+        drained. ``on_token(req, token, index, step)`` streams every
+        generated token (prefill first token included) exactly once, in
+        order, the moment it is appended — preempt/resume does not
+        re-fire; ``step`` is the virtual clock it was produced at.
 
         ``admission`` picks the page-allocation policy (ISSUE 4):
         ``"lazy"`` (default) admits on CURRENT occupancy (prompt pages
@@ -207,11 +226,51 @@ class DecodeEngine:
             raise NotImplementedError(
                 f"family {cfg.family}: no paged decode path")
         ps = cfg.gate.block_size
-        reqs = [Request(rid=r.get("rid", i),
-                        prompt=np.asarray(r["tokens"], np.int32).reshape(-1),
-                        max_new_tokens=int(r["max_new_tokens"]))
-                for i, r in enumerate(requests)]
-        if not reqs:
+        if arrivals is not None:
+            if max_steps is None:
+                raise ValueError(
+                    "arrivals requires an explicit max_steps — the engine "
+                    "cannot bound the run from an undrained arrival process")
+            if table_pages is None:
+                raise ValueError(
+                    "arrivals requires table_pages (page-table width >= any "
+                    "arriving request's lifetime pages) — the engine cannot "
+                    "size the table from an undrained arrival process")
+
+        reqs: list = []
+        sampling_of: Dict[Any, Any] = {}
+        budget_of: Dict[Any, Any] = {}
+        ridx_of: Dict[Any, int] = {}
+        rho_sum: Dict[Any, float] = {}
+        sel_sum: Dict[Any, float] = {}
+        rho_n: Dict[Any, int] = {}
+        rejected_arrivals = 0
+
+        def register(rd: Dict[str, Any]) -> Request:
+            """One request dict -> a tracked Request. ALL per-request
+            bookkeeping (sampling/budget overrides, the fold_in index that
+            keys the stochastic sampling chain, sparsity accumulators) is
+            created here, so upfront and mid-decode arrivals share one
+            path; registration ORDER fixes the sampling keys, which is
+            deterministic for a fixed request list + trace."""
+            req = Request(
+                rid=rd.get("rid", len(reqs)),
+                prompt=np.asarray(rd["tokens"], np.int32).reshape(-1),
+                max_new_tokens=int(rd["max_new_tokens"]),
+                tier=str(rd.get("tier", "default")),
+                priority=int(rd.get("priority", 0)),
+                admit_reserve=bool(rd.get("reserve", False)))
+            reqs.append(req)
+            sampling_of[req.rid] = rd.get("sampling") or self.options.sampling
+            budget_of[req.rid] = rd.get("budget")
+            ridx_of[req.rid] = len(ridx_of)
+            rho_sum[req.rid] = sel_sum[req.rid] = 0.0
+            rho_n[req.rid] = 0
+            return req
+
+        for rd in requests:
+            register(rd)
+        if not reqs and arrivals is None:
             return ServeResult(stats={})
         rids = [r.rid for r in reqs]
         if len(set(rids)) != len(rids):
@@ -220,11 +279,6 @@ class DecodeEngine:
         if clash:
             raise ValueError(f"request ids collide with reserved result "
                              f"keys: {clash}")
-        sampling_of = {r.rid: requests[i].get("sampling")
-                       or self.options.sampling for i, r in enumerate(reqs)}
-        budget_of = {r.rid: requests[i].get("budget")
-                     for i, r in enumerate(reqs)}
-        ridx_of = {r.rid: i for i, r in enumerate(reqs)}
         base_key = jax.random.PRNGKey(sample_seed)
         self._last_aux = self._last_active = None   # stats reflect THIS run
 
@@ -240,8 +294,9 @@ class DecodeEngine:
             # (reads_full_kv, dense-staged layers — see DecodeOptions)
             eviction_options = self.options.replace(track_evictions=True)
 
-        npt = max(pages_needed(r.prompt_len, r.max_new_tokens, ps)
-                  for r in reqs)
+        npt = max([pages_needed(r.prompt_len, r.max_new_tokens, ps)
+                   for r in reqs]
+                  + ([int(table_pages)] if table_pages is not None else []))
         if num_pages is None:
             # enough for every slot to hold a worst-case sequence (+null)
             num_pages = n_slots * npt + 1
@@ -249,6 +304,7 @@ class DecodeEngine:
                           admission=admission, watermark=watermark,
                           eviction_enabled=eviction is not None,
                           faults=faults)
+        sched.on_token = on_token
         swap = HostSwapSpace(config=swap_config, faults=faults)
         for r in reqs:
             sched.submit(r)
@@ -262,7 +318,11 @@ class DecodeEngine:
         # DecodeOptions.max_selected) and are floored so the force-selected
         # first/last blocks (which rank ahead of every scored block by
         # construction) survive.
-        use_budget = any(b is not None for b in budget_of.values())
+        # with open-loop arrivals the mask must exist up front: whether a
+        # LATER arrival carries a budget override cannot retroactively
+        # change the compiled step's signature mid-run
+        use_budget = (arrivals is not None
+                      or any(b is not None for b in budget_of.values()))
         no_cap = np.int32(2 ** 30)
         floor = max(1, int(cfg.gate.always_first_block)
                     + int(cfg.gate.always_last_block))
@@ -334,9 +394,6 @@ class DecodeEngine:
                 config=eviction)
 
         token_buf = np.zeros((n_slots,), np.int32)
-        rho_sum: Dict[Any, float] = {r.rid: 0.0 for r in reqs}
-        sel_sum: Dict[Any, float] = {r.rid: 0.0 for r in reqs}
-        rho_n: Dict[Any, int] = {r.rid: 0 for r in reqs}
         active_sum = active_max = idle_spins = 0
         n_steps = 0
         t0 = time.perf_counter()
@@ -469,7 +526,27 @@ class DecodeEngine:
                 if r.rid not in sched.finished:
                     fail_req(r, reason)
 
-        while sched.has_work():
+        while sched.has_work() or (arrivals is not None
+                                   and not arrivals.exhausted):
+            # the scheduler's virtual clock: lifecycle ``*_step`` stamps
+            # and the arrival schedule both read the decode-loop iteration
+            # counter, never wall time — fixed trace => fixed schedule
+            sched.now = n_steps
+            if arrivals is not None:
+                for rd in arrivals.pull(n_steps):
+                    rid = rd.get("rid", len(reqs))
+                    if rid in ridx_of or rid in ("stats", "logits"):
+                        # malformed trace entry: drop it (never-raises —
+                        # the already-running batch must not pay for it)
+                        rejected_arrivals += 1
+                        continue
+                    req = register(rd)
+                    try:
+                        sched.submit(req)
+                    except ValueError as e:
+                        # an arriving request the pool/table can never hold
+                        # fails ALONE with the reason, mid-run
+                        sched.fail(req, f"submit_rejected: {e}")
             for req in sched.admissions():
                 if req.swapped:            # resume: restore, don't prefill
                     try:
@@ -493,6 +570,7 @@ class DecodeEngine:
                     pages, lg = self._paged_prefill(pages, req, ps)
                     first = sample_slot(req, lg)
                     req.out_tokens.append(first)
+                    sched.note_token(req, first)   # TTFT stamp + stream
                     if collect_logits:
                         req.out_logits.append(lg)
                     token_buf[req.slot] = first
@@ -508,6 +586,15 @@ class DecodeEngine:
             sweep_dirty([p for p in fresh if p in dirty])
             if not sched.active.any():
                 if not sched.pending:
+                    if arrivals is not None and not arrivals.exhausted:
+                        # open-loop gap: nothing to decode yet but the
+                        # trace has more arrivals — tick the virtual clock
+                        # forward so they come due (bounded by max_steps)
+                        n_steps += 1
+                        if n_steps > limit:
+                            fail_unfinished("step_limit")
+                            break
+                        continue
                     break
                 # preemption may have just vacated every slot while freeing
                 # its pages — loop back through admissions once before
@@ -515,11 +602,13 @@ class DecodeEngine:
                 idle_spins += 1
                 if idle_spins > 1:
                     # no-progress watchdog: admission is stuck (e.g. the
-                    # allocator keeps faulting). Fail the head-of-line
-                    # request — each firing unblocks the queue by one, so
+                    # allocator keeps faulting). Fail the request admission
+                    # keeps choosing (highest priority, FIFO within the
+                    # class) — each firing unblocks the queue by one, so
                     # the loop always terminates — instead of raising away
                     # everyone's partial results.
-                    fail_req(sched.pending[0], "admission_stall")
+                    fail_req(max(sched.pending, key=lambda r: r.priority),
+                             "admission_stall")
                     idle_spins = 0
                 continue
             idle_spins = 0
@@ -693,6 +782,19 @@ class DecodeEngine:
                                 for rid in rho_sum if rho_n[rid]},
             "sel_blocks_by_rid": {rid: sel_sum[rid] / rho_n[rid]
                                   for rid in sel_sum if rho_n[rid]},
+            # ISSUE 8: per-request lifecycle (``*_step`` on the virtual
+            # clock — deterministic TTFT/TPOT proxies; ``t_*`` wall-clock
+            # seconds, -1.0 where the stage was never reached)
+            "timing_by_rid": {r.rid: {
+                "submit_step": r.submit_step,
+                "admit_step": r.admit_step,
+                "first_token_step": r.first_token_step,
+                "retire_step": r.retire_step,
+                "t_submit": r.t_submit, "t_admit": r.t_admit,
+                "t_first": r.t_first, "t_retire": r.t_retire,
+                "n_tokens": len(r.out_tokens)} for r in reqs},
+            "tier_by_rid": {r.rid: r.tier for r in reqs},
+            "rejected_arrivals": rejected_arrivals,
         }
         return out
 

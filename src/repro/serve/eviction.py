@@ -139,10 +139,13 @@ class EvictionManager:
     def pick_victims(self, n: int, pinned: Set[Tuple[int, int]] = frozenset(),
                      only: Optional[Request] = None
                      ) -> List[Tuple[Request, int]]:
-        """Coldest-first by score = EMA mass x restore cost; ties break
+        """Lowest tier priority first (ISSUE 8: a latency-tier request
+        never loses pages while a throughput-tier page is evictable),
+        then coldest by score = EMA mass x restore cost; ties break
         (EMA, last_touch, slot, lb) ascending — fully deterministic."""
         cands = self._eligible(pinned, only)
         cands.sort(key=lambda t: (
+            t[1].priority,
             float(self.heat.ema[t[0], t[2]]) * self.restore_cost_s,
             float(self.heat.ema[t[0], t[2]]),
             int(self.heat.last_touch[t[0], t[2]]), t[0], t[2]))

@@ -38,6 +38,7 @@ their SHAPES are fixed by (n_slots, max_pages_per_seq).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Callable, Deque, Dict, List, Optional
 
@@ -48,11 +49,31 @@ from repro.serve.paging import NULL_PAGE, PageAllocator
 ADMISSION_MODES = ("lazy", "reserve")
 
 
+def rid_sort_key(rid):
+    """Total deterministic order over request ids: ints sort numerically
+    among themselves, everything else by its string form — so victim
+    tie-breaking (ISSUE 8 satellite) never depends on dict/slot/insertion
+    order and never TypeErrors on mixed-type rids."""
+    if isinstance(rid, int):
+        return (0, rid, "")
+    return (1, 0, str(rid))
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray               # [prompt_len] int32
     max_new_tokens: int
+    # SLO tier (ISSUE 8): ``priority`` orders admission (highest first;
+    # FIFO within a class) and INVERSELY orders preemption/eviction victim
+    # selection (lowest first — a latency-tier request is never preempted
+    # while a throughput-tier victim exists). ``admit_reserve`` gives this
+    # request the upfront full-lifetime page reservation (the "reserve"
+    # admission policy) even under a lazy scheduler: it can never stall
+    # mid-decode on page growth. ``tier`` is a label for telemetry only.
+    tier: str = "default"
+    priority: int = 0
+    admit_reserve: bool = False
     # filled in by the scheduler / engine
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     out_logits: List[np.ndarray] = dataclasses.field(default_factory=list)
@@ -69,6 +90,20 @@ class Request:
     # ``error``; its partial out_tokens still reach the caller
     status: str = "ok"
     error: Optional[str] = None
+    # lifecycle timestamps (ISSUE 8): ``*_step`` fields count decode-loop
+    # iterations (the scheduler's ``now`` clock — deterministic for a
+    # fixed trace), ``t_*`` fields are wall-clock seconds
+    # (``Scheduler.wall``). admit/first stamp only on the FIRST admission;
+    # preempt -> resume does not reset them (TTFT is to the first token
+    # the client saw).
+    submit_step: int = -1
+    admit_step: int = -1
+    first_token_step: int = -1
+    retire_step: int = -1
+    t_submit: float = -1.0
+    t_admit: float = -1.0
+    t_first: float = -1.0
+    t_retire: float = -1.0
 
     @property
     def prompt_len(self) -> int:
@@ -118,6 +153,18 @@ class Scheduler:
         self.evict_cb: Optional[Callable[[int], int]] = None
         self.release_filter: Optional[Callable[[Request], List[int]]] = None
         self.faults = faults
+        # ISSUE 8 seams, wired by the engine:
+        #   now — the decode-loop step counter (virtual clock); lifecycle
+        #     ``*_step`` stamps read it, so they are deterministic for a
+        #     fixed trace. The engine sets it each iteration.
+        #   wall — wall-clock source for the ``t_*`` stamps (monkeypatchable
+        #     in tests); NEVER feeds control flow, only latency stats.
+        #   on_token(req, token, index, step) — streaming callback fired
+        #     by ``note_token`` exactly once per appended token, in order.
+        self.now = 0
+        self.wall: Callable[[], float] = time.perf_counter
+        self.on_token: Optional[Callable[[Request, int, int, int],
+                                         None]] = None
         self.allocator = PageAllocator(num_pages)
         self.page_table = np.full((n_slots, max_pages_per_seq), NULL_PAGE,
                                   np.int32)
@@ -162,7 +209,7 @@ class Scheduler:
                 f"request {req.rid} needs {need} pages > table width "
                 f"{self.max_pages_per_seq}")
         pool = self.allocator.num_pages - 1       # page 0 is the NULL page
-        if self.admission == "lazy":
+        if self.admission == "lazy" and not req.admit_reserve:
             # lazy admission only reserves the pages held RIGHT NOW, but it
             # also holds ``watermark`` pages back as growth headroom — a
             # request whose admission need exceeds (pool - watermark) can
@@ -177,12 +224,17 @@ class Scheduler:
                     f"{self.watermark}) — it would head-of-line-block the "
                     f"queue forever")
         if need > pool and not (self.admission == "lazy"
-                                and self.eviction_enabled):
+                                and self.eviction_enabled
+                                and not req.admit_reserve):
             # with page eviction on, growth past the pool is absorbed by
-            # evicting cold pages, so only the admission need must fit
+            # evicting cold pages, so only the admission need must fit —
+            # unless the request demands the full upfront reservation
+            # (admit_reserve), whose admission need IS the lifetime need
             raise ValueError(
                 f"request {req.rid} needs {need} pages but the pool only has "
                 f"{pool} — it can never be admitted")
+        req.submit_step = self.now
+        req.t_submit = self.wall()
         self.pending.append(req)
 
     def has_work(self) -> bool:
@@ -191,20 +243,29 @@ class Scheduler:
     # -- admission ----------------------------------------------------------
 
     def _admission_need(self, req: Request) -> int:
-        if self.admission == "reserve":
+        if self.admission == "reserve" or req.admit_reserve:
+            # per-request reserve (ISSUE 8 latency tier): the upfront
+            # full-lifetime reservation even under a lazy scheduler — on a
+            # resume the final length is unchanged, so the lifetime need
+            # still covers the swapped content plus remaining growth
             return pages_needed(req.prompt_len, req.max_new_tokens,
                                 self.page_size)
         return req.pages_held(self.page_size)
 
     def admissions(self) -> List[Request]:
-        """Admit pending requests FIFO into free slots while pages last.
+        """Admit pending requests into free slots while pages last.
 
-        FIFO with head-of-line blocking: a stuck large request is not
-        overtaken by smaller ones (latency fairness, deterministic tests).
-        Returned requests with ``swapped=True`` are RESUMES — the engine
-        must restore their page contents instead of prefilling. In lazy
-        mode admission additionally keeps ``watermark`` pages free as
-        growth headroom for already-running requests.
+        Admission order is PRIORITY, then FIFO within a priority class
+        (``max`` over a deque returns the leftmost maximal element, so all
+        same-priority traffic keeps the PR-4 FIFO semantics bit-for-bit,
+        including preempted requests resuming from the queue front).
+        Head-of-line blocking applies to the chosen request: a stuck
+        high-priority request is not overtaken by lower tiers (latency
+        fairness, deterministic tests). Returned requests with
+        ``swapped=True`` are RESUMES — the engine must restore their page
+        contents instead of prefilling. In lazy mode admission
+        additionally keeps ``watermark`` pages free as growth headroom
+        for already-running requests.
         """
         out: List[Request] = []
         while self.pending:
@@ -212,22 +273,25 @@ class Scheduler:
                          if self.slots[i] is None), -1)
             if slot < 0:
                 break
-            req = self.pending[0]
+            req = max(self.pending, key=lambda r: r.priority)
             need = self._admission_need(req)
             # the watermark is growth headroom for RUNNING requests; a
             # swap-in resume is itself the continuation of a running
             # request, so it is exempt — otherwise a victim whose content
             # pages exceed (pool - watermark) could never be re-admitted
-            # even with the pool fully free (permanent stall)
+            # even with the pool fully free (permanent stall). A reserved
+            # request is exempt too: its admission need already covers its
+            # whole lifetime, so it contributes no growth to headroom for.
             headroom = (self.watermark
                         if self.admission == "lazy" and not req.swapped
+                        and not req.admit_reserve
                         else 0)
             ids = (self._alloc(need)
                    if self.allocator.num_free - need >= headroom else None)
             if ids is None:
                 self.admission_stalls += 1
                 break
-            self.pending.popleft()
+            self.pending.remove(req)
             req.slot, req.pages = slot, ids
             self.slots[slot] = req
             self.page_table[slot] = NULL_PAGE
@@ -239,6 +303,9 @@ class Scheduler:
                 self.n_resumed += 1
             else:
                 self.n_admitted += 1
+            if req.admit_step < 0:       # first admission only, not resumes
+                req.admit_step = self.now
+                req.t_admit = self.wall()
             out.append(req)
         return out
 
@@ -291,8 +358,13 @@ class Scheduler:
 
     def _pick_victim(self, exclude: Optional[Request] = None
                      ) -> Optional[Request]:
-        """Fewest-generated-tokens victim (least progress lost per page
-        freed); ties break to the LOWEST slot for determinism.
+        """Lowest-priority victim first (never preempt a latency-tier
+        request while a throughput-tier victim exists — ISSUE 8), then
+        fewest generated tokens (least progress lost per page freed), then
+        LOWEST rid. The rid tie-break makes victim selection a pure
+        function of request identity — PR-7 broke ties by slot index,
+        which depends on admission order and hence on dict/insertion
+        history (nondeterministic under trace replay).
 
         Under eviction the admission bound is relaxed, so a long request's
         resume need (ceil(content / page_size)) may exceed the pool — such
@@ -301,6 +373,7 @@ class Scheduler:
         protects the request a replay is currently restoring.
         """
         best: Optional[Request] = None
+        best_key = None
         pool = self.allocator.num_pages - 1
         for slot in range(self.n_slots):
             req = self.slots[slot]
@@ -310,8 +383,9 @@ class Scheduler:
                 resume = max(1, -(-int(self.cur_len[slot]) // self.page_size))
                 if resume > pool:
                     continue
-            if best is None or len(req.out_tokens) < len(best.out_tokens):
-                best = req
+            key = (req.priority, len(req.out_tokens), rid_sort_key(req.rid))
+            if best_key is None or key < best_key:
+                best, best_key = req, key
         if not self.eviction_enabled:
             assert best is not None, "preemption with no active slots"
         return best
@@ -356,13 +430,30 @@ class Scheduler:
         retired: List[Request] = []
         for slot in np.nonzero(self.active)[0]:
             req = self.slots[slot]
-            req.out_tokens.append(int(next_tokens[slot]))
+            tok = int(next_tokens[slot])
+            req.out_tokens.append(tok)
+            self.note_token(req, tok)
             if logits is not None:
                 req.out_logits.append(np.asarray(logits[slot]))
             self.cur_len[slot] += 1
             if req.done:
                 retired.append(self._retire(int(slot)))
         return retired
+
+    def note_token(self, req: Request, token: int) -> None:
+        """Stamp first-token time once and fire the streaming callback.
+
+        Called exactly once per token APPENDED to ``req.out_tokens`` (the
+        engine calls it for the prefill's first token, ``complete_step``
+        for every decode step) — never on preempt -> resume restores,
+        since those re-materialise KV, not tokens. That makes the
+        streaming callback exactly-once and in-order by construction.
+        """
+        if req.first_token_step < 0:
+            req.first_token_step = self.now
+            req.t_first = self.wall()
+        if self.on_token is not None:
+            self.on_token(req, token, len(req.out_tokens) - 1, self.now)
 
     def retire_if_done(self, req: Request) -> bool:
         """Retire a just-admitted request that needs no decode steps
@@ -383,6 +474,8 @@ class Scheduler:
         self.active[slot] = False
         self.cur_len[slot] = 0
         self.page_table[slot] = NULL_PAGE
+        req.retire_step = self.now
+        req.t_retire = self.wall()
         self.finished[req.rid] = req
         self.n_retired += 1
         return req
@@ -415,5 +508,7 @@ class Scheduler:
                 pass
             self._release(req)             # forget any evicted-page state
         req.swapped = False
+        req.retire_step = self.now
+        req.t_retire = self.wall()
         self.finished[req.rid] = req
         self.n_failed += 1

@@ -16,6 +16,8 @@ BASE = {
         "decode": {"sparse_ref_step_ms": 1.0, "dense_step_ms": 0.5,
                    "sparse_ref_tok_per_s": 5000.0},
         "policies": {"gate_step_ms": 0.9, "gate_sparsity": 0.1},
+        "traffic": {"frontend_step_ms": 1.2, "latency_tpot_p50_ms": 1.5,
+                    "latency_ttft_p99_ms": 9.0, "latency_tok_per_s": 600.0},
     },
 }
 
@@ -72,6 +74,22 @@ def test_gate_tolerates_new_keys_without_baseline(tmp_path):
     fresh = copy.deepcopy(BASE)
     fresh["sections"]["decode"]["new_kernel_step_ms"] = 123.0
     assert compare.main([base, _write(tmp_path, "f.json", fresh)]) == 0
+
+
+def test_gate_covers_traffic_latency_keys(tmp_path):
+    """ISSUE 8: the traffic section's TPOT-p50 latency keys gate like
+    step_ms; its tail-TTFT and throughput keys stay report-only (tail
+    wall-clock on shared runners is jitter, not signal)."""
+    base = _write(tmp_path, "base.json", BASE)
+    fresh = copy.deepcopy(BASE)
+    fresh["sections"]["traffic"]["latency_tpot_p50_ms"] = 1.5 * 1.6
+    assert compare.main([base, _write(tmp_path, "f.json", fresh),
+                         "--sections", "decode,policies,traffic"]) == 1
+    fresh2 = copy.deepcopy(BASE)
+    fresh2["sections"]["traffic"]["latency_ttft_p99_ms"] = 9.0 * 40
+    fresh2["sections"]["traffic"]["latency_tok_per_s"] = 1.0
+    assert compare.main([base, _write(tmp_path, "f2.json", fresh2),
+                         "--sections", "decode,policies,traffic"]) == 0
 
 
 def test_gate_errors_on_missing_file(tmp_path):

@@ -1,0 +1,336 @@
+"""Production traffic subsystem (ISSUE 8 tentpole).
+
+Contracts pinned here:
+
+  * seeded traffic generation is deterministic and replayable (same
+    seed/trace -> identical arrival schedule; JSONL roundtrip is exact);
+  * the open-loop streaming frontend is BITWISE deterministic for a
+    fixed trace (identical per-request token streams and identical
+    virtual-step lifecycle stats across runs);
+  * streaming callbacks fire exactly once per token, in order, including
+    across preempt -> resume, and the streamed tokens equal the returned
+    streams of an unconstrained run (preemption stays lossless);
+  * SLO tiers: priority-then-FIFO admission, never preempt a
+    latency-tier request while a throughput-tier victim exists, and —
+    the acceptance criterion — latency-tier p99 TTFT strictly better
+    than throughput-tier under the same constrained-pool load;
+  * preemption-victim tie-breaking orders by rid (satellite regression:
+    PR-7 broke ties by slot index, which depends on admission history);
+  * the synchronous serve() path reports the same lifecycle stamps
+    (stats["timing_by_rid"]) so batch and frontend TTFT proxies compare.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.config import reduced
+from repro.core.policy import TierPolicy, TierSpec, default_tiers
+from repro.models.registry import get_api
+from repro.serve.engine import DecodeEngine
+from repro.serve.frontend import ServingFrontend, tier_latency_stats
+from repro.serve.scheduler import Request, Scheduler
+from repro.serve.traffic import (StepArrivals, TraceEntry, load_trace,
+                                 poisson_trace, save_trace, synth_prompt,
+                                 upfront_requests, validate_trace)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(token_budget=16):
+    cfg = reduced(configs.get("qwen3_0_6b")).replace(dtype="float32")
+    return cfg.replace(gate=dataclasses.replace(
+        cfg.gate, block_size=8, d_gate=16, token_budget=token_budget))
+
+
+_ENGINES = {}
+
+
+def _engine(max_len=128):
+    if max_len not in _ENGINES:
+        cfg = _cfg()
+        params = get_api(cfg).init_params(jax.random.PRNGKey(0), cfg)
+        _ENGINES[max_len] = DecodeEngine(cfg, params, max_len=max_len)
+    return _ENGINES[max_len]
+
+
+# ---------------------------------------------------------------------------
+# traffic generator: determinism, roundtrip, validation
+# ---------------------------------------------------------------------------
+
+def test_poisson_trace_deterministic_and_roundtrip(tmp_path):
+    kw = dict(seed=23, prompt_len=(4, 20), output_len=(3, 9),
+              tiers={"latency": 0.3, "throughput": 0.7})
+    a = poisson_trace(12, 0.4, **kw)
+    b = poisson_trace(12, 0.4, **kw)
+    assert a == b                          # same seed -> identical schedule
+    assert poisson_trace(12, 0.4, **{**kw, "seed": 24}) != a
+    assert [e.rid for e in a] == list(range(12))
+    assert all(e.arrival >= 0 for e in a)
+    assert {e.tier for e in a} <= {"latency", "throughput"}
+    path = str(tmp_path / "trace.jsonl")
+    save_trace(a, path)
+    assert load_trace(path) == a           # exact JSONL roundtrip
+    # prompt contents are a pure function of the entry
+    np.testing.assert_array_equal(synth_prompt(a[0], 97),
+                                  synth_prompt(a[0], 97))
+
+
+def test_validate_trace_rejects_malformed():
+    ok = TraceEntry(rid=0, arrival=1.0, prompt_len=4, output_len=2)
+    with pytest.raises(ValueError, match="duplicate"):
+        validate_trace([ok, TraceEntry(rid=0, arrival=2.0, prompt_len=4,
+                                       output_len=2)])
+    with pytest.raises(ValueError, match="sorted"):
+        validate_trace([ok, TraceEntry(rid=1, arrival=0.5, prompt_len=4,
+                                       output_len=2)])
+    with pytest.raises(ValueError, match="prompt_len"):
+        validate_trace([TraceEntry(rid=0, arrival=0.0, prompt_len=0,
+                                   output_len=2)])
+
+
+def test_step_arrivals_pull_semantics():
+    trace = [TraceEntry(rid=0, arrival=0.0, prompt_len=4, output_len=2),
+             TraceEntry(rid=1, arrival=1.5, prompt_len=4, output_len=2),
+             TraceEntry(rid=2, arrival=1.7, prompt_len=4, output_len=2)]
+    arr = StepArrivals(trace, vocab_size=64)
+    assert [r["rid"] for r in arr.pull(0)] == [0]
+    assert arr.pull(1) == []               # 1.5 not due at step 1
+    assert not arr.exhausted
+    assert [r["rid"] for r in arr.pull(2)] == [1, 2]
+    assert arr.exhausted and arr.pull(99) == []
+
+
+def test_tier_policy_mapping():
+    cfg = _cfg()
+    tiers = default_tiers(cfg)
+    rd = tiers.apply({"rid": 0, "tokens": np.zeros(4, np.int32),
+                      "max_new_tokens": 2, "tier": "latency"})
+    assert rd["priority"] > 0 and rd["reserve"] is True
+    assert rd["budget"] > 0 and rd["tier"] == "latency"
+    # explicit per-request overrides win over the tier
+    rd2 = tiers.apply({"rid": 1, "tokens": np.zeros(4, np.int32),
+                       "max_new_tokens": 2, "budget": 8}, "throughput")
+    assert rd2["budget"] == 8 and rd2["reserve"] is False
+    with pytest.raises(ValueError, match="unknown tier"):
+        tiers.apply({"rid": 2}, "gold")
+    with pytest.raises(ValueError, match="admission"):
+        TierSpec(name="x", admission="eager")
+
+
+# ---------------------------------------------------------------------------
+# scheduler: tier priority + deterministic victim selection (unit level)
+# ---------------------------------------------------------------------------
+
+def test_admission_priority_then_fifo():
+    sched = Scheduler(n_slots=1, num_pages=16, page_size=4,
+                      max_pages_per_seq=4)
+    a = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+    b = Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+    c = Request(rid=2, prompt=np.zeros(4, np.int32), max_new_tokens=2,
+                tier="latency", priority=5)
+    for r in (a, b, c):
+        sched.submit(r)
+    assert [r.rid for r in sched.admissions()] == [2]   # priority first
+    sched.complete_step(np.array([9], np.int32))
+    sched.complete_step(np.array([9], np.int32))
+    # equal priority drains FIFO
+    assert [r.rid for r in sched.admissions()] == [0]
+
+
+def test_victim_tie_break_by_rid_not_slot():
+    """Regression (ISSUE 8 satellite): under equal generated-token
+    counts the victim is the LOWEST rid — not whichever happens to sit
+    in the lowest slot, which depends on admission/insertion history."""
+    sched = Scheduler(n_slots=2, num_pages=32, page_size=4,
+                      max_pages_per_seq=8)
+    hi = Request(rid=5, prompt=np.zeros(4, np.int32), max_new_tokens=8)
+    lo = Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=8)
+    sched.submit(hi)                       # rid 5 admitted into slot 0
+    sched.submit(lo)                       # rid 1 admitted into slot 1
+    sched.admissions()
+    assert (hi.slot, lo.slot) == (0, 1)
+    assert len(hi.out_tokens) == len(lo.out_tokens)
+    assert sched._pick_victim() is lo      # old code picked slot 0 (rid 5)
+
+
+def test_victim_never_latency_while_throughput_exists():
+    sched = Scheduler(n_slots=2, num_pages=32, page_size=4,
+                      max_pages_per_seq=8)
+    lat = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=8,
+                  tier="latency", priority=10)
+    thr = Request(rid=1, prompt=np.zeros(4, np.int32), max_new_tokens=8,
+                  tier="throughput", priority=0)
+    sched.submit(lat)
+    sched.submit(thr)
+    sched.admissions()
+    # the throughput request has MORE progress (more tokens lost on
+    # preemption) — priority still makes it the victim
+    thr.out_tokens.extend([1, 2, 3])
+    assert sched._pick_victim() is thr
+
+
+def test_lifecycle_stamps_on_scheduler():
+    sched = Scheduler(n_slots=1, num_pages=16, page_size=4,
+                      max_pages_per_seq=4)
+    sched.now = 3
+    r = Request(rid=0, prompt=np.zeros(4, np.int32), max_new_tokens=2)
+    sched.submit(r)
+    assert r.submit_step == 3 and r.t_submit > 0
+    sched.now = 5
+    sched.admissions()
+    assert r.admit_step == 5
+    seen = []
+    sched.on_token = lambda req, tok, idx, step: seen.append(
+        (req.rid, tok, idx, step))
+    sched.complete_step(np.array([7], np.int32))
+    assert r.first_token_step == 5
+    sched.now = 6
+    sched.complete_step(np.array([8], np.int32))
+    assert r.retire_step == 6 and r.first_token_step == 5
+    assert seen == [(0, 7, 0, 5), (0, 8, 1, 6)]
+
+
+# ---------------------------------------------------------------------------
+# frontend: bitwise determinism + exactly-once streaming
+# ---------------------------------------------------------------------------
+
+def _two_tier_policy(cfg):
+    return TierPolicy(tiers=(
+        TierSpec(name="latency", priority=10, admission="reserve"),
+        TierSpec(name="throughput", priority=0, admission="lazy")))
+
+
+def test_frontend_bitwise_deterministic_with_streams():
+    eng = _engine()
+    trace = poisson_trace(5, 0.3, seed=11, prompt_len=(6, 24),
+                          output_len=(4, 10),
+                          tiers={"latency": 0.4, "throughput": 0.6})
+    tiers = _two_tier_policy(eng.cfg)
+    runs = []
+    for _ in range(2):
+        fr = ServingFrontend(eng, tier_policy=tiers, n_slots=2)
+        runs.append(fr.run(trace, collect_events=True))
+    a, b = runs
+    for e in trace:
+        assert a[e.rid] == b[e.rid]        # identical token streams
+        assert len(a[e.rid]) == e.output_len
+    assert a["stats"]["errors"] == {}
+    # identical virtual-step lifecycle (ints — bitwise comparable)
+    for rid, tm in a["stats"]["timing_by_rid"].items():
+        tm_b = b["stats"]["timing_by_rid"][rid]
+        for k in ("submit_step", "admit_step", "first_token_step",
+                  "retire_step", "n_tokens"):
+            assert tm[k] == tm_b[k], (rid, k)
+    # identical event sequences (modulo wall-clock annotation)
+    ev_a = [(e.rid, e.token, e.index, e.step) for e in a["events"]]
+    ev_b = [(e.rid, e.token, e.index, e.step) for e in b["events"]]
+    assert ev_a == ev_b
+
+
+def test_streaming_exactly_once_across_preemption():
+    eng = _engine()
+    # growing decodes (output >> prompt pages) against a pool that fits
+    # barely more than one worst-case sequence: lazy growth must preempt
+    trace = [TraceEntry(rid=i, arrival=0.0, prompt_len=10, output_len=18,
+                        seed=100 + i) for i in range(3)]
+    fr_free = ServingFrontend(eng, n_slots=3)
+    free = fr_free.run(trace)
+    assert free["stats"]["preemptions"] == 0
+    pool = 1 + (free["stats"]["peak_pages_used"] + 1) // 2
+    events = []
+    fr = ServingFrontend(eng, n_slots=3, num_pages=pool)
+    res = fr.run(trace, on_token=lambda ev: events.append(ev))
+    st = res["stats"]
+    assert st["preemptions"] > 0           # pressure is real
+    assert st["errors"] == {}
+    streams = {}
+    for ev in events:                      # exactly once, in order
+        assert ev.index == len(streams.setdefault(ev.rid, []))
+        streams[ev.rid].append(ev.token)
+    for e in trace:
+        assert streams[e.rid] == res[e.rid]
+        # preempt -> resume stayed lossless: same stream as unconstrained
+        assert res[e.rid] == free[e.rid]
+    # events are globally ordered by virtual step
+    assert [e.step for e in events] == sorted(e.step for e in events)
+
+
+def test_arrival_failure_isolated_mid_run():
+    """An arriving request the pool can never hold fails ALONE with
+    status=error (serve()-never-raises extended to open-loop arrivals)."""
+    eng = _engine()
+    trace = [TraceEntry(rid=0, arrival=0.0, prompt_len=10, output_len=6),
+             TraceEntry(rid=1, arrival=2.0, prompt_len=60, output_len=4),
+             TraceEntry(rid=2, arrival=3.0, prompt_len=10, output_len=6)]
+    # pool fits the small requests but can never admit rid 1's prompt
+    fr = ServingFrontend(eng, n_slots=2, num_pages=7)
+    res = fr.run(trace)
+    st = res["stats"]
+    assert "submit_rejected" in st["errors"][1]
+    assert len(res[0]) == 6 and len(res[2]) == 6
+    assert st["failed"] == 1 and st["retired"] == 2
+
+
+# ---------------------------------------------------------------------------
+# acceptance: tiered latency under constrained-pool load
+# ---------------------------------------------------------------------------
+
+def test_latency_tier_p99_ttft_beats_throughput():
+    eng = _engine()
+    # burst of throughput work saturates both slots; latency requests
+    # arrive INTO the backlog and must jump the pending queue
+    trace = [TraceEntry(rid=i, arrival=0.0, prompt_len=10, output_len=12,
+                        tier="throughput", seed=i) for i in range(4)]
+    trace += [TraceEntry(rid=4 + j, arrival=1.0, prompt_len=10,
+                         output_len=6, tier="latency", seed=40 + j)
+              for j in range(2)]
+    tiers = _two_tier_policy(eng.cfg)
+    fr = ServingFrontend(eng, tier_policy=tiers, n_slots=2,
+                         num_pages=1 + 4 * 2)   # ~2 worst-case sequences
+    res = fr.run(trace)
+    st = res["stats"]
+    assert st["errors"] == {}
+    rows = st["tiers"]
+    assert rows["latency"]["n"] == 2 and rows["throughput"]["n"] == 4
+    # the acceptance criterion, on the deterministic virtual clock
+    assert (rows["latency"]["ttft_steps_p99"]
+            < rows["throughput"]["ttft_steps_p99"])
+    # same load WITHOUT tiers: pure FIFO makes the late arrivals wait
+    # behind the whole backlog — their TTFT must not beat the backlog's
+    flat = ServingFrontend(eng, n_slots=2, num_pages=1 + 4 * 2).run(trace)
+    late = [flat["stats"]["timing_by_rid"][r]["first_token_step"]
+            - flat["stats"]["timing_by_rid"][r]["submit_step"]
+            for r in (4, 5)]
+    tiered = [res["stats"]["timing_by_rid"][r]["first_token_step"]
+              - res["stats"]["timing_by_rid"][r]["submit_step"]
+              for r in (4, 5)]
+    assert max(tiered) < max(late)
+
+
+# ---------------------------------------------------------------------------
+# satellite: synchronous serve() reports the same lifecycle stamps
+# ---------------------------------------------------------------------------
+
+def test_sync_serve_timing_by_rid():
+    eng = _engine()
+    trace = poisson_trace(3, 0.5, seed=3, prompt_len=(6, 20),
+                          output_len=(3, 6))
+    reqs = upfront_requests(trace, eng.cfg.vocab_size)
+    res = eng.serve(reqs, n_slots=2)
+    timing = res["stats"]["timing_by_rid"]
+    assert set(timing) == {e.rid for e in trace}
+    for e in trace:
+        tm = timing[e.rid]
+        assert tm["submit_step"] == 0      # batch path: all submitted up front
+        assert tm["admit_step"] >= 0
+        # the first token comes from the admission prefill, same iteration
+        assert tm["first_token_step"] == tm["admit_step"]
+        assert tm["retire_step"] >= tm["first_token_step"]
+        assert tm["n_tokens"] == e.output_len
+        assert tm["t_retire"] >= tm["t_first"] >= tm["t_submit"] > 0
+    # frontend-style aggregation works on the batch path too
+    rows = tier_latency_stats(res["stats"])
+    assert rows["default"]["n"] == 3 and rows["default"]["incomplete"] == 0
