@@ -539,6 +539,46 @@ def bench_serve():
             emit("serve", f"{name}_page_restores", s3["page_restores"])
             emit("serve", f"{name}_replay_steps", s3["replay_steps"])
 
+        # quantized pools at EQUAL pool BYTES (ISSUE 9): int8 K/V pages
+        # are ~4x smaller, so the same byte budget holds ~4x the pages —
+        # measured as resident capacity (peak concurrently active
+        # requests, slots uncapped at n_slots=n_req) plus the usual
+        # pressure counters. quant_off gets an fp pool sized to ~2
+        # worst-case requests; quant_int8 gets however many pages the
+        # SAME bytes buy on int8 pools.
+        from repro.core.policy import DecodeOptions
+        from repro.serve import paging as pgmod
+        from repro.serve.eviction import EvictionManager
+        nl = 2                                   # tiny_cfg num_layers
+        per_page = {
+            q: EvictionManager.page_restore_bytes(
+                pgmod.init_pages(cfg, 2, nl, quantize=q))
+            for q in (None, "int8")}
+        pool_q = {None: 1 + npt * 2}
+        byte_budget = pool_q[None] * per_page[None]
+        pool_q["int8"] = byte_budget // per_page["int8"]
+        for name, q in (("quant_off", None), ("quant_int8", "int8")):
+            eng_q = DecodeEngine(cfg, params,
+                                 max_len=max_plen + max_new + 16,
+                                 options=DecodeOptions(quantize=q))
+            eng_q.serve(reqs, n_slots=n_req,
+                        num_pages=pool_q[q])             # warm
+            dt4 = float("inf")                           # best-of-3
+            for _ in range(3):
+                t0 = time.perf_counter()
+                r4 = eng_q.serve(reqs, n_slots=n_req, num_pages=pool_q[q])
+                dt4 = min(dt4, time.perf_counter() - t0)
+            s4 = r4["stats"]
+            emit("serve", f"{name}_pool_pages", pool_q[q])
+            emit("serve", f"{name}_pool_bytes", pool_q[q] * per_page[q])
+            emit("serve", f"{name}_resident_requests",
+                 s4["max_active_slots"])
+            emit("serve", f"{name}_step_ms",
+                 f"{dt4 / max(1, s4['decode_steps']) * 1e3:.3f}")
+            emit("serve", f"{name}_tok_per_s", f"{useful / dt4:.1f}")
+            emit("serve", f"{name}_preemptions", s4["preemptions"])
+            emit("serve", f"{name}_admission_stalls", s4["admission_stalls"])
+
     if ENGINE in ("contiguous", "both"):
         # pad-to-max static batching in waves of n_slots
         pad_tok = 0

@@ -73,6 +73,12 @@ def main():
                          "evict cold pages (RaaS victim model, ghost-row "
                          "metadata, optimistic replay on re-touch) before "
                          "falling back to whole-request preemption")
+    ap.add_argument("--quantize", default=None, choices=["int8"],
+                    help="with --paged: int8 K/V page pools with per-"
+                         "(page, head) scales and dequant fused into the "
+                         "block-sparse kernels — ~4x smaller pool and "
+                         "swap traffic at decode-realistic accuracy "
+                         "(see docs/ARCHITECTURE.md section 8)")
     args = ap.parse_args()
 
     cfg = reduced(configs.get(args.arch))
@@ -85,8 +91,11 @@ def main():
 
     params = get_api(cfg).init_params(jax.random.PRNGKey(0), cfg)
     max_len = args.prefill + args.new + 16
+    if args.quantize and not args.paged:
+        raise SystemExit("--quantize needs --paged (pools are paged-only)")
     opts = DecodeOptions(
         policy=get_policy(args.policy),
+        quantize=args.quantize,
         sampling=SamplingParams(temperature=args.temperature,
                                 top_p=args.top_p))
 

@@ -35,7 +35,7 @@ off pages through the page table with no cache-sized gather.
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -151,19 +151,25 @@ def trailing_meta(k_cache: jnp.ndarray, cur_len: jnp.ndarray,
 
 
 def trailing_meta_paged(k_pages: jnp.ndarray, page_table: jnp.ndarray,
-                        cur_len: jnp.ndarray, page_size: int
+                        cur_len: jnp.ndarray, page_size: int,
+                        k_scale: Optional[jnp.ndarray] = None
                         ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Paged twin of ``trailing_meta``: one physical page per slot.
 
     k_pages [P, Hkv, ps, Dh]; page_table [S, npt]; cur_len [S]. Reads
     exactly ONE page per slot (O(page_size)); rows with ``cur_len == 0``
-    read the null page and collapse to zeros."""
+    read the null page and collapse to zeros. ``k_scale`` [P, Hkv, 1]
+    (int8 pools, ISSUE 9) dequantizes the gathered page first — the
+    metadata describes the values attention will actually read."""
     ps = page_size
     sidx = jnp.arange(cur_len.shape[0])
     t_idx = jnp.maximum(-(-cur_len // ps) - 1, 0)           # [S] logical
     phys = page_table[sidx, t_idx]                          # [S]
     rem = cur_len - t_idx * ps
     blk = k_pages[phys]                                     # [S, Hkv, ps, Dh]
+    if k_scale is not None:
+        from repro.serve.paging import dequantize_block
+        blk = dequantize_block(blk, k_scale[phys])
     valid = (jnp.arange(ps)[None, :] < rem[:, None])[:, None, :, None]
     tmin, tmax = _block_minmax(blk, valid)
     return tmin, tmax, t_idx

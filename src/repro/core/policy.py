@@ -198,6 +198,10 @@ class SelectionInputs(NamedTuple):
     meta_kmax: Optional[jnp.ndarray] = None    # [B, Hkv, nb, Dh] float32
     kmin_pages: Optional[jnp.ndarray] = None   # [P, Hkv, Dh] float32
     kmax_pages: Optional[jnp.ndarray] = None   # [P, Hkv, Dh] float32
+    # int8 K pool dequant scales (ISSUE 9): policies that read raw
+    # ``k_pages`` (trailing-block recompute, reference gathers) must
+    # dequantize first — selection consumes what attention will read
+    k_scale_pages: Optional[jnp.ndarray] = None  # [P, Hkv, 1] float32
 
     @property
     def n_kv_heads(self) -> int:
@@ -259,7 +263,7 @@ def _gathered_k(inp: SelectionInputs) -> jnp.ndarray:
     if inp.k_cache is not None:
         return inp.k_cache
     from repro.serve import paging as pg
-    return pg.gather_kv(inp.k_pages, inp.page_table)
+    return pg.gather_kv(inp.k_pages, inp.page_table, inp.k_scale_pages)
 
 
 def _grouped_q(inp: SelectionInputs) -> jnp.ndarray:
@@ -366,7 +370,8 @@ class QuestPolicy:
             kmin = jnp.swapaxes(inp.kmin_pages[inp.page_table], 1, 2)
             kmax = jnp.swapaxes(inp.kmax_pages[inp.page_table], 1, 2)
             tmin, tmax, t_idx = mc.trailing_meta_paged(
-                inp.k_pages, inp.page_table, inp.new_len, bs)
+                inp.k_pages, inp.page_table, inp.new_len, bs,
+                k_scale=inp.k_scale_pages)
             kmin, kmax = mc.overlay_trailing(kmin, kmax, tmin, tmax, t_idx)
         else:
             raise ValueError(
@@ -596,6 +601,15 @@ class DecodeOptions:
                      can run RaaS page eviction with optimistic
                      execution + replay (ISSUE 7). Off by default: it is
                      a separate jit program.
+    quantize:        paged decode only — page-pool precision. None (the
+                     default) keeps fp pools and takes the original code
+                     path verbatim (``tests/golden_policy.npz`` stays
+                     bitwise). "int8" allocates int8 K/V page pools with
+                     per-page per-head float32 scale rows (metacache
+                     pattern: one row per page, swapped/evicted
+                     alongside); dequant is fused into the block-sparse
+                     decode kernels — no materialized fp copy of any
+                     cache-sized array (ISSUE 9).
     """
     policy: SelectionPolicy = GatePolicy()
     kernel_impl: str = "ref"
@@ -605,8 +619,12 @@ class DecodeOptions:
     split_k: int = 1
     schedule: SelectionSchedule = SelectionSchedule()
     track_evictions: bool = False
+    quantize: Optional[str] = None
 
     def __post_init__(self):
+        if self.quantize not in (None, "int8"):
+            raise ValueError(
+                f"quantize must be None or 'int8': {self.quantize!r}")
         if self.kernel_impl not in KERNEL_IMPLS:
             raise ValueError(f"kernel_impl {self.kernel_impl!r} not in "
                              f"{KERNEL_IMPLS}")

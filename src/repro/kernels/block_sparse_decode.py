@@ -36,6 +36,19 @@ one-time layout conversion):
   block_indices [B, Hkv, nsel] int32 (-1 padding)
   kv_len        [B] int32
   out           [B, Hkv, G_pad, Dh]
+
+Fused dequant (ISSUE 9): optional ``k_scales``/``v_scales`` — per-block
+f32 dequant factors ([B, Hkv, nb] contiguous, [P, Hkv(, 1)] paged pool
+rows) — ride the SAME scalar-prefetch path as the block indices: the
+kernel body recomputes each streamed block's (physical) id from
+idx_ref/pt_ref and multiplies the block by its scalar scale right after
+the VMEM load's fp32 upcast, inside the online-softmax block loop. The
+int8->fp conversion therefore only ever exists as one [bs, Dh] VMEM tile
+per grid step — no fp copy of the cache is materialized, and HBM traffic
+shrinks with the storage (~4x for int8 vs f32). ``None`` scales leave the
+fp path byte-for-byte unchanged. (Real-TPU note: int8 VMEM tiles want a
+(32, 128) min tile, so page_size >= 32 on hardware; interpret/ref modes
+accept any size.)
 """
 from __future__ import annotations
 
@@ -52,12 +65,15 @@ LANES = 128
 
 
 def _flash_accum(idxs, b, j, len_ref, q_ref, k_refs, v_refs,
-                 m_ref, l_ref, acc_ref, *, block_size: int, scale: float):
+                 m_ref, l_ref, acc_ref, *, block_size: int, scale: float,
+                 k_scales=None, v_scales=None):
     """Shared online-softmax accumulation: init scratch at ``j == 0``,
     fold ``C`` selected blocks in one state update (individual -1 padding
     blocks are masked out; a fully-padded group is skipped). Finalization
     is the caller's: normalize-and-write (``_flash_group``) or emit the
-    raw (acc, m, l) partial (split-K kernel)."""
+    raw (acc, m, l) partial (split-K kernel). ``k_scales``/``v_scales``:
+    optional per-block scalar dequant factors (fused int8 dequant — the
+    multiply rides the existing fp32 upcast of each streamed tile)."""
     C = len(k_refs)
 
     @pl.when(j == 0)
@@ -76,6 +92,8 @@ def _flash_accum(idxs, b, j, len_ref, q_ref, k_refs, v_refs,
         scores = []
         for i in range(C):
             k = k_refs[i][0, 0].astype(jnp.float32)            # [bs, Dh]
+            if k_scales is not None:
+                k = k * k_scales[i]
             s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                     preferred_element_type=jnp.float32) * scale
             pos = idxs[i] * block_size + jax.lax.broadcasted_iota(
@@ -97,6 +115,8 @@ def _flash_accum(idxs, b, j, len_ref, q_ref, k_refs, v_refs,
                           jnp.exp(scores[i] - m_new), 0.0)     # [G_pad, bs]
             l_new = l_new + jnp.sum(p, axis=1, keepdims=True)
             v = v_refs[i][0, 0].astype(jnp.float32)
+            if v_scales is not None:
+                v = v * v_scales[i]
             acc = acc + jax.lax.dot_general(
                 p, v, (((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
@@ -107,10 +127,11 @@ def _flash_accum(idxs, b, j, len_ref, q_ref, k_refs, v_refs,
 
 def _flash_group(idxs, b, j, n_groups, len_ref, q_ref, k_refs, v_refs,
                  o_ref, m_ref, l_ref, acc_ref, *, block_size: int,
-                 scale: float):
+                 scale: float, k_scales=None, v_scales=None):
     """Accumulate one group, normalize-and-write on the last grid step."""
     _flash_accum(idxs, b, j, len_ref, q_ref, k_refs, v_refs, m_ref, l_ref,
-                 acc_ref, block_size=block_size, scale=scale)
+                 acc_ref, block_size=block_size, scale=scale,
+                 k_scales=k_scales, v_scales=v_scales)
 
     @pl.when(j == n_groups - 1)
     def _finalize():
@@ -119,8 +140,10 @@ def _flash_group(idxs, b, j, n_groups, len_ref, q_ref, k_refs, v_refs,
 
 
 def _kernel_body(idx_ref, len_ref, refs, *, block_size: int, n_groups: int,
-                 blocks_per_step: int, scale: float):
-    """Unpack the (q, k*C, v*C, o, scratch) ref layout and run one group."""
+                 blocks_per_step: int, scale: float, scale_lookup=None):
+    """Unpack the (q, k*C, v*C, o, scratch) ref layout and run one group.
+    ``scale_lookup(b, h, idxs) -> (k_scales, v_scales)`` resolves the
+    streamed blocks' dequant factors from SMEM (quantized pools only)."""
     C = blocks_per_step
     q_ref = refs[0]
     k_refs = refs[1:1 + C]
@@ -131,14 +154,28 @@ def _kernel_body(idx_ref, len_ref, refs, *, block_size: int, n_groups: int,
     h = pl.program_id(1)
     j = pl.program_id(2)
     idxs = [idx_ref[b, h, j * C + i] for i in range(C)]
+    k_scales = v_scales = None
+    if scale_lookup is not None:
+        k_scales, v_scales = scale_lookup(b, h, idxs)
     _flash_group(idxs, b, j, n_groups, len_ref, q_ref, k_refs, v_refs,
                  o_ref, m_ref, l_ref, acc_ref, block_size=block_size,
-                 scale=scale)
+                 scale=scale, k_scales=k_scales, v_scales=v_scales)
 
 
 def _kernel(idx_ref, len_ref,              # scalar prefetch
             *refs, **kw):
     _kernel_body(idx_ref, len_ref, refs, **kw)
+
+
+def _kernel_quant(idx_ref, len_ref, ks_ref, vs_ref,  # scalar prefetch
+                  *refs, **kw):
+    # contiguous fused-dequant body: ks/vs [B, Hkv, nb] ride scalar
+    # prefetch (SMEM); each streamed block's scale is a scalar read
+    def lookup(b, h, idxs):
+        safe = [jnp.maximum(ix, 0) for ix in idxs]
+        return ([ks_ref[b, h, s] for s in safe],
+                [vs_ref[b, h, s] for s in safe])
+    _kernel_body(idx_ref, len_ref, refs, scale_lookup=lookup, **kw)
 
 
 def _kernel_paged(idx_ref, pt_ref, len_ref,  # scalar prefetch (+page table)
@@ -148,6 +185,18 @@ def _kernel_paged(idx_ref, pt_ref, len_ref,  # scalar prefetch (+page table)
     # in-kernel masking stays in LOGICAL positions so kv_len semantics match
     # the contiguous kernel exactly.
     _kernel_body(idx_ref, len_ref, refs, **kw)
+
+
+def _kernel_paged_quant(idx_ref, pt_ref, len_ref, ks_ref, vs_ref, *refs,
+                        **kw):
+    # paged fused-dequant body: the kernel recomputes each streamed tile's
+    # PHYSICAL page id (same translation the index_map did) and reads that
+    # page's scale row [P, Hkv] from SMEM
+    def lookup(b, h, idxs):
+        phys = [jnp.maximum(pt_ref[b, jnp.maximum(ix, 0)], 0) for ix in idxs]
+        return ([ks_ref[p, h] for p in phys],
+                [vs_ref[p, h] for p in phys])
+    _kernel_body(idx_ref, len_ref, refs, scale_lookup=lookup, **kw)
 
 
 def _pad_group(g: int, dtype) -> int:
@@ -174,29 +223,34 @@ def block_sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
                         v_cache: jnp.ndarray, block_indices: jnp.ndarray,
                         kv_len: jnp.ndarray, *, block_size: int,
                         blocks_per_step: int = 4,
-                        interpret: bool = False) -> jnp.ndarray:
+                        interpret: bool = False,
+                        k_scales: jnp.ndarray = None,
+                        v_scales: jnp.ndarray = None) -> jnp.ndarray:
     """q [B,Hkv,G,Dh]; caches [B,Hkv,S,Dh] HEAD-MAJOR; indices [B,Hkv,nsel];
-    kv_len [B]. The caches are consumed natively — no transpose."""
+    kv_len [B]. The caches are consumed natively — no transpose.
+    ``k_scales``/``v_scales`` [B, Hkv, nb] f32: per-block dequant factors
+    for int8 caches, fused into the block loop (None = fp path verbatim)."""
     bsz, hkv, g, dh = q.shape
     nsel = block_indices.shape[-1]
     c, n_groups, idx = _pad_indices(block_indices, nsel, blocks_per_step)
     g_pad = _pad_group(g, q.dtype)
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
     scale = 1.0 / math.sqrt(dh)
+    quant = k_scales is not None
 
-    def q_map(b, h, j, idx_ref, len_ref):
+    def q_map(b, h, j, *prefetch):
         return (b, h, 0, 0)
 
     def kv_map(i):
-        def f(b, h, j, idx_ref, len_ref):
+        def f(b, h, j, idx_ref, *rest):
             return (b, h, jnp.maximum(idx_ref[b, h, j * c + i], 0), 0)
         return f
 
-    def o_map(b, h, j, idx_ref, len_ref):
+    def o_map(b, h, j, *prefetch):
         return (b, h, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=4 if quant else 2,
         grid=(bsz, hkv, n_groups),
         in_specs=(
             [pl.BlockSpec((1, 1, g_pad, dh), q_map)]
@@ -211,14 +265,18 @@ def block_sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray,
             pltpu.VMEM((g_pad, dh), jnp.float32),      # acc
         ],
     )
+    prefetch = [idx.astype(jnp.int32), kv_len.astype(jnp.int32)]
+    if quant:
+        prefetch += [k_scales.astype(jnp.float32),
+                     v_scales.astype(jnp.float32)]
     out = pl.pallas_call(
-        functools.partial(_kernel, block_size=block_size, n_groups=n_groups,
+        functools.partial(_kernel_quant if quant else _kernel,
+                          block_size=block_size, n_groups=n_groups,
                           blocks_per_step=c, scale=scale),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g_pad, dh), q.dtype),
         interpret=interpret,
-    )(idx.astype(jnp.int32), kv_len.astype(jnp.int32), qp,
-      *([k_cache] * c), *([v_cache] * c))
+    )(*prefetch, qp, *([k_cache] * c), *([v_cache] * c))
     return out[:, :, :g]
 
 
@@ -229,7 +287,9 @@ def block_sparse_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
                               block_indices: jnp.ndarray,
                               page_table: jnp.ndarray, kv_len: jnp.ndarray,
                               *, block_size: int, blocks_per_step: int = 4,
-                              interpret: bool = False) -> jnp.ndarray:
+                              interpret: bool = False,
+                              k_scales: jnp.ndarray = None,
+                              v_scales: jnp.ndarray = None) -> jnp.ndarray:
     """Paged variant: q [B,Hkv,G,Dh]; k_pages/v_pages [P, Hkv, ps, Dh]
     HEAD-MAJOR global pools (ps == block_size); block_indices [B,Hkv,nsel]
     LOGICAL block ids (-1 padding); page_table [B, npt] logical->physical.
@@ -239,6 +299,11 @@ def block_sparse_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     ``BlockSpec.index_map``: grid step (b, h, j) streams physical pages
     ``page_table[b, block_indices[b,h,j*C+i]]`` HBM->VMEM. Non-selected
     pages never leave HBM — paging adds zero extra KV I/O.
+
+    ``k_scales``/``v_scales`` [P, Hkv(, 1)] f32: per-page per-head dequant
+    rows for int8 pools (serve.paging scale pools). They ride scalar
+    prefetch too; the kernel body redoes the logical->physical translation
+    to pick each streamed page's scale (None = fp path verbatim).
     """
     bsz, hkv, g, dh = q.shape
     ps = k_pages.shape[2]
@@ -248,22 +313,23 @@ def block_sparse_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
     g_pad = _pad_group(g, q.dtype)
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
     scale = 1.0 / math.sqrt(dh)
+    quant = k_scales is not None
 
-    def q_map(b, h, j, idx_ref, pt_ref, len_ref):
+    def q_map(b, h, j, *prefetch):
         return (b, h, 0, 0)
 
     def kv_map(i):
-        def f(b, h, j, idx_ref, pt_ref, len_ref):
+        def f(b, h, j, idx_ref, pt_ref, *rest):
             log = jnp.maximum(idx_ref[b, h, j * c + i], 0)
             phys = pt_ref[b, log]
             return (jnp.maximum(phys, 0), h, 0, 0)
         return f
 
-    def o_map(b, h, j, idx_ref, pt_ref, len_ref):
+    def o_map(b, h, j, *prefetch):
         return (b, h, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=5 if quant else 3,
         grid=(bsz, hkv, n_groups),
         in_specs=(
             [pl.BlockSpec((1, 1, g_pad, dh), q_map)]
@@ -276,20 +342,26 @@ def block_sparse_decode_paged(q: jnp.ndarray, k_pages: jnp.ndarray,
             pltpu.VMEM((g_pad, dh), jnp.float32),      # acc
         ],
     )
+    prefetch = [idx.astype(jnp.int32), page_table.astype(jnp.int32),
+                kv_len.astype(jnp.int32)]
+    if quant:
+        prefetch += [k_scales.reshape(-1, hkv).astype(jnp.float32),
+                     v_scales.reshape(-1, hkv).astype(jnp.float32)]
     out = pl.pallas_call(
-        functools.partial(_kernel_paged, block_size=block_size,
+        functools.partial(_kernel_paged_quant if quant else _kernel_paged,
+                          block_size=block_size,
                           n_groups=n_groups, blocks_per_step=c, scale=scale),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((bsz, hkv, g_pad, dh), q.dtype),
         interpret=interpret,
-    )(idx.astype(jnp.int32), page_table.astype(jnp.int32),
-      kv_len.astype(jnp.int32), qp, *([k_pages] * c), *([v_pages] * c))
+    )(*prefetch, qp, *([k_pages] * c), *([v_pages] * c))
     return out[:, :, :g]
 
 
 def _kernel_paged_splitk(idx_ref, pt_ref, len_ref,   # scalar prefetch
                          *refs, block_size: int, n_groups: int,
-                         blocks_per_step: int, scale: float, per_pad: int):
+                         blocks_per_step: int, scale: float, per_pad: int,
+                         scale_lookup=None):
     """Split-K body: each (b, h, s) lane accumulates its OWN split's
     online-softmax state and emits the raw partial (acc, m, l) instead of
     normalizing — the cross-split combine happens outside the kernel."""
@@ -304,14 +376,30 @@ def _kernel_paged_splitk(idx_ref, pt_ref, len_ref,   # scalar prefetch
     s = pl.program_id(2)
     j = pl.program_id(3)
     idxs = [idx_ref[b, h, s * per_pad + j * C + i] for i in range(C)]
+    k_scales = v_scales = None
+    if scale_lookup is not None:
+        k_scales, v_scales = scale_lookup(b, h, idxs)
     _flash_accum(idxs, b, j, len_ref, q_ref, k_refs, v_refs, m_ref, l_ref,
-                 acc_ref, block_size=block_size, scale=scale)
+                 acc_ref, block_size=block_size, scale=scale,
+                 k_scales=k_scales, v_scales=v_scales)
 
     @pl.when(j == n_groups - 1)
     def _emit_partial():
         o_ref[0, 0, 0] = acc_ref[...]
         mo_ref[0, 0, 0] = m_ref[...]
         lo_ref[0, 0, 0] = l_ref[...]
+
+
+def _kernel_paged_splitk_quant(idx_ref, pt_ref, len_ref, ks_ref, vs_ref,
+                               *refs, **kw):
+    # split-K fused-dequant body: same physical-page scale lookup as
+    # _kernel_paged_quant, per split segment
+    def lookup(b, h, idxs):
+        phys = [jnp.maximum(pt_ref[b, jnp.maximum(ix, 0)], 0) for ix in idxs]
+        return ([ks_ref[p, h] for p in phys],
+                [vs_ref[p, h] for p in phys])
+    _kernel_paged_splitk(idx_ref, pt_ref, len_ref, *refs,
+                         scale_lookup=lookup, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("block_size", "num_splits",
@@ -323,7 +411,10 @@ def block_sparse_decode_paged_splitk(q: jnp.ndarray, k_pages: jnp.ndarray,
                                      kv_len: jnp.ndarray, *, block_size: int,
                                      num_splits: int = 2,
                                      blocks_per_step: int = 4,
-                                     interpret: bool = False) -> jnp.ndarray:
+                                     interpret: bool = False,
+                                     k_scales: jnp.ndarray = None,
+                                     v_scales: jnp.ndarray = None
+                                     ) -> jnp.ndarray:
     """Split-K variant of ``block_sparse_decode_paged`` (the TPU analog of
     the paper's ``num_split`` SM load balancing, ISSUE 4).
 
@@ -353,22 +444,23 @@ def block_sparse_decode_paged_splitk(q: jnp.ndarray, k_pages: jnp.ndarray,
     g_pad = _pad_group(g, q.dtype)
     qp = jnp.pad(q, ((0, 0), (0, 0), (0, g_pad - g), (0, 0)))
     scale = 1.0 / math.sqrt(dh)
+    quant = k_scales is not None
 
-    def q_map(b, h, s, j, idx_ref, pt_ref, len_ref):
+    def q_map(b, h, s, j, *prefetch):
         return (b, h, 0, 0)
 
     def kv_map(i):
-        def f(b, h, s, j, idx_ref, pt_ref, len_ref):
+        def f(b, h, s, j, idx_ref, pt_ref, *rest):
             log = jnp.maximum(idx_ref[b, h, s * per_pad + j * c + i], 0)
             phys = pt_ref[b, log]
             return (jnp.maximum(phys, 0), h, 0, 0)
         return f
 
-    def part_map(b, h, s, j, idx_ref, pt_ref, len_ref):
+    def part_map(b, h, s, j, *prefetch):
         return (b, h, s, 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=3,
+        num_scalar_prefetch=5 if quant else 3,
         grid=(bsz, hkv, ns, n_groups),
         in_specs=(
             [pl.BlockSpec((1, 1, g_pad, dh), q_map)]
@@ -383,10 +475,17 @@ def block_sparse_decode_paged_splitk(q: jnp.ndarray, k_pages: jnp.ndarray,
             pltpu.VMEM((g_pad, dh), jnp.float32),      # acc
         ],
     )
+    prefetch = [idx.astype(jnp.int32), page_table.astype(jnp.int32),
+                kv_len.astype(jnp.int32)]
+    if quant:
+        prefetch += [k_scales.reshape(-1, hkv).astype(jnp.float32),
+                     v_scales.reshape(-1, hkv).astype(jnp.float32)]
     acc, m, l = pl.pallas_call(
-        functools.partial(_kernel_paged_splitk, block_size=block_size,
-                          n_groups=n_groups, blocks_per_step=c, scale=scale,
-                          per_pad=per_pad),
+        functools.partial(
+            _kernel_paged_splitk_quant if quant else _kernel_paged_splitk,
+            block_size=block_size,
+            n_groups=n_groups, blocks_per_step=c, scale=scale,
+            per_pad=per_pad),
         grid_spec=grid_spec,
         out_shape=(jax.ShapeDtypeStruct((bsz, hkv, ns, g_pad, dh),
                                         jnp.float32),
@@ -395,8 +494,7 @@ def block_sparse_decode_paged_splitk(q: jnp.ndarray, k_pages: jnp.ndarray,
                    jax.ShapeDtypeStruct((bsz, hkv, ns, g_pad, LANES),
                                         jnp.float32)),
         interpret=interpret,
-    )(idx.astype(jnp.int32), page_table.astype(jnp.int32),
-      kv_len.astype(jnp.int32), qp, *([k_pages] * c), *([v_pages] * c))
+    )(*prefetch, qp, *([k_pages] * c), *([v_pages] * c))
 
     # cross-split combine (two-pass rescale; matches the split-K ref)
     m_s = m[..., :1]                                     # [B,Hkv,NS,G,1]

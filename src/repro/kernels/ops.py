@@ -24,19 +24,25 @@ from repro.kernels.gate_select import (fused_gate_select as _gs_pallas,
 
 def sparse_decode(q: jnp.ndarray, k_cache: jnp.ndarray, v_cache: jnp.ndarray,
                   block_indices: jnp.ndarray, kv_len: jnp.ndarray, *,
-                  block_size: int, impl: str = "ref") -> jnp.ndarray:
+                  block_size: int, impl: str = "ref",
+                  k_scales: Optional[jnp.ndarray] = None,
+                  v_scales: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """impl: 'ref' (jnp), 'pallas' (TPU), 'pallas_interpret' (CPU check).
     Caches are HEAD-MAJOR [B, Hkv, S, Dh] — consumed natively, no
-    transpose on the decode path."""
+    transpose on the decode path. ``k_scales``/``v_scales`` [B, Hkv, nb]:
+    fused per-block dequant for int8 caches (None = fp path verbatim)."""
     if impl == "ref":
         return _ref.sparse_decode_ref(q, k_cache, v_cache, block_indices,
-                                      kv_len, block_size=block_size)
+                                      kv_len, block_size=block_size,
+                                      k_scales=k_scales, v_scales=v_scales)
     if impl == "pallas":
         return _bsd_pallas(q, k_cache, v_cache, block_indices, kv_len,
-                           block_size=block_size)
+                           block_size=block_size,
+                           k_scales=k_scales, v_scales=v_scales)
     if impl == "pallas_interpret":
         return _bsd_pallas(q, k_cache, v_cache, block_indices, kv_len,
-                           block_size=block_size, interpret=True)
+                           block_size=block_size, interpret=True,
+                           k_scales=k_scales, v_scales=v_scales)
     raise ValueError(impl)
 
 
@@ -82,21 +88,27 @@ def gate_select_paged(qg: jnp.ndarray, kg_pages: jnp.ndarray,
 def paged_sparse_decode(q: jnp.ndarray, k_pages: jnp.ndarray,
                         v_pages: jnp.ndarray, block_indices: jnp.ndarray,
                         page_table: jnp.ndarray, kv_len: jnp.ndarray, *,
-                        block_size: int, impl: str = "ref") -> jnp.ndarray:
+                        block_size: int, impl: str = "ref",
+                        k_scales: Optional[jnp.ndarray] = None,
+                        v_scales: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Paged-KV twin of ``sparse_decode``: block_indices are LOGICAL block
     ids, translated through ``page_table`` [B, npt]. Pools are HEAD-MAJOR
-    [P, Hkv, page_size, Dh] with page_size == block_size."""
+    [P, Hkv, page_size, Dh] with page_size == block_size.
+    ``k_scales``/``v_scales`` [P, Hkv, 1] pool scale rows: fused dequant
+    for int8 pools (None = fp path verbatim)."""
     if impl == "ref":
         return _ref.paged_sparse_decode_ref(
             q, k_pages, v_pages, block_indices, page_table, kv_len,
-            block_size=block_size)
+            block_size=block_size, k_scales=k_scales, v_scales=v_scales)
     if impl == "pallas":
         return _bsd_paged_pallas(q, k_pages, v_pages, block_indices,
-                                 page_table, kv_len, block_size=block_size)
+                                 page_table, kv_len, block_size=block_size,
+                                 k_scales=k_scales, v_scales=v_scales)
     if impl == "pallas_interpret":
         return _bsd_paged_pallas(q, k_pages, v_pages, block_indices,
                                  page_table, kv_len, block_size=block_size,
-                                 interpret=True)
+                                 interpret=True,
+                                 k_scales=k_scales, v_scales=v_scales)
     raise ValueError(impl)
 
 
@@ -106,24 +118,31 @@ def paged_sparse_decode_splitk(q: jnp.ndarray, k_pages: jnp.ndarray,
                                page_table: jnp.ndarray,
                                kv_len: jnp.ndarray, *, block_size: int,
                                num_splits: int,
-                               impl: str = "ref") -> jnp.ndarray:
+                               impl: str = "ref",
+                               k_scales: Optional[jnp.ndarray] = None,
+                               v_scales: Optional[jnp.ndarray] = None
+                               ) -> jnp.ndarray:
     """Split-K twin of ``paged_sparse_decode``: the selected list is
     reduced in ``num_splits`` independent flash partials that merge with a
     two-pass rescale (``num_splits=1`` is exactly the plain path). Used by
     the paged x sharded serving composition; see
-    ``block_sparse_decode.block_sparse_decode_paged_splitk``."""
+    ``block_sparse_decode.block_sparse_decode_paged_splitk``.
+    ``k_scales``/``v_scales``: fused int8 dequant, as ``paged_sparse_decode``."""
     if impl == "ref":
         return _ref.paged_sparse_decode_splitk_ref(
             q, k_pages, v_pages, block_indices, page_table, kv_len,
-            block_size=block_size, num_splits=num_splits)
+            block_size=block_size, num_splits=num_splits,
+            k_scales=k_scales, v_scales=v_scales)
     if impl == "pallas":
         return _bsd_splitk_pallas(q, k_pages, v_pages, block_indices,
                                   page_table, kv_len, block_size=block_size,
-                                  num_splits=num_splits)
+                                  num_splits=num_splits,
+                                  k_scales=k_scales, v_scales=v_scales)
     if impl == "pallas_interpret":
         return _bsd_splitk_pallas(q, k_pages, v_pages, block_indices,
                                   page_table, kv_len, block_size=block_size,
-                                  num_splits=num_splits, interpret=True)
+                                  num_splits=num_splits, interpret=True,
+                                  k_scales=k_scales, v_scales=v_scales)
     raise ValueError(impl)
 
 

@@ -18,6 +18,14 @@ sparse_decode_ref:
 gate_gt_attention_ref:
   q [B, Lq, H, Dh], k/v [B, Lk, Hkv, Dh]  (causal, optional segment ids)
   -> o [B, Lq, H, Dh], blockmax [B, H, Lq, nb] fp32 masked block row-max
+
+Fused dequant (ISSUE 9): every decode ref takes optional
+``k_scales``/``v_scales`` — per-block symmetric dequant factors (value =
+stored * scale), [B, Hkv, nb] for the contiguous cache, [P, Hkv, 1] pool
+rows for the paged twins. The scale multiply happens on the GATHERED
+selected blocks only, inside the same fp32 upcast attention already does
+— no cache-sized fp copy materializes, and ``None`` leaves the original
+math verbatim (bitwise contract).
 """
 from __future__ import annotations
 
@@ -30,9 +38,23 @@ import jax.numpy as jnp
 from repro.models.common import NEG_INF
 
 
+def _deq(g: jnp.ndarray, scales: Optional[jnp.ndarray], idx: jnp.ndarray,
+         block_size: int) -> jnp.ndarray:
+    """Dequantize gathered blocks: g [..., nsel*bs, Dh] x per-selected-block
+    scales gathered as [..., nsel] -> fp32. None = fp passthrough."""
+    if scales is None:
+        return g.astype(jnp.float32)
+    shp = g.shape
+    sel = jnp.take_along_axis(scales, idx, axis=-1)       # [..., nsel]
+    g = g.reshape(shp[:-2] + (idx.shape[-1], block_size, shp[-1]))
+    return (g.astype(jnp.float32) * sel[..., None, None]).reshape(shp)
+
+
 def sparse_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
                       v_cache: jnp.ndarray, block_indices: jnp.ndarray,
-                      kv_len: jnp.ndarray, *, block_size: int) -> jnp.ndarray:
+                      kv_len: jnp.ndarray, *, block_size: int,
+                      k_scales: Optional[jnp.ndarray] = None,
+                      v_scales: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     b, hkv, g, dh = q.shape
     nsel = block_indices.shape[-1]
     scale = 1.0 / math.sqrt(dh)
@@ -44,6 +66,8 @@ def sparse_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
     gpos = pos.reshape(b, hkv, nsel * block_size)
     kg = jnp.take_along_axis(k_cache, gpos[..., None], axis=2)   # [B,Hkv,n*bs,Dh]
     vg = jnp.take_along_axis(v_cache, gpos[..., None], axis=2)
+    kg = _deq(kg, k_scales, idx, block_size)
+    vg = _deq(vg, v_scales, idx, block_size)
 
     sc = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
                     kg.astype(jnp.float32)) * scale
@@ -60,7 +84,10 @@ def sparse_decode_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
 def paged_sparse_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                             v_pages: jnp.ndarray, block_indices: jnp.ndarray,
                             page_table: jnp.ndarray, kv_len: jnp.ndarray, *,
-                            block_size: int) -> jnp.ndarray:
+                            block_size: int,
+                            k_scales: Optional[jnp.ndarray] = None,
+                            v_scales: Optional[jnp.ndarray] = None
+                            ) -> jnp.ndarray:
     """Paged twin of ``sparse_decode_ref``.
 
     k_pages/v_pages: [P, Hkv, ps, Dh] head-major global pools
@@ -70,7 +97,9 @@ def paged_sparse_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     kernel's scalar-prefetch index_map. The selected pages are gathered
     directly off the native pool layout (no pool-sized transpose); after
     the gather the math is kept identical to the contiguous reference so
-    paged == contiguous holds to rounding.
+    paged == contiguous holds to rounding. ``k_scales``/``v_scales``
+    [P, Hkv, 1] dequantize int8 pools on the gathered pages only (the
+    scale row rides the same physical-page gather as its page).
     """
     b, hkv, g, dh = q.shape
     ps = k_pages.shape[2]
@@ -83,8 +112,14 @@ def paged_sparse_decode_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                           (b, hkv, page_table.shape[1]))
     phys = jnp.take_along_axis(pt, idx, axis=2)                  # [B,Hkv,nsel]
     har = jnp.arange(hkv)[None, :, None]
-    kg = k_pages[phys, har].reshape(b, hkv, nsel * ps, dh)       # [B,Hkv,n*ps,Dh]
-    vg = v_pages[phys, har].reshape(b, hkv, nsel * ps, dh)
+    kg = k_pages[phys, har]                                # [B,Hkv,nsel,ps,Dh]
+    vg = v_pages[phys, har]
+    if k_scales is not None:
+        kg = kg.astype(jnp.float32) * k_scales[phys, har][..., None]
+    if v_scales is not None:
+        vg = vg.astype(jnp.float32) * v_scales[phys, har][..., None]
+    kg = kg.reshape(b, hkv, nsel * ps, dh)                 # [B,Hkv,n*ps,Dh]
+    vg = vg.reshape(b, hkv, nsel * ps, dh)
 
     # token positions are LOGICAL (masking against kv_len)
     pos = idx[..., None] * ps + jnp.arange(ps)                   # [B,Hkv,nsel,ps]
@@ -104,7 +139,10 @@ def paged_sparse_decode_splitk_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                                    block_indices: jnp.ndarray,
                                    page_table: jnp.ndarray,
                                    kv_len: jnp.ndarray, *, block_size: int,
-                                   num_splits: int) -> jnp.ndarray:
+                                   num_splits: int,
+                                   k_scales: Optional[jnp.ndarray] = None,
+                                   v_scales: Optional[jnp.ndarray] = None
+                                   ) -> jnp.ndarray:
     """Split-K twin of ``paged_sparse_decode_ref`` (semantic spec of the
     Pallas split-K kernel): the selected-block list is split into
     ``num_splits`` segments, each reduced to an unnormalized flash partial
@@ -122,7 +160,8 @@ def paged_sparse_decode_splitk_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
     if num_splits <= 1:
         return paged_sparse_decode_ref(q, k_pages, v_pages, block_indices,
                                        page_table, kv_len,
-                                       block_size=block_size)
+                                       block_size=block_size,
+                                       k_scales=k_scales, v_scales=v_scales)
     b, hkv, g, dh = q.shape
     ps = k_pages.shape[2]
     assert ps == block_size, (ps, block_size)
@@ -142,8 +181,14 @@ def paged_sparse_decode_splitk_ref(q: jnp.ndarray, k_pages: jnp.ndarray,
                           (b, hkv, num_splits, npt))
     phys = jnp.take_along_axis(pt, idx, axis=3)          # [B,Hkv,NS,per]
     har = jnp.arange(hkv)[None, :, None, None]
-    kg = k_pages[phys, har].reshape(b, hkv, num_splits, per * ps, dh)
-    vg = v_pages[phys, har].reshape(b, hkv, num_splits, per * ps, dh)
+    kg = k_pages[phys, har]                        # [B,Hkv,NS,per,ps,Dh]
+    vg = v_pages[phys, har]
+    if k_scales is not None:
+        kg = kg.astype(jnp.float32) * k_scales[phys, har][..., None]
+    if v_scales is not None:
+        vg = vg.astype(jnp.float32) * v_scales[phys, har][..., None]
+    kg = kg.reshape(b, hkv, num_splits, per * ps, dh)
+    vg = vg.reshape(b, hkv, num_splits, per * ps, dh)
 
     pos = idx[..., None] * ps + jnp.arange(ps)           # [B,Hkv,NS,per,ps]
     valid = (bi[..., None] >= 0) \

@@ -805,8 +805,8 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                            k_pages, v_pages, kg_pages, page_table, cur_len,
                            active, options: DecodeOptions,
                            budget_blocks=None, kmin_pages=None,
-                           kmax_pages=None, shard=None, stage=None,
-                           plan=None):
+                           kmax_pages=None, k_scale=None, v_scale=None,
+                           shard=None, stage=None, plan=None):
     """One token over paged KV. x1 [S,1,d]; pools for ONE layer HEAD-MAJOR
     [P, Hkv, ps, Dh]; page_table [S, npt]; cur_len/active [S] per-slot.
 
@@ -831,7 +831,15 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
     the paged x sharded path (serve.sharded.sharded_paged_decode): pools
     sharded over kv heads, page table replicated, zero per-step
     collectives — bitwise equal to the unsharded paged step. Requires the
-    gate policy; ungated/dense slots fall through to the local paths."""
+    gate policy; ungated/dense slots fall through to the local paths.
+
+    ``k_scale``/``v_scale`` [P, Hkv, 1] f32 (int8 pools, ISSUE 9): when
+    present the K/V pools are int8, the trailing page is requantized per
+    append (``paging.append_token_paged_quant``) and every consumer —
+    block-sparse kernels, dense gather fallback, Kg/min-max finalize,
+    trailing-block Quest recompute — dequantizes with the scale rows
+    (fused in-kernel on the sparse path; no cache-sized fp copy). None
+    keeps the fp code path verbatim."""
     b = x1.shape[0]
     dh, hkv, g = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.gqa_group
     ps = cfg.gate.block_size
@@ -873,13 +881,15 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
             plan_kw = dict(reuse_idx=plan, do_select=(stage == STAGE_SELECT))
         if options.track_evictions:
             plan_kw["pt_kv"] = pt_kv
-        o, k_pages, v_pages, kg_pages, idx = sharded_paged_decode(
-            qg, qgrp, kr[:, 0], v[:, 0], k_pages, v_pages, kg_pages,
-            page_table, cur_len, active, p["gate"]["wk"], mesh=mesh,
-            cfg=cfg.gate, rope_theta=cfg.rope_theta,
-            max_selected=options.max_selected(cfg),
-            budget_blocks=budget_blocks, split_k=options.split_k,
-            inner_impl="pallas" if cfg.use_pallas else "ref", **plan_kw)
+        o, k_pages, v_pages, kg_pages, k_scale, v_scale, idx = \
+            sharded_paged_decode(
+                qg, qgrp, kr[:, 0], v[:, 0], k_pages, v_pages, kg_pages,
+                page_table, cur_len, active, p["gate"]["wk"], mesh=mesh,
+                cfg=cfg.gate, rope_theta=cfg.rope_theta,
+                max_selected=options.max_selected(cfg),
+                budget_blocks=budget_blocks, split_k=options.split_k,
+                inner_impl="pallas" if cfg.use_pallas else "ref",
+                k_scale=k_scale, v_scale=v_scale, **plan_kw)
         new_len = cur_len + active.astype(jnp.int32)
         aux = (_selection_aux(idx, kc.visible_blocks(
                    jnp.maximum(new_len, 1), ps), npt)
@@ -887,7 +897,8 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         if options.track_evictions:
             aux = aux + (_touched_pages(idx, npt),)
         out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-        ret = (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages), aux)
+        ret = (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages,
+                     k_scale, v_scale), aux)
         return ret + (idx,) if stage is not None else ret
 
     from repro.serve import paging as pg
@@ -896,17 +907,25 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
     # policy that reads them (append skips the gate projection on None);
     # under a plan-carrying schedule the advance is further gated to
     # selecting layers (cond on the stage id, below)
-    k_pages, v_pages, kg_pages = pg.append_token_paged(
-        k_pages, v_pages, kg_pages, kr[:, 0], v[:, 0], page_table, cur_len,
-        active,
-        p.get("gate") if (policy.needs_gate and not staged) else None,
-        cfg.gate, rope_theta=cfg.rope_theta)
+    gate_for_append = \
+        p.get("gate") if (policy.needs_gate and not staged) else None
+    if k_scale is not None:
+        k_pages, v_pages, kg_pages, k_scale, v_scale = \
+            pg.append_token_paged_quant(
+                k_pages, v_pages, kg_pages, k_scale, v_scale, kr[:, 0],
+                v[:, 0], page_table, cur_len, active, gate_for_append,
+                cfg.gate, rope_theta=cfg.rope_theta)
+    else:
+        k_pages, v_pages, kg_pages = pg.append_token_paged(
+            k_pages, v_pages, kg_pages, kr[:, 0], v[:, 0], page_table,
+            cur_len, active, gate_for_append, cfg.gate,
+            rope_theta=cfg.rope_theta)
     # ... and the min/max metadata page rows only for the policy that
     # reads THEM (QuestPolicy): finalize a page's row when it fills
     if policy.needs_meta and kmin_pages is not None and not staged:
         kmin_pages, kmax_pages = pg.append_meta_paged(
             kmin_pages, kmax_pages, k_pages, page_table, cur_len, active,
-            ps)
+            ps, k_scale=k_scale)
     new_len = cur_len + active.astype(jnp.int32)
 
     if staged:
@@ -919,12 +938,13 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                 do_select,
                 lambda kgp: pg.finalize_kg_paged(
                     k_pages, kgp, page_table, cur_len, active, p["gate"],
-                    cfg.gate, rope_theta=cfg.rope_theta),
+                    cfg.gate, rope_theta=cfg.rope_theta, k_scale=k_scale),
                 lambda kgp: kgp, kg_pages)
         if policy.needs_meta and kmin_pages is not None:
             def _adv_meta(mn, mx):
                 return pg.append_meta_paged(mn, mx, k_pages, page_table,
-                                            cur_len, active, ps)
+                                            cur_len, active, ps,
+                                            k_scale=k_scale)
             kmin_pages, kmax_pages = jax.lax.cond(
                 do_select, _adv_meta, lambda mn, mx: (mn, mx),
                 kmin_pages, kmax_pages)
@@ -932,7 +952,8 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
                               gate_params=p.get("gate"), kg_pages=kg_pages,
                               k_pages=k_pages, page_table=page_table,
-                              kmin_pages=kmin_pages, kmax_pages=kmax_pages)
+                              kmin_pages=kmin_pages, kmax_pages=kmax_pages,
+                              k_scale_pages=k_scale)
 
         def _fresh(cur):
             del cur
@@ -953,12 +974,13 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         def _run_sparse(_):
             o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx,
                                         pt_kv, new_len, block_size=ps,
-                                        impl=options.kernel_impl)
+                                        impl=options.kernel_impl,
+                                        k_scales=k_scale, v_scales=v_scale)
             return o.reshape(b, 1, hkv * g, dh)
 
         def _run_dense(_):
-            k_ct = pg.gather_kv(k_pages, pt_kv)
-            v_ct = pg.gather_kv(v_pages, pt_kv)
+            k_ct = pg.gather_kv(k_pages, pt_kv, k_scale)
+            v_ct = pg.gather_kv(v_pages, pt_kv, v_scale)
             return decode_attention(
                 qr, k_ct, v_ct, new_len,
                 logit_softcap=cfg.attn_logit_softcap).reshape(
@@ -977,14 +999,15 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                             _touched_pages(idx, npt))
             aux = aux + (tch,)
         out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-        return (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages),
-                aux, idx)
+        return (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages,
+                      k_scale, v_scale), aux, idx)
 
     if sparse_on:
         inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
                               gate_params=p.get("gate"), kg_pages=kg_pages,
                               k_pages=k_pages, page_table=page_table,
-                              kmin_pages=kmin_pages, kmax_pages=kmax_pages)
+                              kmin_pages=kmin_pages, kmax_pages=kmax_pages,
+                              k_scale_pages=k_scale)
         idx = policy.select(inp, cfg, impl=select_impl(options.kernel_impl),
                             max_selected=options.max_selected(cfg),
                             unify_heads=options.schedule.unify_heads)
@@ -995,7 +1018,8 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         qgrp = qr[:, 0].reshape(b, hkv, g, dh)
         o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx, pt_kv,
                                     new_len, block_size=ps,
-                                    impl=options.kernel_impl)
+                                    impl=options.kernel_impl,
+                                    k_scales=k_scale, v_scales=v_scale)
         o = o.reshape(b, 1, hkv * g, dh)
         aux = (_selection_aux(idx, kc.visible_blocks(
                    jnp.maximum(new_len, 1), ps), npt)
@@ -1003,8 +1027,8 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         if options.track_evictions:
             aux = aux + (_touched_pages(idx, npt),)
     else:
-        k_ct = pg.gather_kv(k_pages, pt_kv)                # [S,Hkv,npt*ps,Dh]
-        v_ct = pg.gather_kv(v_pages, pt_kv)
+        k_ct = pg.gather_kv(k_pages, pt_kv, k_scale)       # [S,Hkv,npt*ps,Dh]
+        v_ct = pg.gather_kv(v_pages, pt_kv, v_scale)
         o = decode_attention(qr, k_ct, v_ct, new_len,
                              logit_softcap=cfg.attn_logit_softcap)
         aux = (_dense_aux(new_len, ps) if options.measure_sparsity
@@ -1012,7 +1036,8 @@ def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
         if options.track_evictions:
             aux = aux + (_dense_touched(new_len, ps, npt),)
     out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-    ret = (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages), aux)
+    ret = (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages,
+                 k_scale, v_scale), aux)
     # an ungated layer under a plan-carrying schedule: dense fallback, the
     # plan passes through untouched (same contract as attention_decode)
     return ret + (plan,) if stage is not None else ret
@@ -1022,14 +1047,15 @@ def block_decode_paged(p: Params, x1, cfg: ModelConfig, layer_pages,
                        page_table, cur_len, active, *,
                        options: DecodeOptions, budget_blocks=None,
                        shard=None, stage=None, plan=None):
-    k_pages, v_pages, kg_pages, kmin_pages, kmax_pages = layer_pages
+    (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages,
+     k_scale, v_scale) = layer_pages
     h = rms_norm(p["ln1"], x1, cfg.norm_eps)
     ret = attention_decode_paged(
         p["attn"], h, cfg, k_pages=k_pages, v_pages=v_pages,
         kg_pages=kg_pages, page_table=page_table, cur_len=cur_len,
         active=active, options=options, budget_blocks=budget_blocks,
-        kmin_pages=kmin_pages, kmax_pages=kmax_pages, shard=shard,
-        stage=stage, plan=plan)
+        kmin_pages=kmin_pages, kmax_pages=kmax_pages, k_scale=k_scale,
+        v_scale=v_scale, shard=shard, stage=stage, plan=plan)
     attn_out, new_pages, aux = ret[:3]
     x1 = x1 + attn_out
     h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)

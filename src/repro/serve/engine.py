@@ -366,7 +366,8 @@ class DecodeEngine:
                       else n_slots * npt)
         pages = pg.init_pages(cfg, num_pages, nl,
                               with_meta=self.options.policy.needs_meta,
-                              ghost_rows=ghosts)
+                              ghost_rows=ghosts,
+                              quantize=self.options.quantize)
         mesh = getattr(self.shard, "mesh", None)
         if mesh is not None and self.options.kernel_impl == "sharded":
             # paged x sharded: keep the pools resident head-sharded so the
@@ -388,8 +389,7 @@ class DecodeEngine:
             evmgr = EvictionManager(
                 sched, swap, num_phys=num_pages, ghost_rows=ghosts,
                 page_size=ps,
-                page_bytes=(pages.k_pages.nbytes + pages.v_pages.nbytes)
-                // num_pages,
+                page_bytes=EvictionManager.page_restore_bytes(pages),
                 always_first_block=cfg.gate.always_first_block,
                 config=eviction)
 
@@ -441,12 +441,14 @@ class DecodeEngine:
             # power-of-two id padding (trash-page ids): bounds the jit
             # cache of extract/restore to O(log pool) programs; re-admission
             # pads the same n_content to the same bucket, so shapes match
-            k, v, kg, kmin, kmax = pg.extract_pages(
+            k, v, kg, kmin, kmax, k_sc, v_sc = pg.extract_pages(
                 pages, pg.pad_page_ids(phys_ids))
             k, v = np.array(k), np.array(v)
             kg = None if kg is None else np.array(kg)
             kmin = None if kmin is None else np.array(kmin)
             kmax = None if kmax is None else np.array(kmax)
+            k_sc = None if k_sc is None else np.array(k_sc)
+            v_sc = None if v_sc is None else np.array(v_sc)
             reason = None
             if evmgr is not None:
                 blocks = evmgr.evicted.pop(req.rid, None) or {}
@@ -464,12 +466,16 @@ class DecodeEngine:
                     if kmin is not None and pe.kmin is not None:
                         kmin[:, lb] = pe.kmin[:, 0]
                         kmax[:, lb] = pe.kmax[:, 0]
+                    if k_sc is not None and pe.k_scale is not None:
+                        k_sc[:, lb] = pe.k_scale[:, 0]
+                        v_sc[:, lb] = pe.v_scale[:, 0]
             if reason is None:
                 try:
                     swap.put(req.rid, SwapEntry(
                         k=k, v=v, kg=kg,
                         token=int(token_buf[req.slot]),
-                        cur_len=req.swap_len, kmin=kmin, kmax=kmax))
+                        cur_len=req.swap_len, kmin=kmin, kmax=kmax,
+                        k_scale=k_sc, v_scale=v_sc))
                 except SwapError:
                     reason = "swap_put_failed"
             if reason is not None:
@@ -487,7 +493,8 @@ class DecodeEngine:
         # reserve admission never grows: every reuse goes through
         # scatter_prefill (which zeroes the Kg/meta rows itself) — no sweeps
         gate_paged = admission == "lazy" and (
-            pages.kg_pages is not None or pages.kmin_pages is not None)
+            pages.kg_pages is not None or pages.kmin_pages is not None
+            or pages.k_scale_pages is not None)
 
         def sweep_dirty(ids) -> None:
             nonlocal pages, dirty
@@ -563,7 +570,11 @@ class DecodeEngine:
                         None if entry.kmin is None
                         else jnp.asarray(entry.kmin),
                         None if entry.kmax is None
-                        else jnp.asarray(entry.kmax))
+                        else jnp.asarray(entry.kmax),
+                        k_scale=None if entry.k_scale is None
+                        else jnp.asarray(entry.k_scale),
+                        v_scale=None if entry.v_scale is None
+                        else jnp.asarray(entry.v_scale))
                     token_buf[req.slot] = entry.token
                     req.swapped = False
                 else:

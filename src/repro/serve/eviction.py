@@ -89,9 +89,14 @@ class EvictionManager:
         self.P = num_phys                  # table ids >= P are ghosts
         self.page_size = page_size
         # cost-of-restore victim model: score = EMA attention mass x the
-        # PCIe restore cost. With uniform page geometry the cost term is
-        # constant, so ordering degenerates to coldest-first — kept in the
-        # score so heterogeneous pools (e.g. quantized tiers) slot in
+        # PCIe restore cost. ``page_bytes`` must be the victim page's
+        # ACTUAL restore traffic (``page_restore_bytes`` — K/V page bytes
+        # at the pool dtype plus every per-page metadata row that rides
+        # the PageEntry), not an fp-assumed constant: int8 pools (ISSUE 9)
+        # restore ~4x cheaper and their pages should lose eviction ties
+        # against costlier fp tiers accordingly. With uniform page
+        # geometry within one pool the cost term is constant, so ordering
+        # degenerates to coldest-first.
         self.restore_cost_s = page_bytes / PCIE_BW
         self.always_first_block = always_first_block
         self.config = config
@@ -106,6 +111,21 @@ class EvictionManager:
         self.n_evicted = 0
         self.n_page_restores = 0
         self.n_replays = 0
+
+    @staticmethod
+    def page_restore_bytes(pages: pg.PagedPages) -> int:
+        """Bytes that cross PCIe to restore ONE evicted page: its K/V page
+        contents at the pool's ACTUAL dtype plus every per-page metadata
+        row that rides the ``PageEntry`` (kg, kmin/kmax, int8 quant
+        scales). Each pool is ``[L, P, ...]`` with the page id on axis 1,
+        so one page's cut across all layers is ``nbytes // P`` — pools
+        with ghost rows (kg/kmin/kmax) divide by their own extended row
+        count, which is exactly the per-row byte size. This replaces the
+        old fp-assumed ``(k+v)//num_pages`` constant: int8 pools
+        (ISSUE 9) are ~4x cheaper to restore and the victim model's cost
+        term must reflect that."""
+        return sum(pool.nbytes // pool.shape[1] for pool in pages
+                   if pool is not None)
 
     # -- victim model -------------------------------------------------------
 
@@ -169,13 +189,15 @@ class EvictionManager:
             if not self.ghost_free:
                 break
             phys = req.pages[lb]
-            k, v, kg, kmin, kmax = pg.extract_pages(
+            k, v, kg, kmin, kmax, k_sc, v_sc = pg.extract_pages(
                 pages, pg.pad_page_ids([phys]))
             entry = PageEntry(
                 k=np.asarray(k[:, :1]), v=np.asarray(v[:, :1]),
                 kg=None if kg is None else np.asarray(kg[:, :1]),
                 kmin=None if kmin is None else np.asarray(kmin[:, :1]),
-                kmax=None if kmax is None else np.asarray(kmax[:, :1]))
+                kmax=None if kmax is None else np.asarray(kmax[:, :1]),
+                k_scale=None if k_sc is None else np.asarray(k_sc[:, :1]),
+                v_scale=None if v_sc is None else np.asarray(v_sc[:, :1]))
             try:
                 self.swap.put(("page", req.rid, lb), entry)
             except SwapError:
@@ -219,7 +241,11 @@ class EvictionManager:
                 None if pe.kg is None else jnp.asarray(pe.kg),
                 pg.pad_page_ids([phys]),
                 None if pe.kmin is None else jnp.asarray(pe.kmin),
-                None if pe.kmax is None else jnp.asarray(pe.kmax))
+                None if pe.kmax is None else jnp.asarray(pe.kmax),
+                k_scale=None if pe.k_scale is None
+                else jnp.asarray(pe.k_scale),
+                v_scale=None if pe.v_scale is None
+                else jnp.asarray(pe.v_scale))
             req.pages[lb] = phys
             self.sched.page_table[req.slot, lb] = phys
             del self.evicted[req.rid][lb]

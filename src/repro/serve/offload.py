@@ -99,14 +99,19 @@ class SwapEntry(NamedTuple):
     it stopped. ``kmin``/``kmax`` are the selection-metadata page rows
     (metadata-reading policies only) — they round-trip bitwise with the
     rest so a resumed Quest decode selects exactly what an unpreempted
-    one would."""
-    k: np.ndarray                 # [L, n_pages, Hkv, ps, Dh]
-    v: np.ndarray                 # [L, n_pages, Hkv, ps, Dh]
+    one would. ``k_scale``/``v_scale`` (int8 pools, ISSUE 9) carry the
+    dequant scale rows next to the RAW int8 page bytes — the swap round
+    trip is bitwise on the stored representation and the entry is ~4x
+    smaller, which the byte-based tier accounting picks up for free."""
+    k: np.ndarray                 # [L, n_pages, Hkv, ps, Dh] (int8 if quant)
+    v: np.ndarray                 # [L, n_pages, Hkv, ps, Dh] (int8 if quant)
     kg: Optional[np.ndarray]      # [L, n_pages, Hkv, Dg] | None
     token: int                    # last sampled token (re-fed on resume)
     cur_len: int                  # sequence length at preemption
     kmin: Optional[np.ndarray] = None   # [L, n_pages, Hkv, Dh] | None
     kmax: Optional[np.ndarray] = None   # [L, n_pages, Hkv, Dh] | None
+    k_scale: Optional[np.ndarray] = None  # [L, n_pages, Hkv, 1] | None
+    v_scale: Optional[np.ndarray] = None  # [L, n_pages, Hkv, 1] | None
 
 
 class PageEntry(NamedTuple):
@@ -115,11 +120,13 @@ class PageEntry(NamedTuple):
     evict→restore round trip is bitwise-lossless, exactly like whole-
     request preemption. Keyed in ``HostSwapSpace`` as
     ``("page", rid, logical_block)``."""
-    k: np.ndarray                 # [L, 1, Hkv, ps, Dh]
-    v: np.ndarray                 # [L, 1, Hkv, ps, Dh]
+    k: np.ndarray                 # [L, 1, Hkv, ps, Dh] (int8 if quant)
+    v: np.ndarray                 # [L, 1, Hkv, ps, Dh] (int8 if quant)
     kg: Optional[np.ndarray] = None     # [L, 1, Hkv, Dg] | None
     kmin: Optional[np.ndarray] = None   # [L, 1, Hkv, Dh] | None
     kmax: Optional[np.ndarray] = None   # [L, 1, Hkv, Dh] | None
+    k_scale: Optional[np.ndarray] = None  # [L, 1, Hkv, 1] | None
+    v_scale: Optional[np.ndarray] = None  # [L, 1, Hkv, 1] | None
 
 
 @dataclasses.dataclass(frozen=True)

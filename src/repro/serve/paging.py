@@ -16,8 +16,21 @@ page-pool-sized transpose anywhere on the hot path):
   k_pages / v_pages  [L, P, Hkv, ps, Dh]   post-rope keys / values
   kg_pages           [L, P, Hkv, Dg]       gate K-compression twin
   kmin/kmax_pages    [L, P, Hkv, Dh] f32   selection-metadata twin (Quest)
+  k/v_scale_pages    [L, P, Hkv, 1]  f32   per-page per-head dequant scales
+                                           (int8 pools only, ISSUE 9)
   page_table         [n_slots, npt] int32  physical ids; NULL_PAGE = empty
   cur_len / active   [n_slots]             per-slot ragged lengths
+
+Quantized pools (``init_pages(..., quantize="int8")``): K/V pages hold
+symmetric int8 (value = int8 * scale, scale = abs-max/127 per page per KV
+head) and the scale rows ride the metacache pattern — one f32 row per
+physical page, zeroed on lazy growth, rewritten on every append to the
+trailing page and frozen once the page completes. Dequant happens inside
+the block gather/loop of the decode kernels (fused — no fp copy of any
+cache-sized array ever materializes); swap/evict move the int8 bytes plus
+the scale rows, so host/disk budgets shrink ~4x. ``quantize=None``
+keeps the fp pools and takes the original code path verbatim (the
+``tests/golden_policy.npz`` bitwise contract).
 
 Physical page 0 is reserved as the null/trash page: unallocated table
 entries point at it and writes for inactive slots are routed there, so the
@@ -51,17 +64,53 @@ class PagedPages(NamedTuple):
     metadata cache (core.metacache): ONE min/max row per physical page
     (page == gate block), float32 for bitwise parity with the recompute
     reference. Allocated only for metadata-reading policies (QuestPolicy)
-    and swept/swapped alongside ``kg_pages``."""
+    and swept/swapped alongside ``kg_pages``.
+
+    ``k_scale_pages``/``v_scale_pages`` (ISSUE 9) are the dequant scales of
+    int8 K/V pools: one f32 row per physical page per KV head (value =
+    int8 * scale). None for fp pools. Rank-4 on purpose — the existing
+    ``distributed.sharding.paged_pool_pspecs`` ndim rule shards them over
+    KV heads alongside the pools they describe."""
     k_pages: jnp.ndarray                 # [L, P, Hkv, ps, Dh]  (head-major)
     v_pages: jnp.ndarray                 # [L, P, Hkv, ps, Dh]
     kg_pages: Optional[jnp.ndarray]      # [L, P, Hkv, Dg]
     kmin_pages: Optional[jnp.ndarray] = None   # [L, P, Hkv, Dh] float32
     kmax_pages: Optional[jnp.ndarray] = None   # [L, P, Hkv, Dh] float32
+    k_scale_pages: Optional[jnp.ndarray] = None   # [L, P, Hkv, 1] float32
+    v_scale_pages: Optional[jnp.ndarray] = None   # [L, P, Hkv, 1] float32
+
+
+INT8_MAX = 127.0
+
+
+def quantize_block(x: jnp.ndarray, valid: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-(page, head) int8 quantization of fp page contents.
+
+    x [..., ps, Dh] fp; valid bool broadcastable against x, masking the
+    rows that hold real tokens (recycled pages carry the previous tenant's
+    garbage — it must not inflate the scale). Returns (int8 page, f32
+    scale [..., 1] over the last two axes collapsed): scale = abs-max/127
+    over the valid region, 1.0 for an all-zero/empty region so dequant is
+    exact there.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.where(valid, jnp.abs(xf), 0.0), axis=(-2, -1))
+    scale = jnp.where(amax > 0, amax / INT8_MAX, 1.0)[..., None]
+    q = jnp.clip(jnp.round(xf / scale[..., None]),
+                 -INT8_MAX, INT8_MAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_block(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    """int8 page [..., ps, Dh] x scale [..., 1] -> f32 page."""
+    return q.astype(jnp.float32) * scale[..., None]
 
 
 def init_pages(cfg: ModelConfig, num_pages: int, n_layers: int,
                dtype=None, with_meta: bool = False,
-               ghost_rows: int = 0) -> PagedPages:
+               ghost_rows: int = 0,
+               quantize: Optional[str] = None) -> PagedPages:
     """Allocate the pools. ``ghost_rows`` (RaaS eviction, ISSUE 7) extends
     ONLY the gate/metadata pools (kg/kmin/kmax) by extra rows with ids in
     ``[num_pages, num_pages + ghost_rows)``: an evicted page's K/V leaves
@@ -71,7 +120,14 @@ def init_pages(cfg: ModelConfig, num_pages: int, n_layers: int,
     identical to the unevicted run — while the K/V rows are reclaimed.
     K/V pools never grow: attention consumers clamp ghost ids to the pool
     (optimistic execution; a selected-evicted block is detected via the
-    touched-pages telemetry and replayed after restore)."""
+    touched-pages telemetry and replayed after restore).
+
+    ``quantize="int8"`` (ISSUE 9) allocates int8 K/V pools plus the f32
+    scale-row pools ([L, P, Hkv, 1], no ghost rows — an evicted page's
+    scale rides its host ``PageEntry``, not a ghost row). The gate /
+    metadata pools stay f32: they are ~ps*Dh/Dg smaller than K/V and
+    keeping them full-precision keeps block SELECTION independent of the
+    attention-value quantization."""
     dt = dtype or jnp.dtype(cfg.dtype)
     ps = cfg.gate.block_size
     hkv, dh = cfg.n_kv_heads, cfg.resolved_head_dim
@@ -83,10 +139,21 @@ def init_pages(cfg: ModelConfig, num_pages: int, n_layers: int,
         # step, and XLA rejects donating one buffer twice
         return (jnp.zeros((n_layers, gate_rows, hkv, dh), jnp.float32)
                 if with_meta else None)
+    if quantize is not None:
+        if quantize != "int8":
+            raise ValueError(f"quantize must be None or 'int8': {quantize!r}")
+        kv_dt = jnp.int8
+        def scale():
+            # distinct buffers: same donation rule as meta() above
+            return jnp.zeros((n_layers, num_pages, hkv, 1), jnp.float32)
+        k_scale, v_scale = scale(), scale()
+    else:
+        kv_dt, k_scale, v_scale = dt, None, None
     return PagedPages(
-        k_pages=jnp.zeros((n_layers, num_pages, hkv, ps, dh), dt),
-        v_pages=jnp.zeros((n_layers, num_pages, hkv, ps, dh), dt),
-        kg_pages=kg, kmin_pages=meta(), kmax_pages=meta())
+        k_pages=jnp.zeros((n_layers, num_pages, hkv, ps, dh), kv_dt),
+        v_pages=jnp.zeros((n_layers, num_pages, hkv, ps, dh), kv_dt),
+        kg_pages=kg, kmin_pages=meta(), kmax_pages=meta(),
+        k_scale_pages=k_scale, v_scale_pages=v_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("block_size",),
@@ -126,10 +193,25 @@ def scatter_prefill(pages: PagedPages, k_cache: jnp.ndarray,
             cache[:, 0].reshape(nl, hkv, n_cache, block_size, dh), 1, 2)
         return rows[:, src]
 
-    k_pages = pages.k_pages.at[:, page_ids].set(
-        page_rows(k_cache).astype(pages.k_pages.dtype))
-    v_pages = pages.v_pages.at[:, page_ids].set(
-        page_rows(v_cache).astype(pages.v_pages.dtype))
+    if pages.k_scale_pages is not None:
+        # int8 pools (ISSUE 9): quantize each scattered page per (page,
+        # head) over its VALID token rows only — ids beyond the prompt get
+        # clamp-gathered garbage whose abs-max must not pollute the scale.
+        tok = (jnp.arange(n_ids)[:, None] * block_size
+               + jnp.arange(block_size)[None, :])          # [n_ids, ps]
+        valid = (tok < length)[None, :, None, :, None]     # -> page axes
+        kq, k_sc = quantize_block(page_rows(k_cache), valid)
+        vq, v_sc = quantize_block(page_rows(v_cache), valid)
+        k_pages = pages.k_pages.at[:, page_ids].set(kq)
+        v_pages = pages.v_pages.at[:, page_ids].set(vq)
+        k_scale_pages = pages.k_scale_pages.at[:, page_ids].set(k_sc)
+        v_scale_pages = pages.v_scale_pages.at[:, page_ids].set(v_sc)
+    else:
+        k_pages = pages.k_pages.at[:, page_ids].set(
+            page_rows(k_cache).astype(pages.k_pages.dtype))
+        v_pages = pages.v_pages.at[:, page_ids].set(
+            page_rows(v_cache).astype(pages.v_pages.dtype))
+        k_scale_pages = v_scale_pages = None
     nbc = length // block_size           # traced: complete prompt blocks
 
     def row_scatter(pool, rows_cache):
@@ -152,7 +234,8 @@ def scatter_prefill(pages: PagedPages, k_cache: jnp.ndarray,
     if kmin_pages is not None:
         kmin_pages = row_scatter(kmin_pages, kmin_cache)
         kmax_pages = row_scatter(kmax_pages, kmax_cache)
-    return PagedPages(k_pages, v_pages, kg_pages, kmin_pages, kmax_pages)
+    return PagedPages(k_pages, v_pages, kg_pages, kmin_pages, kmax_pages,
+                      k_scale_pages, v_scale_pages)
 
 
 def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
@@ -191,10 +274,65 @@ def append_token_paged(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     return k_pages, v_pages, kg_pages
 
 
+def append_token_paged_quant(k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                             kg_pages: Optional[jnp.ndarray],
+                             k_scale: jnp.ndarray, v_scale: jnp.ndarray,
+                             kr_new: jnp.ndarray, v_new: jnp.ndarray,
+                             page_table: jnp.ndarray, cur_len: jnp.ndarray,
+                             active: jnp.ndarray,
+                             gate_params: Optional[Dict],
+                             cfg: GateConfig, *, rope_theta: float = 10000.0
+                             ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                        Optional[jnp.ndarray],
+                                        jnp.ndarray, jnp.ndarray]:
+    """Int8 twin of ``append_token_paged`` (ISSUE 9).
+
+    The trailing partial page is REQUANTIZED per append: dequant it with
+    its stored scale row, insert the new fp token row, recompute the
+    abs-max scale over the now-valid rows, and write the whole int8 page
+    plus its scale row back. One physical page per slot is read and
+    written — O(page_size), the same cost class as the Kg finalize, and
+    the only page whose bytes ever change; completed pages' int8 contents
+    are frozen. Inactive slots route to the null/trash page like the fp
+    path. Returns (k_pages, v_pages, kg_pages, k_scale, v_scale); the Kg
+    row of a just-completed page is finalized from the DEQUANTIZED keys
+    (selection consumes what attention will actually read).
+    """
+    ps = cfg.block_size
+    n_slots = cur_len.shape[0]
+    sidx = jnp.arange(n_slots)
+    logical = cur_len // ps
+    off = cur_len % ps
+    phys = page_table[sidx, logical]                       # [S]
+    phys = jnp.where(active, phys, NULL_PAGE)
+    onehot = jnp.arange(ps)[None, :] == off[:, None]       # [S, ps]
+    valid = (jnp.arange(ps)[None, :] <= off[:, None]
+             )[:, None, :, None]                           # [S,1,ps,1]
+
+    def requant(pages_q, scale_pool, new_row):
+        page = dequantize_block(pages_q[phys], scale_pool[phys])
+        page = jnp.where(onehot[:, None, :, None],
+                         new_row.astype(jnp.float32)[:, :, None, :], page)
+        q, sc = quantize_block(page, valid)
+        return pages_q.at[phys].set(q), scale_pool.at[phys].set(sc)
+
+    k_pages, k_scale = requant(k_pages, k_scale, kr_new)
+    v_pages, v_scale = requant(v_pages, v_scale, v_new)
+
+    if kg_pages is None or gate_params is None:
+        return k_pages, v_pages, kg_pages, k_scale, v_scale
+
+    kg_pages = finalize_kg_paged(k_pages, kg_pages, page_table, cur_len,
+                                 active, gate_params, cfg,
+                                 rope_theta=rope_theta, k_scale=k_scale)
+    return k_pages, v_pages, kg_pages, k_scale, v_scale
+
+
 def finalize_kg_paged(k_pages: jnp.ndarray, kg_pages: jnp.ndarray,
                       page_table: jnp.ndarray, cur_len: jnp.ndarray,
                       active: jnp.ndarray, gate_params: Dict,
-                      cfg: GateConfig, *, rope_theta: float = 10000.0
+                      cfg: GateConfig, *, rope_theta: float = 10000.0,
+                      k_scale: Optional[jnp.ndarray] = None
                       ) -> jnp.ndarray:
     """Finalize the Kg row of each slot's just-completed page.
 
@@ -205,7 +343,8 @@ def finalize_kg_paged(k_pages: jnp.ndarray, kg_pages: jnp.ndarray,
     incomplete slots route the write to the null page. Split out from
     ``append_token_paged`` so a SelectionSchedule can gate the Kg advance
     (selecting layers only) independently of the K/V append, which always
-    happens.
+    happens. ``k_scale`` (int8 pools) dequantizes the gathered page before
+    pooling — O(page_size), not cache-sized.
     """
     ps = cfg.block_size
     sidx = jnp.arange(cur_len.shape[0])
@@ -221,7 +360,10 @@ def finalize_kg_paged(k_pages: jnp.ndarray, kg_pages: jnp.ndarray,
                                  lg * ps, lg, cfg,
                                  is_roped=True, rope_theta=rope_theta)
 
-    kg_new = jax.vmap(one_slot)(k_pages[phys], logical)    # [S, Hkv, Dg]
+    blk = k_pages[phys]                                    # [S, Hkv, ps, Dh]
+    if k_scale is not None:
+        blk = dequantize_block(blk, k_scale[phys])
+    kg_new = jax.vmap(one_slot)(blk, logical)              # [S, Hkv, Dg]
     phys_kg = jnp.where(completed, phys, NULL_PAGE)
     kg_cur = kg_pages[phys_kg]
     kg_write = jnp.where(completed[:, None, None],
@@ -232,7 +374,8 @@ def finalize_kg_paged(k_pages: jnp.ndarray, kg_pages: jnp.ndarray,
 def append_meta_paged(kmin_pages: jnp.ndarray, kmax_pages: jnp.ndarray,
                       k_pages: jnp.ndarray, page_table: jnp.ndarray,
                       cur_len: jnp.ndarray, active: jnp.ndarray,
-                      page_size: int
+                      page_size: int,
+                      k_scale: Optional[jnp.ndarray] = None
                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """ONE layer's paged twin of ``metacache.update_metacache``.
 
@@ -240,7 +383,8 @@ def append_meta_paged(kmin_pages: jnp.ndarray, kmax_pages: jnp.ndarray,
     slot's page completes ((cur_len+1) % ps == 0) that page's key min/max
     is finalized into its ``kmin_pages``/``kmax_pages`` row — reading
     exactly one physical page per slot (O(page_size), the metadata analog
-    of the Kg finalize). Inactive rows route to the null page.
+    of the Kg finalize). Inactive rows route to the null page. ``k_scale``
+    (int8 pools) dequantizes the gathered page before the min/max.
     """
     ps = page_size
     n_slots = cur_len.shape[0]
@@ -252,6 +396,8 @@ def append_meta_paged(kmin_pages: jnp.ndarray, kmax_pages: jnp.ndarray,
 
     from repro.core.metacache import _block_minmax
     blk = k_pages[phys]                                    # [S, Hkv, ps, Dh]
+    if k_scale is not None:
+        blk = dequantize_block(blk, k_scale[phys])
     mn_new, mx_new = _block_minmax(blk, jnp.ones((1, 1, ps, 1), bool))
     phys_w = jnp.where(completed, phys, NULL_PAGE)
     wm = completed[:, None, None]
@@ -268,16 +414,20 @@ def gather_kg(kg_pages: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
     return jnp.swapaxes(kg_pages[page_table], 1, 2)
 
 
-def gather_kv(pages_1l: jnp.ndarray, page_table: jnp.ndarray) -> jnp.ndarray:
+def gather_kv(pages_1l: jnp.ndarray, page_table: jnp.ndarray,
+              scale_1l: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """[P, Hkv, ps, Dh] x [S, npt] -> head-major contiguous view
     [S, Hkv, npt*ps, Dh].
 
     Dense-attention fallback path (and debugging) ONLY — this materialises
     a cache-sized copy by construction (dense reads the whole cache); the
     sparse hot path never calls it, it gathers selected pages only.
+    ``scale_1l`` [P, Hkv, 1] dequantizes int8 pools during the gather.
     """
     s, npt = page_table.shape
     g = pages_1l[page_table]                 # [S, npt, Hkv, ps, Dh]
+    if scale_1l is not None:
+        g = dequantize_block(g, scale_1l[page_table])
     g = jnp.swapaxes(g, 1, 2)                # [S, Hkv, npt, ps, Dh]
     return g.reshape(s, pages_1l.shape[1], npt * pages_1l.shape[2],
                      pages_1l.shape[3])
@@ -357,6 +507,12 @@ def reset_kg_rows(pages: PagedPages, page_ids: jnp.ndarray) -> PagedPages:
         out = out._replace(
             kmin_pages=out.kmin_pages.at[:, page_ids].set(0.0),
             kmax_pages=out.kmax_pages.at[:, page_ids].set(0.0))
+    if pages.k_scale_pages is not None:
+        # zero scale -> a recycled page's stale int8 bytes dequantize to
+        # exactly 0 until the first append/scatter rewrites the row
+        out = out._replace(
+            k_scale_pages=out.k_scale_pages.at[:, page_ids].set(0.0),
+            v_scale_pages=out.v_scale_pages.at[:, page_ids].set(0.0))
     return out
 
 
@@ -385,12 +541,16 @@ def copy_gate_rows(pages: PagedPages, src_ids: jnp.ndarray,
 @jax.jit
 def extract_pages(pages: PagedPages, page_ids: jnp.ndarray
                   ) -> Tuple[jnp.ndarray, jnp.ndarray, Optional[jnp.ndarray],
+                             Optional[jnp.ndarray], Optional[jnp.ndarray],
                              Optional[jnp.ndarray], Optional[jnp.ndarray]]:
     """Gather one request's pages for swap-out (preemption).
 
     page_ids [n] physical ids in LOGICAL order -> (k [L,n,Hkv,ps,Dh],
     v [L,n,Hkv,ps,Dh], kg [L,n,Hkv,Dg] | None, kmin [L,n,Hkv,Dh] | None,
-    kmax | None). The caller device_gets the result into the host swap
+    kmax | None, k_scale [L,n,Hkv,1] | None, v_scale | None). Int8 pools
+    swap their RAW quantized bytes plus the scale rows — the round trip
+    is bitwise on the stored representation and ~4x cheaper on the host/
+    disk tiers. The caller device_gets the result into the host swap
     space (serve.offload.HostSwapSpace).
     """
     k = pages.k_pages[:, page_ids]
@@ -400,7 +560,11 @@ def extract_pages(pages: PagedPages, page_ids: jnp.ndarray
             if pages.kmin_pages is not None else None)
     kmax = (pages.kmax_pages[:, page_ids]
             if pages.kmax_pages is not None else None)
-    return k, v, kg, kmin, kmax
+    k_scale = (pages.k_scale_pages[:, page_ids]
+               if pages.k_scale_pages is not None else None)
+    v_scale = (pages.v_scale_pages[:, page_ids]
+               if pages.v_scale_pages is not None else None)
+    return k, v, kg, kmin, kmax, k_scale, v_scale
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -408,12 +572,15 @@ def restore_pages(pages: PagedPages, k: jnp.ndarray, v: jnp.ndarray,
                   kg: Optional[jnp.ndarray],
                   page_ids: jnp.ndarray,
                   kmin: Optional[jnp.ndarray] = None,
-                  kmax: Optional[jnp.ndarray] = None) -> PagedPages:
+                  kmax: Optional[jnp.ndarray] = None,
+                  k_scale: Optional[jnp.ndarray] = None,
+                  v_scale: Optional[jnp.ndarray] = None) -> PagedPages:
     """Scatter swapped-out page contents into a fresh set of physical
     pages (re-admission after preemption). The new physical ids may differ
     from the original ones — decode math is placement-invariant (every
     access goes through the page table), so the round trip is bitwise
-    lossless; the selection-metadata rows ride along the same way."""
+    lossless; the selection-metadata and quant-scale rows ride along the
+    same way (int8 pools restore raw bytes + scales, no re-quantization)."""
     k_pages = pages.k_pages.at[:, page_ids].set(
         k.astype(pages.k_pages.dtype))
     v_pages = pages.v_pages.at[:, page_ids].set(
@@ -427,4 +594,9 @@ def restore_pages(pages: PagedPages, k: jnp.ndarray, v: jnp.ndarray,
             kmin.astype(kmin_pages.dtype))
         kmax_pages = kmax_pages.at[:, page_ids].set(
             kmax.astype(kmax_pages.dtype))
-    return PagedPages(k_pages, v_pages, kg_pages, kmin_pages, kmax_pages)
+    k_scale_pages, v_scale_pages = pages.k_scale_pages, pages.v_scale_pages
+    if k_scale_pages is not None and k_scale is not None:
+        k_scale_pages = k_scale_pages.at[:, page_ids].set(k_scale)
+        v_scale_pages = v_scale_pages.at[:, page_ids].set(v_scale)
+    return PagedPages(k_pages, v_pages, kg_pages, kmin_pages, kmax_pages,
+                      k_scale_pages, v_scale_pages)

@@ -264,7 +264,9 @@ def sharded_paged_decode(
         reuse_idx: Optional[jnp.ndarray] = None,   # [S, Hkv, k] carried plan
         do_select: Optional[jnp.ndarray] = None,   # [] bool: fresh vs reuse
         pt_kv: Optional[jnp.ndarray] = None,       # [S, npt] clamped table
-) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        k_scale: Optional[jnp.ndarray] = None,     # [P, Hkv, 1] int8 scales
+        v_scale: Optional[jnp.ndarray] = None,
+) -> Tuple[jnp.ndarray, ...]:
     """One PAGED decode step for ONE layer on a sharded mesh.
 
     Composition rule (the paged x sharded design): the page POOLS (and the
@@ -284,9 +286,18 @@ def sharded_paged_decode(
     analog of the paper's num_split — with ``inner_impl`` picking jnp ref
     (CPU) or the Pallas kernel (TPU).
 
-    Returns (o [S,Hkv,G,Dh], k_pages, v_pages, kg_pages, idx [S,Hkv,k])
-    with pools updated in place (same shardings); ``idx`` is the gathered
-    selection for telemetry.
+    Returns (o [S,Hkv,G,Dh], k_pages, v_pages, kg_pages, k_scale, v_scale,
+    idx [S,Hkv,k]) with pools updated in place (same shardings); ``idx``
+    is the gathered selection for telemetry; the scale slots pass through
+    as None on fp pools.
+
+    ``k_scale``/``v_scale`` [P, Hkv, 1] f32 (int8 pools, ISSUE 9): the
+    dequant scale rows, rank-3 per layer, sharded over KV heads exactly
+    like the Kg pool (``spec_h3``) — the per-head quantization axis is
+    what makes int8 pools compose with head sharding for free. The shard
+    body swaps the append for ``paging.append_token_paged_quant`` and
+    threads the scales into the block-sparse kernels (fused dequant);
+    still zero per-step collectives, and None keeps the fp body verbatim.
 
     ``reuse_idx``/``do_select`` (step-level SelectionSchedule): when given,
     the step blends ``jnp.where(do_select, fresh, reuse_idx)`` INSIDE the
@@ -345,46 +356,66 @@ def sharded_paged_decode(
 
     if pt_kv is None:
         pt_kv = page_table
+    quant = k_scale is not None
 
     def local(qg, qgrp, kr_new, v_new, kp, vp, kgp, pt, ptk, cl, act, bb,
-              wk, *plan):
-        kp, vp, kgp = pg.append_token_paged(
-            kp, vp, kgp, kr_new, v_new, pt, cl, act, {"wk": wk}, cfg,
-            rope_theta=rope_theta)
+              wk, *extra):
+        extra = list(extra)
+        if quant:
+            ksc, vsc = extra[0], extra[1]
+            extra = extra[2:]
+            kp, vp, kgp, ksc, vsc = pg.append_token_paged_quant(
+                kp, vp, kgp, ksc, vsc, kr_new, v_new, pt, cl, act,
+                {"wk": wk}, cfg, rope_theta=rope_theta)
+        else:
+            ksc = vsc = None
+            kp, vp, kgp = pg.append_token_paged(
+                kp, vp, kgp, kr_new, v_new, pt, cl, act, {"wk": wk}, cfg,
+                rope_theta=rope_theta)
         new_len = cl + act.astype(jnp.int32)
         n_valid = kc.visible_blocks(jnp.maximum(new_len, 1), cfg.block_size)
         idx = ops.gate_select_paged(qg, kgp, pt, n_valid, cfg, max_selected,
                                     impl="ref")
-        if plan:
-            reuse, do_sel = plan
+        if extra:
+            reuse, do_sel = extra
             idx = jnp.where(do_sel, idx, reuse)
         cap = jnp.arange(idx.shape[-1])[None, None, :] < bb[:, None, None]
         idx = jnp.where(cap, idx, -1)
         if split_k > 1:
             o = ops.paged_sparse_decode_splitk(
                 qgrp, kp, vp, idx, ptk, new_len, block_size=cfg.block_size,
-                num_splits=split_k, impl=inner_impl)
+                num_splits=split_k, impl=inner_impl,
+                k_scales=ksc, v_scales=vsc)
         else:
             o = ops.paged_sparse_decode(qgrp, kp, vp, idx, ptk, new_len,
                                         block_size=cfg.block_size,
-                                        impl=inner_impl)
-        return o, kp, vp, kgp, idx
+                                        impl=inner_impl,
+                                        k_scales=ksc, v_scales=vsc)
+        out = (o, kp, vp, kgp) + ((ksc, vsc) if quant else ()) + (idx,)
+        return out
 
     in_specs = (spec_h3, spec_h4, spec_h3, spec_h3, spec_h4, spec_h4,
                 spec_h3, rep2, rep2, rep1, rep1, rep1, P(MODEL, None, None))
     args = (qg, qgrp, kr_new, v_new, k_pages, v_pages, kg_pages,
             page_table, pt_kv, cur_len, active, budget_blocks, gate_wk)
+    if quant:
+        in_specs = in_specs + (spec_h3, spec_h3)
+        args = args + (k_scale, v_scale)
     if reuse_idx is not None:
         in_specs = in_specs + (spec_h3, P())
         args = args + (reuse_idx, jnp.asarray(do_select, bool))
-    fn = shard_map(
-        local, mesh, in_specs=in_specs,
-        out_specs=(spec_h4, spec_h4, spec_h4, spec_h3, spec_h3))
-    o, k_pages, v_pages, kg_pages, idx = fn(*args)
+    out_specs = (spec_h4, spec_h4, spec_h4, spec_h3) \
+        + ((spec_h3, spec_h3) if quant else ()) + (spec_h3,)
+    fn = shard_map(local, mesh, in_specs=in_specs, out_specs=out_specs)
+    out = fn(*args)
+    if quant:
+        o, k_pages, v_pages, kg_pages, k_scale, v_scale, idx = out
+    else:
+        o, k_pages, v_pages, kg_pages, idx = out
     # gather o/idx back to replicated (an exact all-gather) BEFORE they
     # feed dense compute: a head-sharded o would make GSPMD partition the
     # wo projection's contraction dim (psum -> reordered reduction ->
     # last-bit drift); the pools stay head-sharded for the next step
     o = jax.lax.with_sharding_constraint(o, rep)
     idx = jax.lax.with_sharding_constraint(idx, rep)
-    return o, k_pages, v_pages, kg_pages, idx
+    return o, k_pages, v_pages, kg_pages, k_scale, v_scale, idx

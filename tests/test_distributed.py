@@ -43,6 +43,13 @@ def test_paged_sharded_parity():
     _run("paged_sharded_parity")
 
 
+def test_paged_sharded_quant_parity():
+    """ISSUE 9 acceptance: int8 pools on the paged x sharded path — scale
+    rows head-sharded like Kg, fused dequant inside each shard — stay
+    BITWISE equal to the unsharded int8 engine, also under preemption."""
+    _run("paged_sharded_quant_parity")
+
+
 def test_paged_sharded_eviction_parity():
     """ISSUE 7 acceptance: page eviction at ~half pool on the sharded
     paged engine stays bitwise equal to the ample sharded run."""
