@@ -72,10 +72,11 @@ def _remat(fn, cfg):
     return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
 
 
-def _mamba_scan(x, blocks, cfg, collect_state=False):
+def _mamba_scan(x, blocks, cfg, collect_state=False, lengths=None):
     def body(x, bp):
         y, st = mamba.mamba2_full(bp["mixer"],
-                                  rms_norm(bp["ln"], x, cfg.norm_eps), cfg)
+                                  rms_norm(bp["ln"], x, cfg.norm_eps), cfg,
+                                  lengths=lengths)
         return x + y, (st if collect_state else None)
     return layer_scan(_remat(body, cfg), x, blocks,
                       unroll=not cfg.scan_layers)
@@ -138,16 +139,25 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int
 
 def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int,
                shard=None, options=None):
-    # ``options`` accepted for ModelApi uniformity; the hybrid family has
-    # no selection-metadata cache (QuestPolicy raises with guidance)
+    """``options`` accepted for ModelApi uniformity; the hybrid family has
+    no selection-metadata cache (QuestPolicy raises with guidance).
+
+    ``batch["lengths"]`` [B] (optional): true per-row lengths for bucketed
+    right-padded prompts (PR 10, mirrors ``tf.lm_prefill``). Causality
+    keeps the attention rows exact; pad tokens are an exact identity on
+    the mamba2 recurrences (``mamba._mask_dt``); Kg rows whose block
+    contains any pad token are zeroed; the logits row is gathered at
+    ``lengths - 1``."""
     n_units, period, rem = _plan(cfg)
     tokens = batch["tokens"]
     b, l = tokens.shape
+    lengths = batch.get("lengths")                       # [B] | None
     x = jnp.take(params["embed"]["w"], tokens, axis=0)
     pos = jnp.broadcast_to(jnp.arange(l), (b, l))
 
     def unit(x, unit_blocks):
-        x, mstates = _mamba_scan(x, unit_blocks, cfg, collect_state=True)
+        x, mstates = _mamba_scan(x, unit_blocks, cfg, collect_state=True,
+                                 lengths=lengths)
         x, _, _, cache = tf.block_fwd_full(
             params["shared_attn"], x, cfg, rope_positions=pos,
             segment_ids=None, distill=False, collect_cache=True, shard=shard)
@@ -159,7 +169,8 @@ def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int,
     conv = conv_u.reshape((-1,) + conv_u.shape[2:])
     h = h_u.reshape((-1,) + h_u.shape[2:])
     if rem:
-        x, tail_states = _mamba_scan(x, params["tail"], cfg, collect_state=True)
+        x, tail_states = _mamba_scan(x, params["tail"], cfg,
+                                     collect_state=True, lengths=lengths)
         conv = jnp.concatenate([conv, tail_states[0]], axis=0)
         h = jnp.concatenate([h, tail_states[1]], axis=0)
 
@@ -170,6 +181,8 @@ def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int,
                       ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
     v_cache = jnp.pad(jnp.moveaxis(v, 3, 2),
                       ((0, 0), (0, 0), (0, 0), (0, pad), (0, 0)))
+    cur_len = (jnp.full((b,), l, jnp.int32) if lengths is None
+               else lengths.astype(jnp.int32))
     kg_cache = kg_n = None
     if kg is not None:
         nb_max = max_len // cfg.gate.block_size
@@ -177,15 +190,23 @@ def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int,
         kg_cache = jnp.pad(jnp.moveaxis(kg, 3, 2),
                            ((0, 0), (0, 0), (0, 0), (0, nb_max - nb),
                             (0, 0))).astype(jnp.dtype(cfg.dtype))
-        kg_n = jnp.full((n_units, b), nb, jnp.int32)
+        kg_n = jnp.broadcast_to(cur_len // cfg.gate.block_size,
+                                (n_units, b)).astype(jnp.int32)
+        if lengths is not None:
+            # bucketed prefill: blocks touching pad tokens hold garbage Kg
+            # rows — zero them (same staleness contract as tf.lm_prefill)
+            row_ok = (jnp.arange(nb_max)[None, :]
+                      < (cur_len // cfg.gate.block_size)[:, None])
+            kg_cache = jnp.where(row_ok[None, :, None, :, None], kg_cache,
+                                 jnp.zeros((), kg_cache.dtype))
 
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
-    last = x[:, -1]
+    last = (x[:, -1] if lengths is None
+            else x[jnp.arange(b), jnp.maximum(cur_len - 1, 0)])
     logits = (last @ params["embed"]["w"].T if cfg.tie_embeddings
               else linear(params["lm_head"], last))
     st = HybridDecodeState(conv.astype(jnp.dtype(cfg.dtype)), h, k_cache,
-                           v_cache, kg_cache, kg_n,
-                           jnp.full((b,), l, jnp.int32))
+                           v_cache, kg_cache, kg_n, cur_len)
     return logits, st
 
 
@@ -239,3 +260,86 @@ def lm_decode_step(params: Params, state: HybridDecodeState, token, cfg,
     new_state = HybridDecodeState(conv2.astype(state.conv.dtype), h2, kc, vc,
                                   kgc, kgn, state.cur_len + 1)
     return logits[:, 0], new_state, tf.aggregate_decode_aux(auxs)
+
+
+def init_slot_state(cfg: ModelConfig, n_slots: int):
+    """Zeroed per-slot recurrent state for the paged serving engine."""
+    from repro.serve.slotstate import SlotState
+    n_units, period, rem = _plan(cfg)
+    di, hd, nh, n = mamba._m2_dims(cfg)
+    lm = n_units * period + rem
+    return SlotState(
+        conv=jnp.zeros((lm, n_slots, cfg.ssm.conv_dim - 1, di + 2 * n),
+                       jnp.dtype(cfg.dtype)),
+        h=jnp.zeros((lm, n_slots, nh, hd, n), jnp.float32))
+
+
+def lm_decode_step_paged(params: Params, pages, slot_state, token,
+                         page_table, cur_len, active, cfg: ModelConfig, *,
+                         options=None, budget_blocks=None, shard=None):
+    """Continuous-batching decode step (PR 10 unified signature).
+
+    The attention layer-core (``attn_core.block_decode_paged``) runs once
+    per unit with the SHARED attention weights over that unit's layer
+    slice of the page pools (``[n_units, P, Hkv, ps, Dh]``); the mamba2
+    backbone steps update the per-slot recurrent ``slot_state`` rows.
+    Inactive slots' recurrent updates are garbage but harmless — the
+    engine rewrites their rows at admission/restore, exactly as it
+    re-scatters their pages.
+    """
+    from repro.core.policy import default_options
+    from repro.models.attn_core import (aggregate_decode_aux,
+                                        block_decode_paged)
+    from repro.serve.paging import PagedPages
+    options = options if options is not None else default_options(cfg)
+    if options.schedule.needs_plan:
+        raise NotImplementedError(
+            "step-level selection plans assume a uniform self-attn stack; "
+            "the hybrid family's single shared attention block re-selects "
+            "every unit (schedule=SelectionSchedule())")
+    n_units, period, rem = _plan(cfg)
+    x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
+
+    def mamba_step_scan(x1, inp):
+        bp, conv, h = inp
+        y, (c2, h2) = mamba.mamba2_step(
+            bp["mixer"], rms_norm(bp["ln"], x1, cfg.norm_eps), cfg, conv, h)
+        return x1 + y, (c2, h2)
+
+    lm = n_units * period
+    conv_u = slot_state.conv[:lm].reshape(
+        (n_units, period) + slot_state.conv.shape[1:])
+    h_u = slot_state.h[:lm].reshape(
+        (n_units, period) + slot_state.h.shape[1:])
+
+    def unit(x1, inp):
+        ublocks, uconv, uh, layer_pages = inp
+        x1, (c2, h2) = layer_scan(mamba_step_scan, x1,
+                                  (ublocks, uconv, uh),
+                                  unroll=not cfg.scan_layers)
+        x1, new_pages, aux = block_decode_paged(
+            params["shared_attn"], x1, cfg, layer_pages, page_table,
+            cur_len, active, options=options, budget_blocks=budget_blocks,
+            shard=shard)
+        return x1, (c2, h2, new_pages, aux)
+
+    x1, (conv2, h2, new_pages, auxs) = layer_scan(
+        unit, x1, (params["units"], conv_u, h_u, tuple(pages)),
+        unroll=not cfg.scan_layers)
+    conv2 = conv2.reshape((-1,) + conv2.shape[2:])
+    h2 = h2.reshape((-1,) + h2.shape[2:])
+    if rem:
+        x1, (ct, ht) = layer_scan(
+            mamba_step_scan, x1,
+            (params["tail"], slot_state.conv[lm:], slot_state.h[lm:]),
+            unroll=not cfg.scan_layers)
+        conv2 = jnp.concatenate([conv2, ct], axis=0)
+        h2 = jnp.concatenate([h2, ht], axis=0)
+
+    x1 = rms_norm(params["final_norm"], x1, cfg.norm_eps)
+    logits = (x1 @ params["embed"]["w"].T if cfg.tie_embeddings
+              else linear(params["lm_head"], x1))
+    return (logits[:, 0], PagedPages(*new_pages),
+            slot_state._replace(conv=conv2.astype(slot_state.conv.dtype),
+                                h=h2),
+            aggregate_decode_aux(auxs))

@@ -68,10 +68,19 @@ def _ssm_scan_chunked(a: jnp.ndarray, bx: jnp.ndarray, c: jnp.ndarray,
 
     a, bx: [B, L, di, n]; c: [B, L, n]; h0: [B, di, n].
     Returns y [B, L, di], h_final. Chunked: the [B, chunk, di, n] state is
-    the only large intermediate.
+    the only large intermediate. Non-multiple L is right-padded with the
+    scan monoid's identity (a=1, bx=0) — exact on h_final; the padded y
+    rows are sliced off.
     """
     bsz, l, di, n = a.shape
-    nchunks = l // chunk
+    pad = (-l) % chunk
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+        bx = jnp.pad(bx, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+    lp = l + pad
+    nchunks = lp // chunk
 
     def combine(e1, e2):
         a1, b1 = e1
@@ -89,13 +98,49 @@ def _ssm_scan_chunked(a: jnp.ndarray, bx: jnp.ndarray, c: jnp.ndarray,
     bxr = bx.reshape(bsz, nchunks, chunk, di, n).swapaxes(0, 1)
     cr = c.reshape(bsz, nchunks, chunk, n).swapaxes(0, 1)
     h, ys = layer_scan(one_chunk, h0, (ar, bxr, cr), unroll=unroll)
-    y = ys.swapaxes(0, 1).reshape(bsz, l, di)
+    y = ys.swapaxes(0, 1).reshape(bsz, lp, di)[:, :l]
     return y, h
 
 
+def _conv_tail(seq: jnp.ndarray, k: int, lengths: Optional[jnp.ndarray]
+               ) -> jnp.ndarray:
+    """The K-1 rows ENDING at each row's true length — the decode-time
+    conv window. ``lengths`` None keeps the unpadded fast path (a plain
+    slice, verbatim the pre-PR-10 code); otherwise rows are gathered at
+    ``lengths - (K-1) + i`` with the left-of-sequence positions ZERO
+    (the causal conv's implicit left padding), so a bucketed right-padded
+    prefill hands decode exactly the window an unpadded one would."""
+    if lengths is None:
+        return seq[:, -(k - 1):]
+    idx = lengths[:, None] - (k - 1) + jnp.arange(k - 1)[None, :]  # [B,K-1]
+    tail = jnp.take_along_axis(seq, jnp.maximum(idx, 0)[..., None], axis=1)
+    return jnp.where(idx[..., None] >= 0, tail, jnp.zeros((), seq.dtype))
+
+
+def _mask_dt(dt: jnp.ndarray, lengths: Optional[jnp.ndarray],
+             l: int) -> jnp.ndarray:
+    """Zero dt at right-pad positions (bucketed prefill, PR 10): the
+    discretised decay becomes exp(0) = 1 and the input injection 0, so
+    pad tokens are an EXACT identity on the recurrent state — the final
+    h is the state at the true length. dt [B, L, ...]."""
+    if lengths is None:
+        return dt
+    valid = jnp.arange(l)[None, :] < lengths[:, None]              # [B, L]
+    valid = valid.reshape(valid.shape + (1,) * (dt.ndim - 2))
+    return jnp.where(valid, dt, jnp.zeros((), dt.dtype))
+
+
 def mamba1_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
-                h0: Optional[jnp.ndarray] = None):
-    """x [B, L, d] -> (y [B, L, d], (conv_state, ssm_state))."""
+                h0: Optional[jnp.ndarray] = None,
+                lengths: Optional[jnp.ndarray] = None):
+    """x [B, L, d] -> (y [B, L, d], (conv_state, ssm_state)).
+
+    ``lengths`` [B] (optional): true per-row lengths when ``x`` is
+    right-padded to a bucket width. Pad positions inject nothing into the
+    scan (dt zeroed — see ``_mask_dt``) and the conv state is gathered at
+    the true tail, so the returned states resume decode as if the pads
+    never existed; the y rows at pad positions are garbage (callers
+    gather outputs at ``lengths - 1``)."""
     bsz, l, d = x.shape
     di = cfg.ssm.expand * d
     n = cfg.ssm.state_dim
@@ -107,6 +152,7 @@ def mamba1_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     dt_in, b_in, c_in = jnp.split(proj, [dtr, dtr + n], axis=-1)
     dt = jax.nn.softplus(linear(p["dt_proj"], dt_in).astype(jnp.float32)
                          + p["dt_bias"])                       # [B,L,di]
+    dt = _mask_dt(dt, lengths, l)
     a_mat = -jnp.exp(p["A_log"])                               # [di, n]
     da = jnp.exp(dt[..., None] * a_mat)                        # [B,L,di,n]
     bx = (dt * xc.astype(jnp.float32))[..., None] * \
@@ -121,7 +167,7 @@ def mamba1_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
                              min(cfg.ssm.chunk_size, l), unroll=False)
     y = y + p["D"] * xc.astype(jnp.float32)
     y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
-    conv_state = xs[:, -(cfg.ssm.conv_dim - 1):]               # [B,K-1,di]
+    conv_state = _conv_tail(xs, cfg.ssm.conv_dim, lengths)     # [B,K-1,di]
     return linear(p["out_proj"], y), (conv_state, h)
 
 
@@ -190,11 +236,21 @@ def _ssd_chunks(xh, bmat, cmat, loga, h0, chunk, unroll=False):
     bmat [B, L, n], cmat [B, L, n]  (shared across heads, n_groups=1)
     loga [B, L, nh]      (log decay = dt * A, <= 0)
     h0   [B, nh, hd, n]
-    Returns y [B, L, nh, hd], h_final.
+    Returns y [B, L, nh, hd], h_final. Non-multiple L is right-padded
+    with the SSD identity (x=0, B=0, log decay=0: the pad adds nothing
+    to the cumsum or the state) — exact on h_final; padded y rows are
+    sliced off.
     """
     bsz, l, nh, hd = xh.shape
     n = bmat.shape[-1]
-    nc = l // chunk
+    pad = (-l) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        loga = jnp.pad(loga, ((0, 0), (0, pad), (0, 0)))
+    lp = l + pad
+    nc = lp // chunk
 
     xr = xh.reshape(bsz, nc, chunk, nh, hd).swapaxes(0, 1)
     br = bmat.reshape(bsz, nc, chunk, n).swapaxes(0, 1)
@@ -221,11 +277,15 @@ def _ssd_chunks(xh, bmat, cmat, loga, h0, chunk, unroll=False):
         return h_new, y_intra + y_inter
 
     h, ys = layer_scan(one_chunk, h0, (xr, br, cr, lr), unroll=unroll)
-    return ys.swapaxes(0, 1).reshape(bsz, l, nh, hd), h
+    return ys.swapaxes(0, 1).reshape(bsz, lp, nh, hd)[:, :l], h
 
 
 def mamba2_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
-                h0: Optional[jnp.ndarray] = None):
+                h0: Optional[jnp.ndarray] = None,
+                lengths: Optional[jnp.ndarray] = None):
+    """``lengths``: same bucketed-prefill contract as ``mamba1_full`` —
+    pad positions are an exact identity on the SSD state (loga = 0 adds
+    nothing to the in-chunk cumsum, the dt-scaled input is 0)."""
     bsz, l, d = x.shape
     di, hd, nh, n = _m2_dims(cfg)
     zxbcdt = linear(p["in_proj"], x)
@@ -234,6 +294,7 @@ def mamba2_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     xbc = jax.nn.silu(_causal_conv_full(xbc, p["conv_w"], p["conv_b"]))
     xs, bmat, cmat = jnp.split(xbc, [di, di + n], axis=-1)
     dt = jax.nn.softplus(dt_in.astype(jnp.float32) + p["dt_bias"])  # [B,L,nh]
+    dt = _mask_dt(dt, lengths, l)
     a = -jnp.exp(p["A_log"])                                        # [nh]
     loga = dt * a                                                   # [B,L,nh]
     xh = xs.reshape(bsz, l, nh, hd).astype(jnp.float32) * dt[..., None]
@@ -249,7 +310,7 @@ def mamba2_full(p: Params, x: jnp.ndarray, cfg: ModelConfig,
     # conv cache stores the raw (pre-conv) input tail
     raw_xbc = jnp.concatenate(
         [zxbcdt[:, :, di:2 * di], zxbcdt[:, :, 2 * di:2 * di + 2 * n]], axis=-1)
-    conv_state = raw_xbc[:, -(cfg.ssm.conv_dim - 1):]
+    conv_state = _conv_tail(raw_xbc, cfg.ssm.conv_dim, lengths)
     return linear(p["out_proj"], y), (conv_state, h)
 
 

@@ -6,6 +6,7 @@ from typing import Any, Callable, NamedTuple
 from repro.config import ModelConfig
 from repro.models import hybrid, ssm_lm
 from repro.models import transformer as tf
+from repro.serve.slotstate import CacheView, SlotState
 
 
 class ModelApi(NamedTuple):
@@ -22,26 +23,67 @@ class ModelApi(NamedTuple):
     #                                 builds policy-side caches (e.g. the
     #                                 selection-metadata cache) and batch
     #                                 may carry "lengths" for bucketed
-    #                                 right-padded prompts
+    #                                 right-padded prompts (every family)
     decode_step: Callable          # (params, state, token, cfg, *, options, shard)
     #                                 -> (logits, state, aux)
     # continuous-batching paged decode (serve.paging); None = unsupported
-    # (params, pages, token, page_table, cur_len, active, cfg, *, options,
-    #  budget_blocks, shard) -> (logits, pages, aux); a mesh-aware `shard`
-    # with options.kernel_impl='sharded' takes the paged x sharded path
-    # (pools head-sharded over 'model', page table replicated)
+    # (the DecodeEngine refuses such a family at construction).
+    # (params, pages, slot_state, token, page_table, cur_len, active, cfg,
+    #  *, options, budget_blocks, shard)
+    #  -> (logits, pages, slot_state, aux)
+    # ``slot_state`` is the per-slot recurrent-state seam (PR 10,
+    # serve.slotstate.SlotState): pages-only families take/return None.
+    # A mesh-aware `shard` with options.kernel_impl='sharded' takes the
+    # paged x sharded path (pools head-sharded over 'model', page table
+    # replicated, recurrent state replicated)
     decode_step_paged: Any = None
+    # how many layer slices the KV page pools carry for this family:
+    # transformer = self-attn layers, hybrid = attention units (ONE shared
+    # block per unit), ssm = 0 (pages-free — zero-size pools flow through
+    # the engine unchanged)
+    paged_attn_layers: Callable = None  # (cfg) -> int
+    # (cfg, n_slots) -> SlotState | None (pages-only families)
+    init_slot_state: Any = None
+    # (prefill state, batch=1) -> CacheView: which fields the paged
+    # admission path scatters into pools / writes into the slot buffer
+    state_view: Any = None
+
+
+def _tf_view(st) -> CacheView:
+    return CacheView(st.k_cache, st.v_cache, st.kg_cache,
+                     st.meta_kmin, st.meta_kmax, None)
+
+
+def _hybrid_view(st) -> CacheView:
+    return CacheView(st.k_cache, st.v_cache, st.kg_cache, None, None,
+                     SlotState(conv=st.conv[:, 0], h=st.h[:, 0]))
+
+
+def _ssm_view(st) -> CacheView:
+    return CacheView(None, None, None, None, None,
+                     SlotState(conv=st.conv[:, 0], h=st.h[:, 0]))
 
 
 _TF_API = ModelApi(tf.init_lm, tf.lm_forward, tf.init_decode_state,
                    tf.lm_prefill, tf.lm_decode_step,
-                   decode_step_paged=tf.lm_decode_step_paged)
+                   decode_step_paged=tf.lm_decode_step_paged,
+                   paged_attn_layers=tf.n_self_layers,
+                   init_slot_state=None,
+                   state_view=_tf_view)
 _SSM_API = ModelApi(ssm_lm.init_lm, ssm_lm.lm_forward,
                     ssm_lm.init_decode_state, ssm_lm.lm_prefill,
-                    ssm_lm.lm_decode_step)
+                    ssm_lm.lm_decode_step,
+                    decode_step_paged=ssm_lm.lm_decode_step_paged,
+                    paged_attn_layers=lambda cfg: 0,
+                    init_slot_state=ssm_lm.init_slot_state,
+                    state_view=_ssm_view)
 _HYBRID_API = ModelApi(hybrid.init_lm, hybrid.lm_forward,
                        hybrid.init_decode_state, hybrid.lm_prefill,
-                       hybrid.lm_decode_step)
+                       hybrid.lm_decode_step,
+                       decode_step_paged=hybrid.lm_decode_step_paged,
+                       paged_attn_layers=lambda cfg: hybrid._plan(cfg)[0],
+                       init_slot_state=hybrid.init_slot_state,
+                       state_view=_hybrid_view)
 
 
 def get_api(cfg: ModelConfig) -> ModelApi:

@@ -80,24 +80,35 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int = 0
 
 def lm_prefill(params: Params, batch, cfg: ModelConfig, max_len: int = 0,
                shard=None, options=None):
-    # ``options`` accepted for ModelApi uniformity (attention-free family)
+    """``options`` accepted for ModelApi uniformity (attention-free
+    family). ``batch["lengths"]`` [B] (optional): true per-row lengths
+    for bucketed right-padded prompts (serve-path prefill jit caching,
+    PR 10) — pad tokens are an exact identity on the recurrent state
+    (``mamba._mask_dt``), ``cur_len`` reflects the true lengths and the
+    logits row is gathered at ``lengths - 1``."""
     tokens = batch["tokens"]
     b, l = tokens.shape
+    lengths = batch.get("lengths")                       # [B] | None
     x = jnp.take(params["embed"]["w"], tokens, axis=0)
 
     def body(x, bp):
-        y, st = mamba.mamba1_full(bp["mixer"], rms_norm(bp["ln"], x, cfg.norm_eps), cfg)
+        y, st = mamba.mamba1_full(bp["mixer"],
+                                  rms_norm(bp["ln"], x, cfg.norm_eps), cfg,
+                                  lengths=lengths)
         return x + y, st
 
     x, states = layer_scan(body, x, params["blocks"],
                            unroll=not cfg.scan_layers)
     x = rms_norm(params["final_norm"], x, cfg.norm_eps)
-    last = x[:, -1]
+    cur_len = (jnp.full((b,), l, jnp.int32) if lengths is None
+               else lengths.astype(jnp.int32))
+    last = (x[:, -1] if lengths is None
+            else x[jnp.arange(b), jnp.maximum(cur_len - 1, 0)])
     logits = (last @ params["embed"]["w"].T if cfg.tie_embeddings
               else linear(params["lm_head"], last))
     conv, h = states
     st = SSMDecodeState(conv=conv.astype(jnp.dtype(cfg.dtype)), h=h,
-                        cur_len=jnp.full((b,), l, jnp.int32))
+                        cur_len=cur_len)
     return logits, st
 
 
@@ -123,4 +134,50 @@ def lm_decode_step(params: Params, state: SSMDecodeState, token, cfg,
     return (logits[:, 0],
             SSMDecodeState(conv.astype(state.conv.dtype), h,
                            state.cur_len + 1),
+            zero_decode_aux(token.shape[0]))
+
+
+def init_slot_state(cfg: ModelConfig, n_slots: int):
+    """Zeroed per-slot recurrent state for the paged serving engine."""
+    from repro.serve.slotstate import SlotState
+    di = cfg.ssm.expand * cfg.d_model
+    return SlotState(
+        conv=jnp.zeros((cfg.num_layers, n_slots, cfg.ssm.conv_dim - 1, di),
+                       jnp.dtype(cfg.dtype)),
+        h=jnp.zeros((cfg.num_layers, n_slots, di, cfg.ssm.state_dim),
+                    jnp.float32))
+
+
+def lm_decode_step_paged(params: Params, pages, slot_state, token,
+                         page_table, cur_len, active, cfg: ModelConfig, *,
+                         options=None, budget_blocks=None, shard=None):
+    """Pages-free paged decode step (PR 10 unified signature).
+
+    An attention-free family has nothing in the KV page pools — ``pages``
+    (zero-layer, zero-size arrays) and ``page_table``/``cur_len``/
+    ``budget_blocks`` pass through untouched — but the recurrent state
+    rides in ``slot_state`` so the engine's slot lifecycle (admission,
+    preemption swap, eviction replay) covers this family too. Inactive
+    slots receive garbage recurrent updates; that is harmless because the
+    engine rewrites their rows at the next admission/restore.
+    """
+    del page_table, cur_len, active, budget_blocks, shard
+    x1 = jnp.take(params["embed"]["w"], token[:, None], axis=0)
+
+    def body(x1, inp):
+        bp, conv, h = inp
+        y, (conv2, h2) = mamba.mamba1_step(
+            bp["mixer"], rms_norm(bp["ln"], x1, cfg.norm_eps), cfg, conv, h)
+        return x1 + y, (conv2, h2)
+
+    x1, (conv, h) = layer_scan(body, x1,
+                               (params["blocks"], slot_state.conv,
+                                slot_state.h), unroll=not cfg.scan_layers)
+    x1 = rms_norm(params["final_norm"], x1, cfg.norm_eps)
+    logits = (x1 @ params["embed"]["w"].T if cfg.tie_embeddings
+              else linear(params["lm_head"], x1))
+    from repro.models.attn_core import zero_decode_aux
+    return (logits[:, 0], pages,
+            slot_state._replace(conv=conv.astype(slot_state.conv.dtype),
+                                h=h),
             zero_decode_aux(token.shape[0]))

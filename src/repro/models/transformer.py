@@ -23,13 +23,21 @@ from repro.config import ModelConfig
 from repro.core import attngate as ag
 from repro.core import kcache as kc
 from repro.core import metacache as mc
-from repro.core import sparsity as sp
 from repro.core.distill import gate_kl_loss, ground_truth_from_blockmax
 from repro.core.policy import (STAGE_DENSE, STAGE_SELECT, DecodeOptions,
                                SelectionInputs, default_options, select_impl,
                                selection_width)
 from repro.kernels import ops
 from repro.models import moe as moe_mod
+# the per-layer paged attention body + decode-aux helpers live in the
+# family-agnostic layer-core (PR 10) — re-exported here so existing
+# importers (ssm_lm, hybrid, tests) keep working
+from repro.models.attn_core import (_dense_aux, _dense_touched,
+                                    _policy_active, _qkv, _selection_aux,
+                                    _touched_pages, _zero_layer_aux,
+                                    aggregate_decode_aux,
+                                    attention_decode_paged,
+                                    block_decode_paged, zero_decode_aux)
 from repro.models.common import (NEG_INF, apply_rope, chunked_attention,
                                  cross_entropy_loss, decode_attention,
                                  init_linear, init_mlp, init_rmsnorm,
@@ -121,18 +129,6 @@ def init_lm(key, cfg: ModelConfig) -> Params:
 # ---------------------------------------------------------------------------
 # full-sequence forward (train / prefill)
 # ---------------------------------------------------------------------------
-
-def _qkv(p: Params, x: jnp.ndarray, cfg: ModelConfig):
-    b, l, _ = x.shape
-    dh = cfg.resolved_head_dim
-    q = linear(p["wq"], x).reshape(b, l, cfg.n_heads, dh)
-    k = linear(p["wk"], x).reshape(b, l, cfg.n_kv_heads, dh)
-    v = linear(p["wv"], x).reshape(b, l, cfg.n_kv_heads, dh)
-    if cfg.qk_norm:
-        q = rms_norm(p["q_norm"], q, cfg.norm_eps)
-        k = rms_norm(p["k_norm"], k, cfg.norm_eps)
-    return q, k, v
-
 
 def attention_full(p: Params, x: jnp.ndarray, cfg: ModelConfig, *,
                    rope_positions: jnp.ndarray,
@@ -384,67 +380,6 @@ def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
         meta_kmin=meta_kmin, meta_kmax=meta_kmax, meta_n=meta_n)
 
 
-def _policy_active(policy, p: Params) -> bool:
-    """Sparse selection runs unless the policy is dense or requires a gate
-    the layer doesn't carry (then dense decode — the old ``sparse=True``
-    fallback for ungated layers)."""
-    return (not policy.dense) and (("gate" in p) or not policy.needs_gate)
-
-
-def _selection_aux(idx: jnp.ndarray, n_valid: jnp.ndarray, nb: int):
-    """Measured per-layer selection telemetry from the ACTUAL selected
-    block ids: (sparsity scalar, per-row sparsity [B], mean selected
-    blocks [B], visible blocks [B]). The scalar/rows come from
-    ``core.sparsity.sparsity_ratio`` on the materialised selection mask."""
-    b, hkv, _ = idx.shape
-    cnt = jnp.zeros((b, hkv, nb), jnp.int32).at[
-        jnp.arange(b)[:, None, None], jnp.arange(hkv)[None, :, None],
-        jnp.maximum(idx, 0)].add((idx >= 0).astype(jnp.int32))
-    sel_mask = cnt > 0
-    rho = sp.sparsity_ratio(sel_mask, n_valid)
-    # per-row breakdown: rho is exactly mean(rho_rows) by construction
-    sel_counts = jnp.sum(sel_mask, -1).astype(jnp.float32)        # [B,Hkv]
-    tot = jnp.maximum(n_valid.astype(jnp.float32), 1.0)
-    rho_rows = 1.0 - jnp.mean(sel_counts / tot[:, None], axis=1)
-    return rho, rho_rows, jnp.mean(sel_counts, axis=1), \
-        n_valid.astype(jnp.float32)
-
-
-def _dense_aux(new_len: jnp.ndarray, block_size: int):
-    """Dense decode reads every visible block: sparsity 0 by definition."""
-    n_valid = kc.visible_blocks(jnp.maximum(new_len, 1), block_size)
-    nv = n_valid.astype(jnp.float32)
-    return (jnp.zeros((), jnp.float32), jnp.zeros_like(nv), nv, nv)
-
-
-def _zero_layer_aux(batch: int):
-    """Per-layer aux when telemetry is compiled out
-    (DecodeOptions.measure_sparsity=False)."""
-    z = jnp.zeros((batch,), jnp.float32)
-    return jnp.zeros((), jnp.float32), z, z, z
-
-
-def _touched_pages(idx: jnp.ndarray, nb: int) -> jnp.ndarray:
-    """Selected block ids [B, Hkv, k] -> touched mask [B, nb] bool: which
-    logical blocks ANY head read this layer. The RaaS eviction signal
-    (DecodeOptions.track_evictions): the serving engine intersects this
-    with its evicted-page mask to detect a selected-but-evicted block
-    (fault -> restore -> replay) and feeds it to the BlockHeat recency
-    model."""
-    b = idx.shape[0]
-    cnt = jnp.zeros((b, nb), jnp.int32).at[
-        jnp.arange(b)[:, None, None], jnp.maximum(idx, 0)].add(
-        (idx >= 0).astype(jnp.int32))
-    return cnt > 0
-
-
-def _dense_touched(new_len: jnp.ndarray, block_size: int, nb: int
-                   ) -> jnp.ndarray:
-    """Dense decode touches every visible block."""
-    vis = kc.visible_blocks(jnp.maximum(new_len, 1), block_size)   # [B]
-    return jnp.arange(nb)[None, :] < vis[:, None]
-
-
 def attention_decode(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
                      k_cache, v_cache, kg_cache, kg_n, cur_len,
                      options: DecodeOptions, meta_kmin=None, meta_kmax=None,
@@ -672,29 +607,6 @@ def cross_block_decode(p: Params, x1, cfg: ModelConfig, ck, cv):
     return x1 + mlp(p["mlp"], h2, cfg.activation)
 
 
-def aggregate_decode_aux(auxs) -> Dict[str, jnp.ndarray]:
-    """Stacked per-layer (rho, rho_rows [B], sel [B], vis [B]) -> the
-    decode-step aux dict every ModelApi.decode_step returns. A 5th
-    element (touched-pages masks [L, B, nb] under
-    DecodeOptions.track_evictions) ORs over layers: a block is touched if
-    ANY layer's selection read it."""
-    rho, rho_rows, sel, vis = auxs[:4]
-    out = {"sparsity": jnp.mean(rho),
-           "sparsity_rows": jnp.mean(rho_rows, axis=0),
-           "sel_blocks": jnp.mean(sel, axis=0),
-           "vis_blocks": jnp.mean(vis, axis=0)}
-    if len(auxs) > 4:
-        out["touched_pages"] = jnp.any(auxs[4], axis=0)
-    return out
-
-
-def zero_decode_aux(batch: int) -> Dict[str, jnp.ndarray]:
-    """Aux for attention-free decode paths (SSM): nothing is selected."""
-    z = jnp.zeros((batch,), jnp.float32)
-    return {"sparsity": jnp.zeros((), jnp.float32), "sparsity_rows": z,
-            "sel_blocks": z, "vis_blocks": z}
-
-
 def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
                    cfg: ModelConfig, *,
                    options: Optional[DecodeOptions] = None, shard=None):
@@ -801,286 +713,25 @@ def lm_decode_step(params: Params, state: DecodeState, token: jnp.ndarray,
 # paged decode (continuous batching): per-row ragged lengths + page pools
 # ---------------------------------------------------------------------------
 
-def attention_decode_paged(p: Params, x1: jnp.ndarray, cfg: ModelConfig, *,
-                           k_pages, v_pages, kg_pages, page_table, cur_len,
-                           active, options: DecodeOptions,
-                           budget_blocks=None, kmin_pages=None,
-                           kmax_pages=None, k_scale=None, v_scale=None,
-                           shard=None, stage=None, plan=None):
-    """One token over paged KV. x1 [S,1,d]; pools for ONE layer HEAD-MAJOR
-    [P, Hkv, ps, Dh]; page_table [S, npt]; cur_len/active [S] per-slot.
-
-    ``stage``/``plan``: per-layer staging of a step-level SelectionSchedule
-    and the carried [S, Hkv, k] plan — same contract as the contiguous
-    ``attention_decode``; when ``stage`` is given the return grows a 4th
-    element (the next layer's plan) and Kg / min-max metadata page rows
-    advance only at selecting layers.
-
-    The gate path is identical to the contiguous ``attention_decode`` —
-    same selection, same force-select of the trailing partial block — but
-    the Kg cache is the paged twin: ``GatePolicy`` scores it straight off
-    ``kg_pages`` through the page table (no per-slot Kg gather on the
-    Pallas paths) and the block-sparse attention gathers physical pages
-    in-kernel. ``budget_blocks`` [S] (optional, RUNTIME) caps each slot's
-    selected list post-hoc — the per-request budget override; forced
-    first/last blocks rank ahead of every scored block, so any cap >= the
-    forced count preserves them. Rows with ``active == False`` (empty
-    decode slots) write to the null page and do not advance.
-
-    ``options.kernel_impl='sharded'`` with a mesh-aware ``shard`` takes
-    the paged x sharded path (serve.sharded.sharded_paged_decode): pools
-    sharded over kv heads, page table replicated, zero per-step
-    collectives — bitwise equal to the unsharded paged step. Requires the
-    gate policy; ungated/dense slots fall through to the local paths.
-
-    ``k_scale``/``v_scale`` [P, Hkv, 1] f32 (int8 pools, ISSUE 9): when
-    present the K/V pools are int8, the trailing page is requantized per
-    append (``paging.append_token_paged_quant``) and every consumer —
-    block-sparse kernels, dense gather fallback, Kg/min-max finalize,
-    trailing-block Quest recompute — dequantizes with the scale rows
-    (fused in-kernel on the sparse path; no cache-sized fp copy). None
-    keeps the fp code path verbatim."""
-    b = x1.shape[0]
-    dh, hkv, g = cfg.resolved_head_dim, cfg.n_kv_heads, cfg.gqa_group
-    ps = cfg.gate.block_size
-    policy = options.policy
-    sparse_on = _policy_active(policy, p)
-    q, k, v = _qkv(p, x1, cfg)
-    q_nope = q
-    pos = cur_len[:, None]                                 # [S,1]
-    qr = apply_rope(q, pos, cfg.rope_theta)
-    kr = apply_rope(k, pos, cfg.rope_theta)
-
-    mesh = getattr(shard, "mesh", None)
-    if sparse_on and options.kernel_impl == "sharded" and mesh is None:
-        # fail at trace time with an actionable message instead of a bare
-        # ValueError('sharded') from the kernel dispatch deep in the step
-        raise ValueError(
-            "kernel_impl='sharded' on the paged path needs a mesh-aware "
-            "engine: construct DecodeEngine(..., shard=make_shard_fn(mesh))")
-    npt = page_table.shape[1]
-    # RaaS eviction (ISSUE 7): the page table may hold GHOST ids (>= pool
-    # size) for evicted blocks — valid rows of the extended kg/kmin/kmax
-    # pools, so SELECTION reads them through the raw table unchanged, but
-    # out-of-bounds for the K/V pools. Attention consumers read through a
-    # clamped twin; a selected-evicted block is caught by the
-    # touched-pages aux and the step replayed after restore.
-    pt_kv = (jnp.minimum(page_table, k_pages.shape[0] - 1)
-             if options.track_evictions else page_table)
-
-    if sparse_on and options.kernel_impl == "sharded" and policy.needs_gate \
-            and "gate" in p:
-        from repro.serve.sharded import sharded_paged_decode
-        qg = ag.gate_q(p["gate"], q_nope, pos, cfg.gate)[:, 0]  # [S,Hkv,Dg]
-        qgrp = qr[:, 0].reshape(b, hkv, g, dh)
-        plan_kw = {}
-        if stage is not None:
-            # DecodeOptions validation pins sharded schedules to
-            # select_layer=0 (+ correction layers), so STAGE_DENSE never
-            # reaches this body — only fresh-vs-reuse blending remains
-            plan_kw = dict(reuse_idx=plan, do_select=(stage == STAGE_SELECT))
-        if options.track_evictions:
-            plan_kw["pt_kv"] = pt_kv
-        o, k_pages, v_pages, kg_pages, k_scale, v_scale, idx = \
-            sharded_paged_decode(
-                qg, qgrp, kr[:, 0], v[:, 0], k_pages, v_pages, kg_pages,
-                page_table, cur_len, active, p["gate"]["wk"], mesh=mesh,
-                cfg=cfg.gate, rope_theta=cfg.rope_theta,
-                max_selected=options.max_selected(cfg),
-                budget_blocks=budget_blocks, split_k=options.split_k,
-                inner_impl="pallas" if cfg.use_pallas else "ref",
-                k_scale=k_scale, v_scale=v_scale, **plan_kw)
-        new_len = cur_len + active.astype(jnp.int32)
-        aux = (_selection_aux(idx, kc.visible_blocks(
-                   jnp.maximum(new_len, 1), ps), npt)
-               if options.measure_sparsity else _zero_layer_aux(b))
-        if options.track_evictions:
-            aux = aux + (_touched_pages(idx, npt),)
-        out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-        ret = (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages,
-                     k_scale, v_scale), aux)
-        return ret + (idx,) if stage is not None else ret
-
-    from repro.serve import paging as pg
-    staged = stage is not None and sparse_on
-    # mirror the contiguous path: the Kg page rows only advance for the
-    # policy that reads them (append skips the gate projection on None);
-    # under a plan-carrying schedule the advance is further gated to
-    # selecting layers (cond on the stage id, below)
-    gate_for_append = \
-        p.get("gate") if (policy.needs_gate and not staged) else None
-    if k_scale is not None:
-        k_pages, v_pages, kg_pages, k_scale, v_scale = \
-            pg.append_token_paged_quant(
-                k_pages, v_pages, kg_pages, k_scale, v_scale, kr[:, 0],
-                v[:, 0], page_table, cur_len, active, gate_for_append,
-                cfg.gate, rope_theta=cfg.rope_theta)
-    else:
-        k_pages, v_pages, kg_pages = pg.append_token_paged(
-            k_pages, v_pages, kg_pages, kr[:, 0], v[:, 0], page_table,
-            cur_len, active, gate_for_append, cfg.gate,
-            rope_theta=cfg.rope_theta)
-    # ... and the min/max metadata page rows only for the policy that
-    # reads THEM (QuestPolicy): finalize a page's row when it fills
-    if policy.needs_meta and kmin_pages is not None and not staged:
-        kmin_pages, kmax_pages = pg.append_meta_paged(
-            kmin_pages, kmax_pages, k_pages, page_table, cur_len, active,
-            ps, k_scale=k_scale)
-    new_len = cur_len + active.astype(jnp.int32)
-
-    if staged:
-        # ---- staged path (plan-carrying SelectionSchedule) ------------
-        do_select = stage == STAGE_SELECT             # traced bool scalar
-        is_dense = stage == STAGE_DENSE
-
-        if policy.needs_gate and "gate" in p and kg_pages is not None:
-            kg_pages = jax.lax.cond(
-                do_select,
-                lambda kgp: pg.finalize_kg_paged(
-                    k_pages, kgp, page_table, cur_len, active, p["gate"],
-                    cfg.gate, rope_theta=cfg.rope_theta, k_scale=k_scale),
-                lambda kgp: kgp, kg_pages)
-        if policy.needs_meta and kmin_pages is not None:
-            def _adv_meta(mn, mx):
-                return pg.append_meta_paged(mn, mx, k_pages, page_table,
-                                            cur_len, active, ps,
-                                            k_scale=k_scale)
-            kmin_pages, kmax_pages = jax.lax.cond(
-                do_select, _adv_meta, lambda mn, mx: (mn, mx),
-                kmin_pages, kmax_pages)
-
-        inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
-                              gate_params=p.get("gate"), kg_pages=kg_pages,
-                              k_pages=k_pages, page_table=page_table,
-                              kmin_pages=kmin_pages, kmax_pages=kmax_pages,
-                              k_scale_pages=k_scale)
-
-        def _fresh(cur):
-            del cur
-            return policy.select(
-                inp, cfg, impl=select_impl(options.kernel_impl),
-                max_selected=options.max_selected(cfg),
-                unify_heads=options.schedule.unify_heads).astype(jnp.int32)
-
-        idx = jax.lax.cond(do_select, _fresh, lambda cur: cur, plan)
-        if budget_blocks is not None:
-            # the carried plan is already capped, so re-masking a reuse
-            # layer's idx is idempotent
-            slot_cap = jnp.arange(idx.shape[-1])[None, None, :] \
-                < budget_blocks[:, None, None]
-            idx = jnp.where(slot_cap, idx, -1)
-        qgrp = qr[:, 0].reshape(b, hkv, g, dh)
-
-        def _run_sparse(_):
-            o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx,
-                                        pt_kv, new_len, block_size=ps,
-                                        impl=options.kernel_impl,
-                                        k_scales=k_scale, v_scales=v_scale)
-            return o.reshape(b, 1, hkv * g, dh)
-
-        def _run_dense(_):
-            k_ct = pg.gather_kv(k_pages, pt_kv, k_scale)
-            v_ct = pg.gather_kv(v_pages, pt_kv, v_scale)
-            return decode_attention(
-                qr, k_ct, v_ct, new_len,
-                logit_softcap=cfg.attn_logit_softcap).reshape(
-                    b, 1, hkv * g, dh)
-
-        o = jax.lax.cond(is_dense, _run_dense, _run_sparse, None)
-        if options.measure_sparsity:
-            sel = _selection_aux(idx, kc.visible_blocks(
-                jnp.maximum(new_len, 1), ps), npt)
-            den = _dense_aux(new_len, ps)
-            aux = tuple(jnp.where(is_dense, d, s) for s, d in zip(sel, den))
-        else:
-            aux = _zero_layer_aux(b)
-        if options.track_evictions:
-            tch = jnp.where(is_dense, _dense_touched(new_len, ps, npt),
-                            _touched_pages(idx, npt))
-            aux = aux + (tch,)
-        out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-        return (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages,
-                      k_scale, v_scale), aux, idx)
-
-    if sparse_on:
-        inp = SelectionInputs(q_nope=q_nope, qr=qr, pos=pos, new_len=new_len,
-                              gate_params=p.get("gate"), kg_pages=kg_pages,
-                              k_pages=k_pages, page_table=page_table,
-                              kmin_pages=kmin_pages, kmax_pages=kmax_pages,
-                              k_scale_pages=k_scale)
-        idx = policy.select(inp, cfg, impl=select_impl(options.kernel_impl),
-                            max_selected=options.max_selected(cfg),
-                            unify_heads=options.schedule.unify_heads)
-        if budget_blocks is not None:
-            slot_cap = jnp.arange(idx.shape[-1])[None, None, :] \
-                < budget_blocks[:, None, None]
-            idx = jnp.where(slot_cap, idx, -1)
-        qgrp = qr[:, 0].reshape(b, hkv, g, dh)
-        o = ops.paged_sparse_decode(qgrp, k_pages, v_pages, idx, pt_kv,
-                                    new_len, block_size=ps,
-                                    impl=options.kernel_impl,
-                                    k_scales=k_scale, v_scales=v_scale)
-        o = o.reshape(b, 1, hkv * g, dh)
-        aux = (_selection_aux(idx, kc.visible_blocks(
-                   jnp.maximum(new_len, 1), ps), npt)
-               if options.measure_sparsity else _zero_layer_aux(b))
-        if options.track_evictions:
-            aux = aux + (_touched_pages(idx, npt),)
-    else:
-        k_ct = pg.gather_kv(k_pages, pt_kv, k_scale)       # [S,Hkv,npt*ps,Dh]
-        v_ct = pg.gather_kv(v_pages, pt_kv, v_scale)
-        o = decode_attention(qr, k_ct, v_ct, new_len,
-                             logit_softcap=cfg.attn_logit_softcap)
-        aux = (_dense_aux(new_len, ps) if options.measure_sparsity
-               else _zero_layer_aux(b))
-        if options.track_evictions:
-            aux = aux + (_dense_touched(new_len, ps, npt),)
-    out = linear(p["wo"], o.reshape(b, 1, hkv * g * dh))
-    ret = (out, (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages,
-                 k_scale, v_scale), aux)
-    # an ungated layer under a plan-carrying schedule: dense fallback, the
-    # plan passes through untouched (same contract as attention_decode)
-    return ret + (plan,) if stage is not None else ret
-
-
-def block_decode_paged(p: Params, x1, cfg: ModelConfig, layer_pages,
-                       page_table, cur_len, active, *,
-                       options: DecodeOptions, budget_blocks=None,
-                       shard=None, stage=None, plan=None):
-    (k_pages, v_pages, kg_pages, kmin_pages, kmax_pages,
-     k_scale, v_scale) = layer_pages
-    h = rms_norm(p["ln1"], x1, cfg.norm_eps)
-    ret = attention_decode_paged(
-        p["attn"], h, cfg, k_pages=k_pages, v_pages=v_pages,
-        kg_pages=kg_pages, page_table=page_table, cur_len=cur_len,
-        active=active, options=options, budget_blocks=budget_blocks,
-        kmin_pages=kmin_pages, kmax_pages=kmax_pages, k_scale=k_scale,
-        v_scale=v_scale, shard=shard, stage=stage, plan=plan)
-    attn_out, new_pages, aux = ret[:3]
-    x1 = x1 + attn_out
-    h2 = rms_norm(p["ln2"], x1, cfg.norm_eps)
-    if "moe" in p:
-        b = x1.shape[0]
-        y, _ = moe_mod.moe_mlp(p["moe"], h2.reshape(b, -1), cfg.moe,
-                               cfg.activation, None)
-        y = y.reshape(b, 1, -1)
-    else:
-        y = mlp(p["mlp"], h2, cfg.activation)
-    if stage is not None:
-        return x1 + y, new_pages, aux, ret[3]
-    return x1 + y, new_pages, aux
-
-
-def lm_decode_step_paged(params: Params, pages, token: jnp.ndarray,
-                         page_table: jnp.ndarray, cur_len: jnp.ndarray,
-                         active: jnp.ndarray, cfg: ModelConfig, *,
+def lm_decode_step_paged(params: Params, pages, slot_state,
+                         token: jnp.ndarray, page_table: jnp.ndarray,
+                         cur_len: jnp.ndarray, active: jnp.ndarray,
+                         cfg: ModelConfig, *,
                          options: Optional[DecodeOptions] = None,
                          budget_blocks=None, shard=None):
     """Continuous-batching decode step. token/cur_len/active [n_slots];
     pages is a ``serve.paging.PagedPages`` (layer-stacked pools);
     page_table [n_slots, npt]; ``budget_blocks`` [n_slots] (optional,
     runtime) per-slot selected-block caps for per-request budget
-    overrides. Returns (logits [n_slots, V], new pages, aux dict).
+    overrides. Returns (logits [n_slots, V], new pages, slot_state, aux
+    dict).
+
+    ``slot_state`` is the unified per-slot RECURRENT-state seam (PR 10):
+    families with recurrent layers (ssm/hybrid) carry a
+    ``serve.slotstate.SlotState`` through every step; the transformer is
+    pages-only, so it takes and returns ``None`` (an empty pytree — jit
+    treats it as zero operands, and the engine threads it without
+    special-casing the family).
 
     Inactive rows produce garbage logits (the engine masks them) but do
     not touch live pages or advance — per-row raggedness is carried by
@@ -1134,7 +785,8 @@ def lm_decode_step_paged(params: Params, pages, token: jnp.ndarray,
         logits = x1 @ params["embed"]["w"].T
     else:
         logits = linear(params["lm_head"], x1)
-    return logits[:, 0], PagedPages(*new_pages), aggregate_decode_aux(auxs)
+    return (logits[:, 0], PagedPages(*new_pages), slot_state,
+            aggregate_decode_aux(auxs))
 
 
 def lm_prefill(params: Params, batch: Dict[str, jnp.ndarray],

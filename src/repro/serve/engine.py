@@ -43,6 +43,7 @@ from repro.core.policy import DecodeOptions, default_options
 from repro.models.registry import get_api
 from repro.serve import paging as pg
 from repro.serve import sampling as smp
+from repro.serve import slotstate as ss
 from repro.serve.eviction import EvictionConfig, EvictionManager
 from repro.serve.offload import (HostSwapSpace, SwapConfig, SwapEntry,
                                  SwapError)
@@ -65,6 +66,15 @@ class DecodeEngine:
         self.cfg = cfg
         self.params = params
         self.api = get_api(cfg)
+        if self.api.decode_step_paged is None:
+            # fail at construction, not deep inside serve(): the engine's
+            # whole point is the paged path (ISSUE 10 satellite)
+            raise ValueError(
+                f"family {cfg.family!r}: no paged decode path "
+                f"(ModelApi.decode_step_paged is None). Paged serving "
+                f"covers the dense/moe/ssm/hybrid families; for a family "
+                f"without it, run the contiguous api.prefill/decode_step "
+                f"loop directly instead of DecodeEngine")
         self.max_len = max_len
         self.options = options if options is not None else default_options(cfg)
         self.shard = shard          # mesh-aware: enables kernel_impl="sharded"
@@ -222,9 +232,6 @@ class DecodeEngine:
         when ``collect_logits``.
         """
         cfg = self.cfg
-        if self.api.decode_step_paged is None:
-            raise NotImplementedError(
-                f"family {cfg.family}: no paged decode path")
         ps = cfg.gate.block_size
         if arrivals is not None:
             if max_steps is None:
@@ -356,8 +363,10 @@ class DecodeEngine:
             return int(smp.make_sampler(params_s)(jnp.asarray(row_logits),
                                                   key=key))
 
-        # layer count from the stacked params (leading dim of any leaf)
-        nl = jax.tree.leaves(self.params["blocks"])[0].shape[0]
+        # how many layer slices the pools carry is a FAMILY property
+        # (transformer: self-attn layers; hybrid: attention units; ssm: 0
+        # — zero-size pools), not a params-shape hack
+        nl = self.api.paged_attn_layers(cfg)
         # min/max metadata pools only for the policy that reads them
         # (needs_meta is part of the SelectionPolicy protocol)
         ghosts = 0
@@ -368,6 +377,11 @@ class DecodeEngine:
                               with_meta=self.options.policy.needs_meta,
                               ghost_rows=ghosts,
                               quantize=self.options.quantize)
+        # per-slot recurrent state (PR 10): the page pools' lifecycle twin
+        # for recurrent families — None (an empty pytree) for pages-only
+        # families, so the step jit sees zero extra operands
+        slot_state = (None if self.api.init_slot_state is None
+                      else self.api.init_slot_state(cfg, n_slots))
         mesh = getattr(self.shard, "mesh", None)
         if mesh is not None and self.options.kernel_impl == "sharded":
             # paged x sharded: keep the pools resident head-sharded so the
@@ -431,7 +445,13 @@ class DecodeEngine:
             mirror gate/meta state; K/V truth for an evicted page lives on
             the host), so resume takes the unchanged — bitwise-pinned —
             whole-request restore path. A permanent swap fault here marks
-            the victim failed instead of raising through the scheduler."""
+            the victim failed instead of raising through the scheduler.
+
+            Recurrent families (PR 10): the victim's per-layer recurrent
+            rows ride along in the entry (``state_conv``/``state_h``) —
+            captured from the PRE-step buffer (the step jit never donates
+            ``slot_state``), which together with the pending ``token`` is
+            exactly the point decode resumes from."""
             n_content = max(1, -(-req.swap_len // ps))
             content = req.pages[:n_content]
             # ghost ids carry no K/V — extract through the trash page and
@@ -469,13 +489,19 @@ class DecodeEngine:
                     if k_sc is not None and pe.k_scale is not None:
                         k_sc[:, lb] = pe.k_scale[:, 0]
                         v_sc[:, lb] = pe.v_scale[:, 0]
+            st_conv = st_h = None
+            if slot_state is not None:
+                row = ss.read_slot(slot_state, jnp.asarray(req.slot))
+                st_conv = None if row.conv is None else np.asarray(row.conv)
+                st_h = None if row.h is None else np.asarray(row.h)
             if reason is None:
                 try:
                     swap.put(req.rid, SwapEntry(
                         k=k, v=v, kg=kg,
                         token=int(token_buf[req.slot]),
                         cur_len=req.swap_len, kmin=kmin, kmax=kmax,
-                        k_scale=k_sc, v_scale=v_sc))
+                        k_scale=k_sc, v_scale=v_sc,
+                        state_conv=st_conv, state_h=st_h))
                 except SwapError:
                     reason = "swap_put_failed"
             if reason is not None:
@@ -575,10 +601,21 @@ class DecodeEngine:
                         else jnp.asarray(entry.k_scale),
                         v_scale=None if entry.v_scale is None
                         else jnp.asarray(entry.v_scale))
+                    if slot_state is not None and (
+                            entry.state_conv is not None
+                            or entry.state_h is not None):
+                        row = ss.SlotState(
+                            conv=None if entry.state_conv is None
+                            else jnp.asarray(entry.state_conv),
+                            h=None if entry.state_h is None
+                            else jnp.asarray(entry.state_h))
+                        slot_state = ss.write_slot(slot_state, row,
+                                                   jnp.asarray(req.slot))
                     token_buf[req.slot] = entry.token
                     req.swapped = False
                 else:
-                    pages, lg = self._paged_prefill(pages, req, ps)
+                    pages, slot_state, lg = self._paged_prefill(
+                        pages, slot_state, req, ps)
                     first = sample_slot(req, lg)
                     req.out_tokens.append(first)
                     sched.note_token(req, first)   # TTFT stamp + stream
@@ -628,15 +665,18 @@ class DecodeEngine:
             active_max = max(active_max, active_now)
             replays = 0
             while True:
-                logits, pages, aux = step(self.params, pages,
-                                          jnp.asarray(token_buf),
-                                          jnp.asarray(sched.page_table),
-                                          jnp.asarray(sched.cur_len),
-                                          jnp.asarray(sched.active),
-                                          budget_blocks=(
-                                              jnp.asarray(budget_blocks)
-                                              if budget_blocks is not None
-                                              else None))
+                # slot_state is NOT donated and NOT adopted until the step
+                # is accepted: a faulted attempt is re-run from the SAME
+                # recurrent state (updates are not idempotent), which keeps
+                # the replay bitwise-equal to a never-faulted step
+                logits, pages, slot_state_out, aux = step(
+                    self.params, pages, slot_state,
+                    jnp.asarray(token_buf),
+                    jnp.asarray(sched.page_table),
+                    jnp.asarray(sched.cur_len),
+                    jnp.asarray(sched.active),
+                    budget_blocks=(jnp.asarray(budget_blocks)
+                                   if budget_blocks is not None else None))
                 if evmgr is None:
                     break
                 touched = np.asarray(aux["touched_pages"], bool)
@@ -685,6 +725,11 @@ class DecodeEngine:
                 dirty.update(sched.drain_released())
                 if not sched.active.any():
                     break
+            # the attempt that broke the loop is the accepted one (fault-
+            # free, or its surviving rows' outputs are valid); slots that
+            # failed/retired/preempted get their rows rewritten at the
+            # next admission or restore before anything reads them
+            slot_state = slot_state_out
             if not sched.active.any():
                 # every row failed or was preempted mid-replay; count the
                 # spin against the step limit so injected-fault storms
@@ -809,25 +854,32 @@ class DecodeEngine:
         }
         return out
 
-    def _paged_prefill(self, pages: pg.PagedPages, req: Request, ps: int):
+    def _paged_prefill(self, pages: pg.PagedPages, slot_state,
+                       req: Request, ps: int):
         """Contiguous prefill of one request, scattered into its pages.
 
         Prompt lengths are rounded UP to power-of-two page buckets (ISSUE
         5 satellite): tokens are right-padded to the bucket width and the
-        true length rides along as ``batch["lengths"]`` — causality keeps
-        real positions unaffected by pad tokens, ``lm_prefill`` gathers
-        the logits at the true last position, and ``scatter_prefill``
-        copies only the true prompt's pages (garbage keys in the trailing
-        page are masked by ``kv_len`` everywhere; its Kg/meta rows are
-        zeroed per the staleness contract). The jit cache is therefore
-        keyed on the BUCKET, not the prompt length: O(log max_len)
-        programs instead of one per distinct length (the page scatter is
-        bucket-keyed too — traced length + padded ids). Any pages beyond
-        the prompt (upfront ``reserve`` admission) get zeroed Kg/meta
-        rows and kv_len-masked filler K/V; under ``lazy`` admission
-        growth pages are zeroed at allocation time
-        (``pg.reset_kg_rows``). Returns (pages, fp32 logits row) — the
-        caller samples."""
+        true length rides along as ``batch["lengths"]`` — causality (and,
+        for recurrent families, exact pad-identity masking in the mamba
+        scans) keeps real positions unaffected by pad tokens,
+        ``lm_prefill`` gathers the logits at the true last position, and
+        ``scatter_prefill`` copies only the true prompt's pages (garbage
+        keys in the trailing page are masked by ``kv_len`` everywhere; its
+        Kg/meta rows are zeroed per the staleness contract). The jit cache
+        is therefore keyed on the BUCKET, not the prompt length: O(log
+        max_len) programs instead of one per distinct length (the page
+        scatter is bucket-keyed too — traced length + padded ids). Any
+        pages beyond the prompt (upfront ``reserve`` admission) get zeroed
+        Kg/meta rows and kv_len-masked filler K/V; under ``lazy``
+        admission growth pages are zeroed at allocation time
+        (``pg.reset_kg_rows``).
+
+        Family dispatch happens through ``api.state_view`` (PR 10): the
+        view names which prefill-state fields scatter into the page pools
+        (skipped entirely for a pages-free family) and which rows seed the
+        request's slot in ``slot_state``. Returns (pages, slot_state, fp32
+        logits row) — the caller samples."""
         plen = req.prompt_len
         n_prompt = -(-plen // ps)
         bucket = 1 << (n_prompt - 1).bit_length()       # pages, power of 2
@@ -841,13 +893,18 @@ class DecodeEngine:
         logits, cstate = fn(self.params,
                             {"tokens": jnp.asarray(toks),
                              "lengths": jnp.asarray([plen], jnp.int32)})
-        # traced length + power-of-two-padded ids: the scatter compiles
-        # once per (cache bucket, id bucket), not once per prompt length
-        pages = pg.scatter_prefill(
-            pages, cstate.k_cache, cstate.v_cache, cstate.kg_cache,
-            jnp.asarray(plen, jnp.int32), pg.pad_page_ids(req.pages), ps,
-            kmin_cache=cstate.meta_kmin, kmax_cache=cstate.meta_kmax)
-        return pages, np.asarray(logits[0], np.float32)
+        view = self.api.state_view(cstate)
+        if view.k_cache is not None:
+            # traced length + power-of-two-padded ids: the scatter compiles
+            # once per (cache bucket, id bucket), not once per prompt length
+            pages = pg.scatter_prefill(
+                pages, view.k_cache, view.v_cache, view.kg_cache,
+                jnp.asarray(plen, jnp.int32), pg.pad_page_ids(req.pages),
+                ps, kmin_cache=view.meta_kmin, kmax_cache=view.meta_kmax)
+        if slot_state is not None and view.slot is not None:
+            slot_state = ss.write_slot(slot_state, view.slot,
+                                       jnp.asarray(req.slot))
+        return pages, slot_state, np.asarray(logits[0], np.float32)
 
     def sparsity_stats(self, state=None) -> Dict[str, Any]:
         """Measured selection economics of the LATEST decode step.

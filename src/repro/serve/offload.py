@@ -102,7 +102,11 @@ class SwapEntry(NamedTuple):
     one would. ``k_scale``/``v_scale`` (int8 pools, ISSUE 9) carry the
     dequant scale rows next to the RAW int8 page bytes — the swap round
     trip is bitwise on the stored representation and the entry is ~4x
-    smaller, which the byte-based tier accounting picks up for free."""
+    smaller, which the byte-based tier accounting picks up for free.
+    ``state_conv``/``state_h`` (recurrent families, PR 10) carry the
+    request's per-layer recurrent-state rows WITHOUT the slot axis
+    (``serve.slotstate.read_slot``) — restored bitwise into whatever slot
+    the request lands in on resume."""
     k: np.ndarray                 # [L, n_pages, Hkv, ps, Dh] (int8 if quant)
     v: np.ndarray                 # [L, n_pages, Hkv, ps, Dh] (int8 if quant)
     kg: Optional[np.ndarray]      # [L, n_pages, Hkv, Dg] | None
@@ -112,6 +116,8 @@ class SwapEntry(NamedTuple):
     kmax: Optional[np.ndarray] = None   # [L, n_pages, Hkv, Dh] | None
     k_scale: Optional[np.ndarray] = None  # [L, n_pages, Hkv, 1] | None
     v_scale: Optional[np.ndarray] = None  # [L, n_pages, Hkv, 1] | None
+    state_conv: Optional[np.ndarray] = None  # [L_rec, K-1, d_conv] | None
+    state_h: Optional[np.ndarray] = None     # [L_rec, ...] f32 | None
 
 
 class PageEntry(NamedTuple):

@@ -1,0 +1,80 @@
+"""Per-slot recurrent state for paged serving (PR 10).
+
+KV pages cover everything ATTENTION needs to resume a request, but
+recurrent families (Mamba1 ssm, Zamba2-style hybrid) carry O(1) state per
+layer — the depthwise-conv window and the SSM hidden state — that lives
+outside the page pools. ``SlotState`` is that state batched over DECODE
+SLOTS (axis 1, mirroring the ``[L, B, ...]`` contiguous layout), so the
+engine can treat it exactly like the page pools' lifecycle twin: written
+at admission (from the prefill state), captured at preemption into the
+``SwapEntry`` state blob, restored bitwise at resume, and carried
+through — never donated into — the jitted decode step (eviction replay
+re-runs a step with the SAME input state; recurrent updates are not
+idempotent, so the pre-step buffer must survive the first attempt).
+
+``CacheView`` is the family-agnostic projection of a prefill state the
+engine admits through: which fields scatter into page pools (None for a
+pages-free family) and which row seeds the request's slot (None for the
+pages-only transformer).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class SlotState(NamedTuple):
+    """Recurrent per-slot state, slot axis at position 1.
+
+    conv: [L_rec, n_slots, K-1, d_conv]  depthwise-conv windows
+    h:    [L_rec, n_slots, ...]          SSM hidden state (f32)
+
+    Either field may be None (pytree-pruned) for families without that
+    piece; the pages-only transformer passes ``None`` instead of a
+    SlotState at all.
+    """
+    conv: Optional[jnp.ndarray]
+    h: Optional[jnp.ndarray]
+
+
+class CacheView(NamedTuple):
+    """What a family's prefill state offers the paged admission path.
+
+    ``k_cache``/``v_cache``/``kg_cache``/``meta_kmin``/``meta_kmax``:
+    head-major ``[L, 1, ...]`` caches for ``paging.scatter_prefill``
+    (all None for a pages-free family — the scatter is skipped).
+    ``slot``: a ``SlotState`` whose arrays are the single request's rows
+    WITHOUT the slot axis (``[L_rec, ...]``) — written into the
+    engine-wide buffer at the request's slot; None for pages-only
+    families.
+    """
+    k_cache: Optional[jnp.ndarray]
+    v_cache: Optional[jnp.ndarray]
+    kg_cache: Optional[jnp.ndarray]
+    meta_kmin: Optional[jnp.ndarray]
+    meta_kmax: Optional[jnp.ndarray]
+    slot: Optional[SlotState]
+
+
+@jax.jit
+def write_slot(state: SlotState, row: SlotState,
+               slot: jnp.ndarray) -> SlotState:
+    """Insert one request's rows at ``slot`` (admission / swap-restore).
+
+    ``slot`` is traced, so the jit cache holds ONE program per state
+    shape, not one per slot index. The buffers are deliberately NOT
+    donated: the caller may still hold the pre-write state (the engine's
+    replay loop), and an admission-time write is off the per-step hot
+    path."""
+    return jax.tree.map(
+        lambda buf, r: buf.at[:, slot].set(r.astype(buf.dtype)),
+        state, row)
+
+
+@jax.jit
+def read_slot(state: SlotState, slot: jnp.ndarray) -> SlotState:
+    """One request's rows at ``slot`` (preemption swap-out capture):
+    arrays shaped ``[L_rec, ...]`` with the slot axis gathered away."""
+    return jax.tree.map(lambda buf: buf[:, slot], state)

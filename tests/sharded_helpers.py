@@ -358,6 +358,73 @@ def paged_sharded_eviction_parity():
     print("paged_sharded_eviction_parity OK")
 
 
+def paged_sharded_hybrid_parity():
+    """Hybrid family through the paged x sharded engine (ISSUE 10): the
+    per-unit page pools ([n_units, P, Hkv, ps, Dh]) head-shard over
+    'model' exactly like transformer pools and the per-slot recurrent
+    state stays replicated (the engine never device_puts it; zero new
+    per-step collectives). The sharded engine matches the unsharded one
+    to rounding (tokens exact, logits <= 1e-4: GSPMD partitions the
+    REPLICATED mamba matmuls differently under a mesh, so — unlike the
+    pure-attention transformer, whose sharded math runs in an explicit
+    shard_map — hybrid cross-engine logits are not bit-identical), and a
+    tight-pool run with preemption is BITWISE equal to the same engine's
+    ample run (the SwapEntry recurrent-state blob round-trips exactly)."""
+    import jax
+    import numpy as np
+    import repro.configs as configs
+    from repro.config import reduced
+    from repro.core.policy import DecodeOptions
+    from repro.distributed import sharding as shd
+    from repro.models.registry import get_api
+    from repro.serve.engine import DecodeEngine
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))   # Hkv=2 over model=2
+    # num_layers=3 with period 2 -> 1 unit + 1 trailing mamba layer
+    cfg = reduced(configs.get("zamba2_1_2b"),
+                  num_layers=3).replace(dtype="float32")
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    specs = [(16, 8), (8, 10), (32, 6), (16, 7)]
+    reqs = [{"rid": i, "max_new_tokens": mn,
+             "tokens": rng.integers(0, cfg.vocab_size,
+                                    size=(pl,)).astype(np.int32)}
+            for i, (pl, mn) in enumerate(specs)]
+
+    eng_ref = DecodeEngine(cfg, params, max_len=64)
+    res_ref = eng_ref.serve([dict(r) for r in reqs], n_slots=2,
+                            collect_logits=True)
+
+    shard = shd.make_shard_fn(mesh)
+    with mesh:
+        eng_sh = DecodeEngine(
+            cfg, params, max_len=64, shard=shard,
+            options=DecodeOptions(kernel_impl="sharded"))
+        res_sh = eng_sh.serve([dict(r) for r in reqs], n_slots=2,
+                              collect_logits=True)
+        # tight pool: growth + preemption must survive the sharded path
+        # (recurrent rows captured/restored alongside the head-sharded
+        # pages); same n_slots as the ample run so the comparison is
+        # shape-identical and therefore bitwise
+        res_amp = eng_sh.serve([dict(r) for r in reqs], n_slots=4,
+                               collect_logits=True)
+        res_pre = eng_sh.serve([dict(r) for r in reqs], n_slots=4,
+                               num_pages=10, collect_logits=True)
+    assert res_pre["stats"]["preemptions"] > 0, res_pre["stats"]
+    assert res_amp["stats"]["preemptions"] == 0
+    for r in reqs:
+        rid = r["rid"]
+        assert res_sh[rid] == res_ref[rid], f"rid {rid} token mismatch"
+        d = float(np.max(np.abs(res_sh["logits"][rid]
+                                - res_ref["logits"][rid])))
+        assert d <= 1e-4, f"rid {rid} sharded dlogit {d}"
+        assert res_pre[rid] == res_amp[rid], f"rid {rid} preempt mismatch"
+        np.testing.assert_array_equal(res_pre["logits"][rid],
+                                      res_amp["logits"][rid])
+    print("paged_sharded_hybrid_parity OK")
+
+
 def moe_sharded_parity():
     import dataclasses
     import jax, jax.numpy as jnp

@@ -56,6 +56,15 @@ def test_paged_sharded_eviction_parity():
     _run("paged_sharded_eviction_parity")
 
 
+def test_paged_sharded_hybrid_parity():
+    """ISSUE 10 acceptance: the hybrid family through the paged x sharded
+    engine — per-unit pools head-sharded, recurrent slot state replicated
+    — matches the unsharded hybrid engine (tokens exact, logits to
+    rounding) and preempt/swap/resume stays bitwise vs the same engine's
+    ample run."""
+    _run("paged_sharded_hybrid_parity")
+
+
 def test_moe_sharded_parity():
     _run("moe_sharded_parity")
 

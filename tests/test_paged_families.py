@@ -1,0 +1,253 @@
+"""Family-agnostic paged serving (ISSUE 10): ssm and hybrid families
+through the full DecodeEngine.
+
+Parity contract per family:
+
+- tokens are EXACT vs a per-request contiguous rollout, logits within
+  1e-4 (the recurrent scans are mathematically identical, but XLA fuses
+  the mamba einsums differently at batch=1 vs batch=n_slots, so —
+  unlike the pure-attention transformer — cross-batch-shape logits are
+  not bit-identical);
+- preempt -> swap -> re-admit -> restore is BITWISE vs the same
+  engine's ample-pool run (the SwapEntry recurrent-state blob
+  round-trips exactly, and both runs share compiled programs);
+- page evict -> restore -> replay (hybrid shared-attention pages) is
+  likewise BITWISE (replayed steps recompute from the same slot state:
+  the engine adopts recurrent updates only after the replay loop
+  settles).
+
+Prefill-bucketing parity (satellite b): ``batch["lengths"]`` with
+right-padded prompts must match per-row unpadded prefill — dt masking
+makes the padded scan an exact identity, so only compilation-shape
+noise remains.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as configs
+from repro.config import reduced
+from repro.models.registry import get_api
+from repro.serve import engine as engine_mod
+from repro.serve.engine import DecodeEngine
+from repro.serve.eviction import EvictionConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _ssm_cfg():
+    cfg = reduced(configs.get("falcon_mamba_7b")).replace(dtype="float32")
+    # falcon_mamba ships with the gate disabled, so reduced() leaves its
+    # block_size at 64; the scheduler still pages at gate.block_size, so
+    # shrink it to match the tiny test lengths
+    return cfg.replace(gate=dataclasses.replace(cfg.gate, block_size=8))
+
+
+def _hybrid_cfg():
+    # num_layers=3 with hybrid period 2 -> 1 shared-attention unit + 1
+    # trailing mamba layer: both layer kinds in one tiny model
+    return reduced(configs.get("zamba2_1_2b"),
+                   num_layers=3).replace(dtype="float32")
+
+
+def _mk_requests(cfg, specs, seed=0):
+    rng = np.random.default_rng(seed)
+    return [{"rid": i, "max_new_tokens": mn,
+             "tokens": rng.integers(0, cfg.vocab_size,
+                                    size=(pl,)).astype(np.int32)}
+            for i, (pl, mn) in enumerate(specs)]
+
+
+def _reference_rollout(eng, req):
+    """Per-request contiguous greedy decode; returns (tokens, logits)."""
+    params, cfg = eng.params, eng.cfg
+    logits, st = eng.api.prefill(
+        params, {"tokens": jnp.asarray(req["tokens"])[None]}, cfg,
+        eng.max_len)
+    lgs = [np.asarray(logits[0], np.float32)]
+    t = jnp.argmax(logits, -1).astype(jnp.int32)
+    toks = [int(t[0])]
+    for _ in range(req["max_new_tokens"] - 1):
+        t, lg, st, _ = eng._step(params, st, t)
+        lgs.append(np.asarray(lg[0], np.float32))
+        toks.append(int(t[0]))
+    return toks, np.stack(lgs)
+
+
+def _assert_family_parity(cfg, specs, *, n_slots, seed=0, tol=1e-4):
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _mk_requests(cfg, specs, seed)
+    eng = DecodeEngine(cfg, params, max_len=64)
+    res = eng.serve([dict(r) for r in reqs], n_slots=n_slots,
+                    collect_logits=True)
+    assert res["stats"]["retired"] == len(reqs)
+    for r in reqs:
+        toks, lgs = _reference_rollout(eng, r)
+        assert res[r["rid"]] == toks, f"rid {r['rid']} token mismatch"
+        d = float(np.max(np.abs(res["logits"][r["rid"]] - lgs)))
+        assert d <= tol, f"rid {r['rid']}: logit diff {d}"
+    return eng, reqs, res
+
+
+# ---------------------------------------------------------------------------
+# serve parity vs contiguous decode
+# ---------------------------------------------------------------------------
+
+def test_ssm_serve_paged_parity():
+    """Pages-free family end-to-end: zero-size pools flow through the
+    engine, the recurrent slot buffer carries ALL decode state, and the
+    serve loop (mid-stream admission included) matches contiguous."""
+    _, _, res = _assert_family_parity(
+        _ssm_cfg(), [(16, 8), (8, 6), (32, 5)], n_slots=2)
+    assert res["stats"]["admitted"] == 3     # one admission is mid-stream
+
+
+def test_hybrid_serve_paged_parity():
+    """Hybrid family end-to-end: per-unit page tables over the shared
+    pools for the attention units, slot buffer for the mamba layers."""
+    _assert_family_parity(
+        _hybrid_cfg(), [(16, 8), (8, 10), (32, 6)], n_slots=2)
+
+
+def test_ssm_serve_ragged_prompts_parity():
+    """Block-unaligned prompts go through the bucketed masked prefill
+    (plen 21 -> width-32 bucket + lengths); parity holds at the repo's
+    standard 1e-3 contract."""
+    _assert_family_parity(
+        _ssm_cfg(), [(21, 6), (13, 5), (5, 7)], n_slots=2, tol=1e-3)
+
+
+def test_hybrid_serve_ragged_prompts_parity():
+    _assert_family_parity(
+        _hybrid_cfg(), [(21, 6), (13, 5), (27, 4)], n_slots=2, tol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# preempt -> swap -> resume / evict -> restore: bitwise round-trips
+# ---------------------------------------------------------------------------
+
+def _assert_bitwise(res, ref, reqs):
+    for r in reqs:
+        rid = r["rid"]
+        assert res[rid] == ref[rid], f"rid {rid} token mismatch"
+        np.testing.assert_array_equal(res["logits"][rid],
+                                      ref["logits"][rid])
+
+
+def test_hybrid_preemption_roundtrip_bitwise():
+    """The tentpole acceptance case for the slot-state seam: a preempted
+    hybrid request swaps out BOTH its attention pages and its recurrent
+    rows (SwapEntry state blob) and resumes bitwise-identically."""
+    cfg = _hybrid_cfg()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _mk_requests(cfg, [(16, 10), (16, 9), (16, 8)])
+    eng = DecodeEngine(cfg, params, max_len=64)
+    ample = eng.serve([dict(r) for r in reqs], n_slots=3,
+                      collect_logits=True)
+    assert ample["stats"]["preemptions"] == 0
+    tight = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=8,
+                      collect_logits=True)
+    st = tight["stats"]
+    assert st["preemptions"] > 0
+    assert st["resumed"] == st["preemptions"]
+    assert st["retired"] == len(reqs)
+    _assert_bitwise(tight, ample, reqs)
+
+
+def test_ssm_preemption_roundtrip_bitwise():
+    """With zero page layers the swap entry is PURE recurrent state; the
+    scheduler's page bookkeeping still drives preemption and the restore
+    must be bitwise."""
+    cfg = _ssm_cfg()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _mk_requests(cfg, [(16, 10), (16, 9), (16, 8)])
+    eng = DecodeEngine(cfg, params, max_len=64)
+    ample = eng.serve([dict(r) for r in reqs], n_slots=3,
+                      collect_logits=True)
+    assert ample["stats"]["preemptions"] == 0
+    tight = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=8,
+                      collect_logits=True)
+    assert tight["stats"]["preemptions"] > 0
+    assert tight["stats"]["retired"] == len(reqs)
+    _assert_bitwise(tight, ample, reqs)
+
+
+def test_hybrid_eviction_restore_bitwise():
+    """Page eviction on the hybrid's shared-attention pools: an evicted
+    page faults the optimistic step, restores, and the REPLAYED step
+    recomputes from unadopted recurrent state — still bitwise (the
+    engine only adopts slot-state updates after the replay loop
+    settles, so the non-idempotent mamba update never double-applies)."""
+    cfg = _hybrid_cfg()
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    reqs = _mk_requests(cfg, [(24, 12), (16, 10), (24, 9)])
+    eng = DecodeEngine(cfg, params, max_len=64)
+    ample = eng.serve([dict(r) for r in reqs], n_slots=3,
+                      collect_logits=True)
+    res = eng.serve([dict(r) for r in reqs], n_slots=3, num_pages=9,
+                    collect_logits=True, eviction=EvictionConfig())
+    st = res["stats"]
+    assert st["retired"] == len(reqs) and st["failed"] == 0
+    assert st["evictions"] > 0
+    _assert_bitwise(res, ample, reqs)
+
+
+# ---------------------------------------------------------------------------
+# bucketed prefill with lengths == per-row unpadded prefill (satellite b)
+# ---------------------------------------------------------------------------
+
+def _prefill_lengths_parity(cfg, lens, tol=1e-4):
+    api = get_api(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(5)
+    lmax = max(lens)
+    toks = rng.integers(0, cfg.vocab_size,
+                        size=(len(lens), lmax)).astype(np.int32)
+    for i, l in enumerate(lens):
+        toks[i, l:] = 0
+    lg_b, _ = api.prefill(
+        params, {"tokens": jnp.asarray(toks),
+                 "lengths": jnp.asarray(np.asarray(lens, np.int32))},
+        cfg, 64)
+    for i, l in enumerate(lens):
+        lg1, _ = api.prefill(
+            params, {"tokens": jnp.asarray(toks[i, :l])[None]}, cfg, 64)
+        d = float(np.max(np.abs(np.asarray(lg_b[i], np.float32)
+                                - np.asarray(lg1[0], np.float32))))
+        assert d <= tol, f"row {i} (len {l}): logit diff {d}"
+
+
+def test_ssm_prefill_lengths_bucketing():
+    """dt masking zeroes the padded tail out of the selective scan, so a
+    right-padded row reproduces its unpadded prefill."""
+    _prefill_lengths_parity(_ssm_cfg(), (11, 16, 5))
+
+
+def test_hybrid_prefill_lengths_bucketing():
+    """Masked mamba scans + length-clamped attention causal mask + kg
+    row zeroing: padded rows match unpadded prefill across both layer
+    kinds."""
+    _prefill_lengths_parity(_hybrid_cfg(), (21, 32, 13))
+
+
+# ---------------------------------------------------------------------------
+# engine refuses families without a paged path (satellite a)
+# ---------------------------------------------------------------------------
+
+def test_engine_rejects_family_without_paged_path(monkeypatch):
+    """Regression: a ModelApi with decode_step_paged=None must fail AT
+    CONSTRUCTION with an actionable error, not deep inside serve()."""
+    cfg = _ssm_cfg()
+    api = get_api(cfg)
+    monkeypatch.setattr(engine_mod, "get_api",
+                        lambda c: api._replace(decode_step_paged=None))
+    with pytest.raises(ValueError, match="family 'ssm'.*no paged decode "
+                                         "path"):
+        DecodeEngine(cfg, params=None, max_len=64)
